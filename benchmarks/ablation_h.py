@@ -1,0 +1,42 @@
+"""Beyond-paper ablation: sensitivity to H (Eq. 5 — synthetic samples per
+incoming component). The paper fixes H=100 without a sensitivity study;
+this sweep shows the fitness/cost trade-off (server-side EM cost is linear
+in |S| = H * sum K_c)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_auc, load_quick
+from repro.core import fedgengmm, fit_gmm, partition
+
+
+def run(quick: bool = True, seeds=(0,)) -> list[str]:
+    rows = []
+    hs = [5, 25, 100] if quick else [5, 10, 25, 50, 100, 200]
+    ds = load_quick("vehicle", quick=quick)
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        split = partition(rng, ds.x_train, ds.y_train, ds.n_clients,
+                          ds.scheme, 1)
+        xj = jnp.asarray(ds.x_train)
+        bench = fit_gmm(jax.random.key(99), xj, ds.k_global)
+        rows.append(f"ablation_h/vehicle/central,0,"
+                    f"{float(bench.gmm.score(xj)):.4f}")
+        for h in hs:
+            t0 = time.time()
+            fr = fedgengmm(jax.random.key(seed), split,
+                           k_clients=ds.k_global, k_global=ds.k_global,
+                           h=h)
+            ll = float(fr.global_gmm.score(xj))
+            rows.append(f"ablation_h/vehicle/H={h},"
+                        f"{(time.time() - t0) * 1e6:.0f},{ll:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,124 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Runs every method of §5.4 on one (dataset, heterogeneity) setting and
+returns fitness scores (Eq. 2), anomaly AUC-PR (§5.8), and communication
+accounting (Table 4). CPU-scale note: dataset sizes and repeat counts are
+reduced vs the paper (band-2 simulation); the *relative* comparisons are
+what is validated.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dem, fedgengmm, fit_gmm, partition, train_locals
+from repro.core.metrics import auc_pr, anomaly_scores
+from repro.data import load
+
+QUICK_SIZES = {  # n_train per dataset in quick (CI) mode
+    "mnist": 4000, "covertype": 6000, "rwhar": 5000,
+    "wadi": 5000, "vehicle": 6000, "smd": 6000,
+}
+
+
+def load_quick(name: str, seed: int = 0, quick: bool = True):
+    kw = {"n_train": QUICK_SIZES[name]} if quick else {}
+    return load(name, np.random.default_rng(seed), **kw)
+
+
+def eval_auc(gmm, ds) -> float:
+    s_in = anomaly_scores(gmm, jnp.asarray(ds.x_test_in))
+    s_out = anomaly_scores(gmm, jnp.asarray(ds.x_test_ood))
+    scores = np.concatenate([s_in, s_out])
+    labels = np.concatenate([np.zeros(len(s_in)), np.ones(len(s_out))])
+    return auc_pr(scores, labels)
+
+
+def eval_auc_local_mean(local_gmms, ds) -> float:
+    """Local-models baseline: average the per-client scores (§5.4)."""
+    s_in = np.mean([anomaly_scores(g, jnp.asarray(ds.x_test_in))
+                    for g in local_gmms], axis=0)
+    s_out = np.mean([anomaly_scores(g, jnp.asarray(ds.x_test_ood))
+                     for g in local_gmms], axis=0)
+    scores = np.concatenate([s_in, s_out])
+    labels = np.concatenate([np.zeros(len(s_in)), np.ones(len(s_out))])
+    return auc_pr(scores, labels)
+
+
+def run_methods(ds, alpha: float, seed: int, *,
+                k: Optional[int] = None,
+                k_clients: Optional[int] = None,
+                n_clients: Optional[int] = None,
+                h: int = 50,
+                methods=("fedgen", "dem1", "dem2", "dem3", "local",
+                         "central")) -> dict:
+    """Returns {method: {loglik, auc_pr, rounds, seconds}}."""
+    k = k or ds.k_global
+    k_clients = k_clients or k
+    n_clients = n_clients or ds.n_clients
+    rng = np.random.default_rng(seed)
+    split = partition(rng, ds.x_train, ds.y_train, n_clients, ds.scheme,
+                      alpha)
+    xj = jnp.asarray(ds.x_train)
+    key = jax.random.key(seed)
+    out = {}
+
+    local_gmms = None
+    if "fedgen" in methods or "local" in methods:
+        t0 = time.time()
+        fr = fedgengmm(jax.random.fold_in(key, 0), split,
+                       k_clients=k_clients, k_global=k, h=h)
+        if "fedgen" in methods:
+            out["fedgen"] = {
+                "loglik": float(fr.global_gmm.score(xj)),
+                "auc_pr": eval_auc(fr.global_gmm, ds),
+                "rounds": fr.comm.rounds,
+                "uplink_floats": fr.comm.uplink_floats,
+                "seconds": time.time() - t0,
+            }
+        local_gmms = fr.local_gmms
+    if "local" in methods and local_gmms is not None:
+        t0 = time.time()
+        scores = [float(g.score(xj)) for g in local_gmms]
+        out["local"] = {
+            "loglik": float(np.mean(scores)),
+            "auc_pr": eval_auc_local_mean(local_gmms, ds),
+            "rounds": 0, "uplink_floats": 0,
+            "seconds": time.time() - t0,
+        }
+    for init in (1, 2, 3):
+        nm = f"dem{init}"
+        if nm not in methods:
+            continue
+        t0 = time.time()
+        dr = dem(jax.random.fold_in(key, 10 + init), split, k, init=init)
+        out[nm] = {
+            "loglik": float(dr.global_gmm.score(xj)),
+            "auc_pr": eval_auc(dr.global_gmm, ds),
+            "rounds": int(dr.n_rounds),
+            "uplink_floats": dr.comm.uplink_floats,
+            "seconds": time.time() - t0,
+        }
+    if "central" in methods:
+        t0 = time.time()
+        res = fit_gmm(jax.random.fold_in(key, 99), xj, k)
+        out["central"] = {
+            "loglik": float(res.gmm.score(xj)),
+            "auc_pr": eval_auc(res.gmm, ds),
+            "rounds": 0, "uplink_floats": ds.x_train.size,
+            "seconds": time.time() - t0,
+        }
+    return out
+
+
+def csv_rows(experiment: str, dataset: str, alpha, results: dict,
+             metric: str) -> list[str]:
+    rows = []
+    for method, r in results.items():
+        name = f"{experiment}/{dataset}/alpha={alpha}/{method}"
+        rows.append(f"{name},{r['seconds'] * 1e6:.0f},{r[metric]:.4f}")
+    return rows

@@ -1,0 +1,30 @@
+"""Figure 4: anomaly-detection AUC-PR vs number of clients at fixed
+heterogeneity (paper: 20..320 clients; CPU-scale: 10..80)."""
+from __future__ import annotations
+
+from benchmarks.common import load_quick, run_methods
+
+DATASETS_Q = ["smd"]
+DATASETS_FULL = ["covertype", "rwhar", "wadi", "smd"]
+
+
+def run(quick: bool = True, seeds=(0,)) -> list[str]:
+    rows = []
+    clients = [10, 20, 40] if quick else [10, 20, 40, 80]
+    for name in (DATASETS_Q if quick else DATASETS_FULL):
+        ds = load_quick(name, quick=quick)
+        alpha = 0.2 if ds.scheme == "dirichlet" else 1
+        for n in clients:
+            for seed in seeds:
+                res = run_methods(ds, alpha, seed, n_clients=n,
+                                  methods=("fedgen", "dem3", "central"))
+                for m, r in res.items():
+                    rows.append(
+                        f"fig4_clients/{name}/n={n}/{m},"
+                        f"{r['seconds'] * 1e6:.0f},{r['auc_pr']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

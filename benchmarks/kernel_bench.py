@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: XLA reference path timings on CPU (the Pallas
+kernels themselves are TPU-targeted; interpret mode is correctness-only and
+its timing is meaningless, so we report the oracle path + a one-shot
+interpret-mode parity check)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+SHAPES = [(20000, 24, 30), (20000, 84, 10), (50000, 38, 10)]
+
+
+def _time(fn, iters=5):
+    jax.block_until_ready(fn())  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    for n, d, k in (SHAPES[:2] if quick else SHAPES):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        mu = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        var = jnp.asarray(rng.uniform(0.1, 2, (k, d)), jnp.float32)
+        lw = jnp.asarray(np.log(rng.dirichlet(np.ones(k))), jnp.float32)
+
+        logpdf = jax.jit(ref.gmm_logpdf_ref)
+        us = _time(lambda: logpdf(x, mu, var, lw))
+        rows.append(f"kernel/gmm_logpdf_ref/N{n}d{d}K{k},{us:.0f},"
+                    f"{2 * n * d * k * 2 / (us * 1e-6) / 1e9:.2f}")
+
+        estep = jax.jit(ref.estep_stats_ref)
+        us = _time(lambda: estep(x, mu, var, lw))
+        rows.append(f"kernel/estep_stats_ref/N{n}d{d}K{k},{us:.0f},"
+                    f"{4 * n * d * k * 2 / (us * 1e-6) / 1e9:.2f}")
+
+        # interpret-mode parity (correctness, not speed)
+        sub = x[:2048]
+        a = ops.estep_stats(sub, mu, var, lw, interpret=True)
+        b = ref.estep_stats_ref(sub, mu, var, lw)
+        err = max(float(jnp.max(jnp.abs(u - v))) for u, v in zip(a, b))
+        rows.append(f"kernel/estep_pallas_parity/N2048d{d}K{k},0,{err:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,264 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds/step/device:
+
+    compute    = FLOPs_per_device / peak_FLOPs
+    memory     = HBM_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+FLOPs source: XLA's cost_analysis counts while-loop bodies ONCE (verified
+experimentally), which silently drops the layer scan — so the compute and
+memory terms use an ANALYTIC per-architecture model (standard matmul
+accounting, validated against the unscanned-layer HLO numbers), and the raw
+HLO numbers are reported alongside. Collective bytes come from the HLO walk
+in launch/dryrun.py (while-loop trip counts multiplied back in).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models.transformer import ModelConfig
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+# ----------------------------------------------------------------------
+# Analytic FLOPs model
+# ----------------------------------------------------------------------
+
+def _attn_layer_flops(cfg: ModelConfig, ctx: float, window=None) -> float:
+    """Per-token forward FLOPs for one attention layer (excl. FFN)."""
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    proj = 2 * d * hd * (2 * h + 2 * kv)          # q,o (h) + k,v (kv)
+    eff_ctx = min(ctx, window) if window else ctx
+    scores = 2 * 2 * h * hd * eff_ctx             # qk^T + pv
+    return proj + scores
+
+
+def _ffn_flops(cfg: ModelConfig, dense_width=None) -> float:
+    d = cfg.d_model
+    if dense_width is not None:
+        mult = 3 if cfg.gated_mlp else 2
+        return 2 * d * dense_width * mult
+    if cfg.moe is not None:
+        m = cfg.moe
+        mult = 3  # gated experts
+        expert = m.top_k * 2 * d * m.d_ff * mult
+        router = 2 * d * m.n_experts
+        cap = m.group_size * m.top_k * m.capacity_factor / m.n_experts
+        dispatch = 2 * 2 * m.n_experts * cap * d  # dispatch + combine
+        shared = 2 * d * (m.n_shared * m.d_ff) * 3 if m.n_shared else 0
+        return expert + router + dispatch + shared
+    mult = 3 if cfg.gated_mlp else 2
+    return 2 * d * cfg.d_ff * mult
+
+
+def _rglru_flops(cfg: ModelConfig) -> float:
+    d, dr = cfg.d_model, cfg.d_rnn
+    return 2 * d * dr * 3 + 2 * dr * dr * 2 + 10 * dr
+
+
+def _mlstm_flops(cfg: ModelConfig, ctx: float) -> float:
+    d = cfg.d_model
+    di = cfg.xlstm.n_heads * cfg.xlstm.head_dim
+    return 2 * d * 2 * di + 3 * 2 * di * di + 2 * 2 * di * ctx + 2 * di * d
+
+
+def _slstm_flops(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    up = max(256, (4 * d // 3 + 255) // 256 * 256)
+    return 2 * d * 4 * d + 2 * d * 4 * (d // cfg.xlstm.n_heads) \
+        + 2 * d * 2 * up + 2 * up * d
+
+
+def forward_flops_per_token(cfg: ModelConfig, ctx: float,
+                            decode: bool = False) -> float:
+    """Forward FLOPs for one generated/processed token at context ``ctx``."""
+    total = 0.0
+    for i, lt in enumerate(cfg.layer_types()):
+        if lt in ("attn", "dense_attn"):
+            dense_w = None
+            if i < cfg.first_k_dense:
+                dense_w = cfg.first_dense_d_ff or cfg.d_ff
+            total += _attn_layer_flops(cfg, ctx)
+            total += _ffn_flops(cfg, dense_w)
+            if cfg.n_enc_layers:  # cross attention
+                d, hd, h, kvv = cfg.d_model, cfg.hd, cfg.n_heads, \
+                    cfg.n_kv_heads
+                total += 2 * d * hd * 2 * h + 2 * 2 * h * hd * \
+                    (ctx / cfg.src_ratio)
+        elif lt == "swa":
+            total += _attn_layer_flops(cfg, ctx, cfg.window)
+            total += _ffn_flops(cfg)
+        elif lt == "local_attn":
+            total += _attn_layer_flops(cfg, ctx, cfg.local_window)
+            total += _ffn_flops(cfg)
+        elif lt == "rglru":
+            total += _rglru_flops(cfg) + _ffn_flops(cfg)
+        elif lt == "mlstm":
+            total += _mlstm_flops(cfg, 0 if decode else ctx)
+        elif lt == "slstm":
+            total += _slstm_flops(cfg)
+    total += 2 * cfg.d_model * cfg.vocab_size       # vocab head
+    return total
+
+
+def encoder_flops(cfg: ModelConfig, src_len: int) -> float:
+    per_tok = cfg.n_enc_layers * (_attn_layer_flops(cfg, src_len)
+                                  + _ffn_flops(cfg))
+    return per_tok * src_len
+
+
+def step_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global (all-device) FLOPs for one step of this input shape."""
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if kind == "train":
+        # causal: avg context S/2; train = fwd + remat fwd + 2x bwd = 4x
+        fwd = forward_flops_per_token(cfg, s / 2) * b * s
+        if cfg.n_enc_layers:
+            fwd += encoder_flops(cfg, s // cfg.src_ratio) * b
+        if cfg.frontend == "vision":
+            fwd += forward_flops_per_token(cfg, s / 2) * b * cfg.n_prefix
+        return fwd * (4 if cfg.remat else 3)
+    if kind == "prefill":
+        fwd = forward_flops_per_token(cfg, s / 2) * b * s
+        if cfg.n_enc_layers:
+            fwd += encoder_flops(cfg, s // cfg.src_ratio) * b
+        return fwd
+    # decode: ONE token against ctx = s
+    ctx = min(s, cfg.long_window) if kind == "decode_ring" else s
+    return forward_flops_per_token(cfg, ctx, decode=True) * b
+
+
+def n_params(cfg: ModelConfig, active_only: bool = False) -> float:
+    """Analytic parameter count (active = MoE top-k + shared only)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    total = 2 * v * d  # embed + head
+    for i, lt in enumerate(cfg.layer_types()):
+        if lt in ("attn", "dense_attn", "swa", "local_attn"):
+            hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+            total += d * hd * (2 * h + 2 * kv)
+            if cfg.n_enc_layers:
+                total += d * hd * (2 * h + 2 * kv)  # cross attn
+            if cfg.moe is not None and i >= cfg.first_k_dense:
+                m = cfg.moe
+                e = m.top_k if active_only else m.n_experts
+                total += e * 3 * d * m.d_ff + d * m.n_experts
+                total += (3 * d * m.n_shared * m.d_ff) if m.n_shared else 0
+            else:
+                w = cfg.first_dense_d_ff if i < cfg.first_k_dense and \
+                    cfg.first_dense_d_ff else cfg.d_ff
+                total += (3 if cfg.gated_mlp else 2) * d * w
+        elif lt == "rglru":
+            total += 3 * d * cfg.d_rnn + 2 * cfg.d_rnn ** 2 \
+                + (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+        elif lt == "mlstm":
+            di = cfg.xlstm.n_heads * cfg.xlstm.head_dim
+            total += 2 * d * di + 3 * di * di + di * d
+        elif lt == "slstm":
+            up = max(256, (4 * d // 3 + 255) // 256 * 256)
+            total += 4 * d * d + 4 * d * (d // cfg.xlstm.n_heads) \
+                + 3 * up * d
+    if cfg.n_enc_layers:
+        hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        total += cfg.n_enc_layers * (d * hd * (2 * h + 2 * kv)
+                                     + (3 if cfg.gated_mlp else 2)
+                                     * d * cfg.d_ff)
+    return total
+
+
+# ----------------------------------------------------------------------
+# Roofline assembly
+# ----------------------------------------------------------------------
+
+def analyze(record: dict) -> dict:
+    cfg = get_config(record["arch"])
+    devices = record["devices"]
+    sh_name = record["shape"]
+    sh = INPUT_SHAPES[sh_name]
+
+    flops_global = step_flops(cfg, sh_name)
+    flops_dev = flops_global / devices
+    compute_t = flops_dev / PEAK_FLOPS
+
+    # memory term: HLO bytes accessed (per device) — while-body-once caveat
+    # makes this a LOWER bound; we also add the analytic param+cache bytes
+    # which dominate the truth for most shapes.
+    hlo_bytes = record["cost"]["bytes_accessed"]
+    params_bytes = n_params(cfg) * 4 / devices
+    kind = sh["kind"]
+    if kind == "train":
+        analytic_bytes = 3 * params_bytes  # read p, read grads, write p (opt)
+    else:
+        analytic_bytes = params_bytes / 2  # bf16 weights read once
+    if kind.startswith("decode"):
+        analytic_bytes += record["memory"]["argument_bytes"]  # cache read
+    mem_bytes = max(hlo_bytes, analytic_bytes)
+    memory_t = mem_bytes / HBM_BW
+
+    coll_bytes = record["collective_bytes_total"]
+    collective_t = coll_bytes / LINK_BW
+
+    model_flops = 6 * n_params(cfg, active_only=True) * \
+        sh["global_batch"] * sh["seq_len"] if kind == "train" else \
+        2 * n_params(cfg, active_only=True) * sh["global_batch"] * \
+        (sh["seq_len"] if kind == "prefill" else 1)
+
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dominant = max(terms, key=terms.get)
+    step_t = max(terms.values())
+    return {
+        "arch": record["arch"], "shape": sh_name, "mesh": record["mesh"],
+        **{k: float(f"{v:.3e}") for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "flops_analytic_global": flops_global,
+        "flops_hlo_raw_perdev": record["cost"]["flops"],
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(flops_global, 1.0),
+        "mfu_at_roofline": (flops_dev / step_t) / PEAK_FLOPS,
+        "peak_gib": record["memory"]["peak_bytes"] / 2**30,
+    }
+
+
+def run(dryrun_dir="experiments/dryrun", mesh="singlepod") -> list[str]:
+    rows = []
+    recs = []
+    for f in sorted(Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        r = analyze(json.loads(f.read_text()))
+        recs.append(r)
+        rows.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,"
+            f"dominant={r['dominant']};compute={r['compute_s']:.2e}s;"
+            f"memory={r['memory_s']:.2e}s;coll={r['collective_s']:.2e}s;"
+            f"useful={r['useful_ratio']:.2f};mfu={r['mfu_at_roofline']:.3f}")
+    out = Path(dryrun_dir).parent / f"roofline_{mesh}.json"
+    out.write_text(json.dumps(recs, indent=2))
+    return rows
+
+
+def table(dryrun_dir="experiments/dryrun", mesh="singlepod"):
+    print(f"{'arch':>20} {'shape':>12} {'compute':>9} {'memory':>9} "
+          f"{'coll':>9} {'dom':>8} {'useful':>7} {'MFU@roof':>8} "
+          f"{'peakGiB':>8}")
+    for f in sorted(Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        r = analyze(json.loads(f.read_text()))
+        print(f"{r['arch']:>20} {r['shape']:>12} {r['compute_s']:>9.2e} "
+              f"{r['memory_s']:>9.2e} {r['collective_s']:>9.2e} "
+              f"{r['dominant']:>8} {r['useful_ratio']:>7.2f} "
+              f"{r['mfu_at_roofline']:>8.3f} {r['peak_gib']:>8.2f}")
+
+
+if __name__ == "__main__":
+    table(*sys.argv[1:])

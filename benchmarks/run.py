@@ -1,0 +1,43 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set BENCH_FULL=1 for paper-scale
+settings (quick CPU-scale by default). The roofline rows appear only if the
+dry-run artifacts exist (run ``python -m repro.launch.dryrun --all`` first).
+"""
+import os
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def main() -> None:
+    quick = os.environ.get("BENCH_FULL", "0") != "1"
+    from benchmarks import (ablation_h, fig2_global_fit, fig3_anomaly,
+                            fig4_clients, fig5_constrained, kernel_bench,
+                            table4_comm)
+    modules = [fig2_global_fit, table4_comm, fig3_anomaly, fig4_clients,
+               fig5_constrained, ablation_h, kernel_bench]
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run(quick=quick):
+                print(row, flush=True)
+        except Exception:
+            ok = False
+            traceback.print_exc()
+        print(f"# {mod.__name__}: {time.time() - t0:.0f}s", file=sys.stderr)
+    # roofline (needs dry-run artifacts)
+    if Path("experiments/dryrun").exists() and \
+            any(Path("experiments/dryrun").glob("*.json")):
+        from benchmarks import roofline
+        for row in roofline.run():
+            print(row, flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Print a one-line-per-combination summary of dry-run JSON records."""
+import json
+import sys
+from pathlib import Path
+
+
+def main(d="experiments/dryrun"):
+    rows = []
+    for f in sorted(Path(d).glob("*.json")):
+        r = json.loads(f.read_text())
+        rows.append(r)
+    print(f"{'arch':>20} {'shape':>12} {'mesh':>9} {'flops':>10} "
+          f"{'bytes':>10} {'coll_B':>10} {'peakGiB':>8} {'cmp_s':>6}")
+    for r in rows:
+        print(f"{r['arch']:>20} {r['shape']:>12} {r['mesh']:>9} "
+              f"{r['cost']['flops']:>10.2e} "
+              f"{r['cost']['bytes_accessed']:>10.2e} "
+              f"{r['collective_bytes_total']:>10.2e} "
+              f"{r['memory']['peak_bytes'] / 2**30:>8.2f} "
+              f"{r['compile_s']:>6.1f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

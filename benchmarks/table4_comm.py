@@ -1,0 +1,31 @@
+"""Table 4: communication rounds (and uplink volume) per method. Validates
+the one-shot claim: FedGenGMM = 1 round; DEM = one-to-two orders more."""
+from __future__ import annotations
+
+from benchmarks.common import load_quick, run_methods
+
+DATASETS_Q = ["covertype", "vehicle"]
+DATASETS_FULL = ["mnist", "covertype", "rwhar", "wadi", "vehicle", "smd"]
+
+
+def run(quick: bool = True, seeds=(0,)) -> list[str]:
+    rows = []
+    for name in (DATASETS_Q if quick else DATASETS_FULL):
+        ds = load_quick(name, quick=quick)
+        alpha = 0.2 if ds.scheme == "dirichlet" else 1
+        for seed in seeds:
+            res = run_methods(ds, alpha, seed,
+                              methods=("fedgen", "dem1", "dem2", "dem3"))
+            for m, r in res.items():
+                rows.append(
+                    f"table4_comm/{name}/{m},{r['seconds'] * 1e6:.0f},"
+                    f"{r['rounds']}")
+                rows.append(
+                    f"table4_uplink/{name}/{m},{r['seconds'] * 1e6:.0f},"
+                    f"{r['uplink_floats']}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,24 @@
+"""End-to-end anomaly detection (the paper's §5.8 pipeline) on the
+VEHICLE-like dataset: heterogeneous clients, one-shot aggregation, and
+AUC-PR evaluation against DEM and the non-federated benchmark.
+
+    PYTHONPATH=src python examples/anomaly_detection.py
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks.common import load_quick, run_methods
+
+ds = load_quick("vehicle")
+print(f"dataset: {ds.name}  train={ds.x_train.shape}  "
+      f"anomaly_ratio={ds.anomaly_ratio}")
+
+for alpha in (1, 2):
+    print(f"\n== Quantity(alpha={alpha}) heterogeneity ==")
+    res = run_methods(ds, alpha, seed=0)
+    for method, r in res.items():
+        print(f"  {method:8s} AUC-PR={r['auc_pr']:.3f} "
+              f"loglik={r['loglik']:8.3f} rounds={r['rounds']:>3}")

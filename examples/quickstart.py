@@ -1,0 +1,33 @@
+"""Quickstart: one-shot federated GMM learning (FedGenGMM) in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedgengmm, fit_gmm, partition
+
+# 1. a planted 4-component mixture, 3000 points
+rng = np.random.default_rng(0)
+mus = rng.normal(0, 5, (4, 8)).astype(np.float32)
+y = rng.integers(0, 4, 3000)
+x = (mus[y] + rng.normal(0, 0.6, (3000, 8))).astype(np.float32)
+
+# 2. heterogeneous split over 10 clients (Dirichlet alpha = 0.2)
+split = partition(rng, x, y, n_clients=10, scheme="dirichlet", alpha=0.2)
+print("client sizes:", split.sizes)
+
+# 3. the one-shot federated pipeline: local EM -> 1 round -> merge ->
+#    synthetic sample -> global EM
+result = fedgengmm(jax.random.key(0), split, k_clients=4, k_global=4, h=100)
+print(f"communication rounds: {result.comm.rounds}")
+print(f"uplink floats:        {result.comm.uplink_floats} "
+      f"(raw data would be {x.size})")
+
+# 4. compare against the non-federated benchmark
+bench = fit_gmm(jax.random.key(1), jnp.asarray(x), 4)
+print(f"federated  avg log-likelihood: "
+      f"{float(result.global_gmm.score(jnp.asarray(x))):.4f}")
+print(f"central    avg log-likelihood: "
+      f"{float(bench.gmm.score(jnp.asarray(x))):.4f}")

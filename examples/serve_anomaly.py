@@ -1,0 +1,59 @@
+"""Serve a small transformer with batched requests + the FedGenGMM
+activation monitor (the paper's technique as a first-class serving
+feature): each serving shard fits a local GMM over the hidden-state
+features of its traffic; ONE communication round builds the global
+monitor; incoming batches are scored online.
+
+    PYTHONPATH=src python examples/serve_anomaly.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import (decode_step, init_cache, init_params,
+                          prefill_forward)
+from repro.monitor import FedGMMMonitor, MonitorConfig
+
+cfg = get_config("internlm2-1.8b", "smoke")
+params = init_params(jax.random.key(0), cfg)
+rng = np.random.default_rng(0)
+
+# ---- 1. batched serving: prefill + a few decode steps ----
+B, S = 8, 48
+prompt = jnp.asarray(rng.zipf(1.5, (B, S)).clip(0, 99), jnp.int32)
+prefill = jax.jit(lambda p, b: prefill_forward(p, cfg, b, capacity=S + 16))
+step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+t0 = time.time()
+logits, cache = prefill(params, {"tokens": prompt})
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+generated = [tok]
+for i in range(8):
+    logits, cache = step(params, cache, tok, jnp.asarray(S + i, jnp.int32))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated.append(tok)
+print(f"served {B} requests, 8 tokens each, in {time.time() - t0:.1f}s "
+      f"(includes compile)")
+print("sample continuation:", [int(g[0]) for g in generated])
+
+# ---- 2. federated anomaly monitor over 4 serving shards ----
+mon = FedGMMMonitor(cfg, MonitorConfig(k_local=2, k_global=4, h=50))
+for shard in range(4):
+    for _ in range(4):
+        traffic = rng.zipf(1.5, (8, 32)).clip(0, 99)
+        mon.observe(shard, params, {"tokens": jnp.asarray(traffic,
+                                                          jnp.int32)})
+mon.aggregate()  # <- the single communication round
+
+id_batch = {"tokens": jnp.asarray(rng.zipf(1.5, (16, 32)).clip(0, 99),
+                                  jnp.int32)}
+ood_batch = {"tokens": jnp.asarray(
+    rng.integers(400, cfg.vocab_size, (16, 32)), jnp.int32)}
+print(f"in-distribution anomaly score: "
+      f"{float(np.median(mon.score(params, id_batch))):.2f}")
+print(f"out-of-distribution score:     "
+      f"{float(np.median(mon.score(params, ood_batch))):.2f}  "
+      f"(higher = flagged)")

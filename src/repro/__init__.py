@@ -1,0 +1,14 @@
+"""repro — FedGenGMM (one-shot federated Gaussian Mixture Models) in JAX.
+
+Subpackages:
+  core         the paper's contribution: GMM/EM/FedGenGMM/DEM (+ DP,
+               continual, split-merge extensions)
+  data         dataset analogues, PCA, scaling, token pipeline
+  kernels      Pallas TPU kernels for the EM hot path
+  models       multi-architecture transformer substrate
+  configs      the 10 assigned architectures
+  distributed  federated runtime as mesh collectives
+  monitor      FedGenGMM activation monitor for serving
+  launch       meshes, step functions, trainer, serving loop, dry-run
+  optim        AdamW;  checkpoint: npz checkpointing
+"""

@@ -1,0 +1,52 @@
+"""Minimal pytree checkpointing: flat-key npz + json metadata (no external
+deps; sufficient for CPU-scale training and the examples)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        # npz has no portable bfloat16: store extended floats as f32 (the
+        # restore path casts back to the target leaf dtype)
+        if arr.dtype not in (np.float64, np.float32, np.float16,
+                             np.int64, np.int32, np.int16, np.int8,
+                             np.uint8, np.bool_):
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, params, metadata: dict | None = None):
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(p.with_suffix(".npz"), **_flatten(params))
+    if metadata is not None:
+        p.with_suffix(".json").write_text(json.dumps(metadata, indent=2))
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (a params pytree)."""
+    p = Path(path)
+    data = np.load(p.with_suffix(".npz"))
+    flat_like, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat_like:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in path_k)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    meta = {}
+    if p.with_suffix(".json").exists():
+        meta = json.loads(p.with_suffix(".json").read_text())
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves), meta

@@ -1,0 +1,8 @@
+"""Assigned architecture configs (one module per arch; each cites its
+source paper) + the input-shape registry used by the dry-run."""
+from repro.configs.base import (INPUT_SHAPES, decode_capacity, get_citation,
+                                get_config, input_specs, list_archs,
+                                uses_ring)
+
+__all__ = ["INPUT_SHAPES", "decode_capacity", "get_citation", "get_config",
+           "input_specs", "list_archs", "uses_ring"]

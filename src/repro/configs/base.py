@@ -1,0 +1,119 @@
+"""Architecture registry + assigned input shapes + dry-run input specs.
+
+Every assigned architecture registers a full-size ``ModelConfig`` (exact
+paper dimensions) and a ``smoke`` reduced variant (<=2 layers, d_model<=512,
+<=4 experts) used by the CPU smoke tests.
+
+Input shapes (assigned):
+    train_4k      seq_len=4096    global_batch=256   (train_step)
+    prefill_32k   seq_len=32768   global_batch=32    (prefill_step)
+    decode_32k    seq_len=32768   global_batch=128   (serve_step, full cache)
+    long_500k     seq_len=524288  global_batch=1     (serve_step, ring cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+INPUT_SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode_ring"},
+}
+
+_REGISTRY: dict[str, dict] = {}
+
+
+def register(arch_id: str, full: ModelConfig, smoke: ModelConfig,
+             citation: str):
+    _REGISTRY[arch_id] = {"full": full, "smoke": smoke, "citation": citation}
+
+
+def get_config(arch_id: str, variant: str = "full") -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[arch_id][variant]
+
+
+def get_citation(arch_id: str) -> str:
+    _ensure_loaded()
+    return _REGISTRY[arch_id]["citation"]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if not _REGISTRY:
+        from repro.configs import (deepseek_67b, deepseek_moe_16b, gemma_7b,
+                                   internlm2_1_8b, internvl2_26b,
+                                   mixtral_8x7b, recurrentgemma_9b,
+                                   seamless_m4t_medium, xlstm_350m, yi_6b)
+
+
+# ----------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ----------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct pytree for one (arch, input-shape) combination.
+
+    Modality frontends are STUBS per the assignment: vision/audio entries
+    receive precomputed patch/frame embeddings of the right shape.
+    """
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if kind == "train":
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "targets": sds((b, s), jnp.int32),
+            "mask": sds((b, s), jnp.float32),
+        }
+        if cfg.frontend == "vision":
+            batch["prefix"] = sds((b, cfg.n_prefix, cfg.d_model), cfg.dtype)
+        if cfg.n_enc_layers:
+            batch["src_embeds"] = sds((b, s // cfg.src_ratio, cfg.d_model),
+                                      cfg.dtype)
+        return {"batch": batch}
+    if kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["prefix"] = sds((b, cfg.n_prefix, cfg.d_model), cfg.dtype)
+        if cfg.n_enc_layers:
+            batch["src_embeds"] = sds((b, s // cfg.src_ratio, cfg.d_model),
+                                      cfg.dtype)
+        return {"batch": batch}
+    # decode kinds: ONE new token + cache of the context length
+    ring = kind == "decode_ring"
+    capacity = cfg.long_window if ring else s
+    from repro.models.transformer import init_cache
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, capacity,
+                           enc_len=(s // cfg.src_ratio
+                                    if cfg.n_enc_layers else 0)))
+    return {
+        "cache": cache,
+        "token": sds((b,), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def decode_capacity(cfg: ModelConfig, shape_name: str) -> int:
+    sh = INPUT_SHAPES[shape_name]
+    return cfg.long_window if sh["kind"] == "decode_ring" else sh["seq_len"]
+
+
+def uses_ring(shape_name: str) -> bool:
+    return INPUT_SHAPES[shape_name]["kind"] == "decode_ring"

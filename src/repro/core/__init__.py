@@ -1,0 +1,29 @@
+"""FedGenGMM core: GMM primitives, EM, federated one-shot aggregation and
+distributed-EM baselines."""
+from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
+from repro.core.em import (EMResult, SufficientStats, e_step_stats, em_step,
+                           fit_gmm, fit_gmm_bic, init_from_kmeans,
+                           init_from_means, m_step)
+from repro.core.kmeans import KMeansResult, federated_kmeans, kmeans
+from repro.core.partition import (ClientSplit, partition, partition_dirichlet,
+                                  partition_quantity)
+from repro.core.fedgen import (CommStats, FedGenResult, aggregate, fedgengmm,
+                               payload_floats, train_locals, train_locals_bic)
+from repro.core.dem import DEMResult, dem
+from repro.core.privacy import DPConfig, privatize_clients, privatize_gmm
+from repro.core.continual import ContinualState, continual_round, init_state
+from repro.core.splitmerge import split_merge_fit
+from repro.core import metrics
+
+__all__ = [
+    "GMM", "merge_gmms", "merge_gmms_stacked",
+    "EMResult", "SufficientStats", "e_step_stats", "em_step", "fit_gmm",
+    "fit_gmm_bic", "init_from_kmeans", "init_from_means", "m_step",
+    "KMeansResult", "federated_kmeans", "kmeans",
+    "ClientSplit", "partition", "partition_dirichlet", "partition_quantity",
+    "CommStats", "FedGenResult", "aggregate", "fedgengmm", "payload_floats",
+    "train_locals", "train_locals_bic",
+    "DEMResult", "dem", "metrics",
+    "DPConfig", "privatize_clients", "privatize_gmm",
+    "ContinualState", "continual_round", "init_state", "split_merge_fit",
+]

@@ -1,0 +1,223 @@
+"""Expectation-Maximization for GMMs (weighted, jit-compiled, while_loop
+convergence) plus BIC-based model selection — the TrainGMM procedure of
+Algorithm 4.1.
+
+Sample weights make padded/ragged federated client datasets representable as
+fixed-shape arrays (weight 0 = padding), which is what lets local training
+run under vmap/shard_map.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gmm import GMM
+from repro.core.kmeans import kmeans_multi
+
+
+class EMResult(NamedTuple):
+    gmm: GMM
+    log_likelihood: jax.Array  # final average log-likelihood
+    n_iter: jax.Array
+    converged: jax.Array
+
+
+class SufficientStats(NamedTuple):
+    """Weighted sufficient statistics of one E-step.
+
+    s0 : (K,)     sum_n w_n r_nk
+    s1 : (K, d)   sum_n w_n r_nk x_n
+    s2 : (K, d) or (K, d, d)   sum_n w_n r_nk x_n x_n(^T)
+    loglik : ()   weighted total log-likelihood
+    wsum : ()     total sample weight
+    """
+    s0: jax.Array
+    s1: jax.Array
+    s2: jax.Array
+    loglik: jax.Array
+    wsum: jax.Array
+
+
+# ----------------------------------------------------------------------
+# E / M steps
+# ----------------------------------------------------------------------
+
+def e_step_stats(gmm: GMM, x: jax.Array,
+                 sample_weight: Optional[jax.Array] = None) -> SufficientStats:
+    """One E-step: responsibilities -> sufficient statistics.
+
+    This is the communication payload of DEM (each client computes local
+    stats; the server psums them) and the compute hot spot fused by
+    ``repro.kernels.estep_stats`` on TPU.
+    """
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    lp = gmm.component_log_prob(x) + jnp.log(gmm.weights)[None, :]   # (N, K)
+    log_norm = jax.scipy.special.logsumexp(lp, axis=1)               # (N,)
+    resp = jnp.exp(lp - log_norm[:, None]) * w[:, None]              # (N, K)
+    s0 = jnp.sum(resp, axis=0)                                       # (K,)
+    s1 = resp.T @ x                                                  # (K, d)
+    if gmm.is_diagonal:
+        s2 = resp.T @ (x * x)                                        # (K, d)
+    else:
+        s2 = jnp.einsum("nk,ni,nj->kij", resp, x, x)                 # (K, d, d)
+    loglik = jnp.sum(log_norm * w)
+    return SufficientStats(s0, s1, s2, loglik, jnp.sum(w))
+
+
+def e_step_stats_fused(gmm: GMM, x: jax.Array,
+                       sample_weight: Optional[jax.Array] = None,
+                       interpret: Optional[bool] = None) -> SufficientStats:
+    """Kernel-backed E-step (diagonal covariance only): the Pallas
+    ``estep_stats`` kernel fuses log-pdf -> softmax -> reductions in VMEM.
+    Semantically identical to :func:`e_step_stats`; used on TPU where the
+    (N, K) responsibility matrix would otherwise round-trip HBM."""
+    from repro.kernels import ops  # local import: kernels are optional
+    assert gmm.is_diagonal, "fused E-step kernel supports diagonal covariance"
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    s0, s1, s2, ll = ops.estep_stats(x, gmm.means, gmm.covs,
+                                     jnp.log(gmm.weights), w,
+                                     interpret=interpret)
+    return SufficientStats(s0, s1, s2, ll, jnp.sum(w))
+
+
+def m_step(stats: SufficientStats, reg_covar: float = 1e-6) -> GMM:
+    """M-step from (possibly aggregated) sufficient statistics."""
+    s0 = jnp.maximum(stats.s0, 1e-10)
+    weights = stats.s0 / jnp.maximum(stats.wsum, 1e-12)
+    weights = weights / jnp.sum(weights)
+    means = stats.s1 / s0[:, None]
+    if stats.s2.ndim == 2:  # diagonal
+        covs = stats.s2 / s0[:, None] - means * means
+        covs = jnp.maximum(covs, 0.0) + reg_covar
+    else:
+        outer = jnp.einsum("ki,kj->kij", means, means)
+        covs = stats.s2 / s0[:, None, None] - outer
+        # robustness against component collapse (few near-colinear points):
+        # symmetrize, sanitize non-finite, floor the diagonal — the EM
+        # iteration then reassigns mass instead of diverging to NaN
+        covs = 0.5 * (covs + jnp.swapaxes(covs, -1, -2))
+        covs = jnp.where(jnp.isfinite(covs), covs, 0.0)
+        d = means.shape[1]
+        eye = jnp.eye(d, dtype=means.dtype)[None]
+        covs = covs + reg_covar * eye
+        diag = jnp.maximum(jnp.diagonal(covs, axis1=-2, axis2=-1), reg_covar)
+        covs = covs * (1.0 - eye) + diag[..., None] * eye
+    means = jnp.where(jnp.isfinite(means), means, 0.0)
+    return GMM(weights, means, covs)
+
+
+def em_step(gmm: GMM, x: jax.Array, sample_weight: Optional[jax.Array] = None,
+            reg_covar: float = 1e-6) -> tuple[GMM, jax.Array]:
+    """One full EM iteration. Returns (new_gmm, avg_loglik_of_old_gmm)."""
+    stats = e_step_stats(gmm, x, sample_weight)
+    avg_ll = stats.loglik / jnp.maximum(stats.wsum, 1e-12)
+    return m_step(stats, reg_covar), avg_ll
+
+
+# ----------------------------------------------------------------------
+# Initialization
+# ----------------------------------------------------------------------
+
+def init_from_kmeans(key: jax.Array, x: jax.Array, k: int,
+                     sample_weight: Optional[jax.Array] = None,
+                     covariance_type: str = "diag",
+                     reg_covar: float = 1e-6) -> GMM:
+    """sklearn-style init: k-means labels -> one-hot responsibilities -> M-step."""
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    res = kmeans_multi(key, x, k, sample_weight=w, max_iter=50)
+    resp = jax.nn.one_hot(res.assignments, k, dtype=x.dtype) * w[:, None]
+    s0 = jnp.sum(resp, axis=0)
+    s1 = resp.T @ x
+    s2 = resp.T @ (x * x) if covariance_type == "diag" else jnp.einsum(
+        "nk,ni,nj->kij", resp, x, x)
+    stats = SufficientStats(s0, s1, s2, jnp.array(0.0, x.dtype), jnp.sum(w))
+    return m_step(stats, reg_covar)
+
+
+def init_from_means(means: jax.Array, x: jax.Array,
+                    sample_weight: Optional[jax.Array] = None,
+                    covariance_type: str = "diag",
+                    reg_covar: float = 1e-6) -> GMM:
+    """Init with given centers, uniform weights, data-variance covariances.
+
+    Used by the DEM baselines, where the server proposes centers without
+    seeing client data.
+    """
+    k, d = means.shape
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    mean = jnp.sum(x * w[:, None], axis=0) / wsum
+    var = jnp.sum((x - mean) ** 2 * w[:, None], axis=0) / wsum + reg_covar
+    weights = jnp.full((k,), 1.0 / k, x.dtype)
+    if covariance_type == "diag":
+        covs = jnp.broadcast_to(var, (k, d))
+    else:
+        covs = jnp.broadcast_to(jnp.diag(var), (k, d, d))
+    return GMM(weights, means, covs)
+
+
+# ----------------------------------------------------------------------
+# Full EM fit
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _em_loop(gmm0: GMM, x: jax.Array, w: jax.Array, tol: float,
+             reg_covar: float, max_iter: int):
+    def cond(state):
+        _, prev_ll, ll, it = state
+        return jnp.logical_and(it < max_iter, jnp.abs(ll - prev_ll) > tol)
+
+    def body(state):
+        gmm, _, ll, it = state
+        new_gmm, avg_ll = em_step(gmm, x, w, reg_covar)
+        return new_gmm, ll, avg_ll, it + 1
+
+    neg_inf = jnp.array(-jnp.inf, x.dtype)
+    # Bootstrap: one step to get an initial loglik.
+    gmm1, ll0 = em_step(gmm0, x, w, reg_covar)
+    state = (gmm1, neg_inf, ll0, jnp.array(1))
+    gmm, prev_ll, ll, it = jax.lax.while_loop(cond, body, state)
+    converged = jnp.abs(ll - prev_ll) <= tol
+    return gmm, ll, it, converged
+
+
+def fit_gmm(key: jax.Array, x: jax.Array, k: int,
+            sample_weight: Optional[jax.Array] = None,
+            covariance_type: str = "diag",
+            max_iter: int = 200, tol: float = 1e-3,
+            reg_covar: float = 1e-6,
+            init_gmm: Optional[GMM] = None) -> EMResult:
+    """Train a GMM with EM until the avg-loglik delta drops below ``tol``
+    (the paper's convergence criterion, 1e-3)."""
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    if init_gmm is None:
+        init_gmm = init_from_kmeans(key, x, k, w, covariance_type, reg_covar)
+    gmm, ll, it, converged = _em_loop(init_gmm, x, w, jnp.asarray(tol, x.dtype),
+                                      reg_covar, max_iter)
+    return EMResult(gmm, ll, it, converged)
+
+
+def fit_gmm_bic(key: jax.Array, x: jax.Array, k_candidates: Sequence[int],
+                sample_weight: Optional[jax.Array] = None,
+                covariance_type: str = "diag",
+                max_iter: int = 200, tol: float = 1e-3,
+                reg_covar: float = 1e-6) -> tuple[EMResult, dict[int, float]]:
+    """TrainGMM of Algorithm 4.1: fit every K in the candidate range, return
+    the fit minimizing BIC (plus all BIC scores)."""
+    best, best_bic, bics = None, jnp.inf, {}
+    for i, k in enumerate(k_candidates):
+        res = fit_gmm(jax.random.fold_in(key, i), x, k, sample_weight,
+                      covariance_type, max_iter, tol, reg_covar)
+        b = float(res.gmm.bic(x, sample_weight))
+        bics[k] = b
+        if b < best_bic:
+            best, best_bic = res, b
+    return best, bics

@@ -1,0 +1,164 @@
+"""FedGenGMM (Algorithm 4.1): one-shot federated GMM learning.
+
+Pipeline:
+  1. local EM per client (vmap'd over padded client datasets, or a python
+     loop with per-client BIC selection when K_c is heterogeneous),
+  2. single communication round: clients ship (r, mu, Sigma, |D_c|),
+  3. server merge: re-weight by |D_c|/|D|, concatenate, normalize,
+  4. server samples |S| = H * sum_c K_c synthetic points from the merged
+     mixture and trains the global GMM on S.
+
+The sharded (shard_map) variant lives in ``repro.distributed.fed``; this
+module is its single-process semantics and is what the paper benchmarks use.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.em import EMResult, fit_gmm, fit_gmm_bic
+from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
+from repro.core.partition import ClientSplit
+
+
+class CommStats(NamedTuple):
+    """Communication accounting for one federated training run."""
+    rounds: int
+    uplink_floats: int       # client -> server payload (total floats)
+    downlink_floats: int     # server -> client payload (total floats)
+
+
+class FedGenResult(NamedTuple):
+    global_gmm: GMM
+    local_gmms: list[GMM]
+    synthetic: jax.Array       # the server-side dataset S
+    comm: CommStats
+    local_results: list[EMResult]
+
+
+def payload_floats(gmm: GMM) -> int:
+    """Uplink size of one local model: weights + means + covariances."""
+    k, d = gmm.means.shape
+    cov = k * d if gmm.is_diagonal else k * d * d
+    return k + k * d + cov
+
+
+# ----------------------------------------------------------------------
+# Local training
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "max_iter", "covariance_type"))
+def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
+                 max_iter: int = 200, tol: float = 1e-3,
+                 reg_covar: float = 1e-6,
+                 covariance_type: str = "diag") -> tuple[GMM, jax.Array,
+                                                         jax.Array]:
+    """vmap'd local EM, fixed K_c = k for all clients.
+
+    data: (C, N, d) padded, mask: (C, N). Returns stacked GMM with leaves
+    of leading dim C, plus (C,) final logliks and iteration counts.
+    """
+    c = data.shape[0]
+    keys = jax.random.split(key, c)
+
+    def one(key, x, w):
+        res = fit_gmm(key, x, k, sample_weight=w,
+                      covariance_type=covariance_type, max_iter=max_iter,
+                      tol=tol, reg_covar=reg_covar)
+        return res.gmm, res.log_likelihood, res.n_iter
+
+    return jax.vmap(one)(keys, data, mask)
+
+
+def train_locals_bic(key: jax.Array, split: ClientSplit,
+                     k_candidates: Sequence[int],
+                     max_iter: int = 200, tol: float = 1e-3,
+                     reg_covar: float = 1e-6) -> list[EMResult]:
+    """Per-client TrainGMM with BIC selection — heterogeneous K_c."""
+    results = []
+    for i in range(split.data.shape[0]):
+        n = int(split.sizes[i])
+        x = jnp.asarray(split.data[i, :n])
+        res, _ = fit_gmm_bic(jax.random.fold_in(key, i), x, k_candidates,
+                             max_iter=max_iter, tol=tol, reg_covar=reg_covar)
+        results.append(res)
+    return results
+
+
+# ----------------------------------------------------------------------
+# Server-side aggregation
+# ----------------------------------------------------------------------
+
+def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
+              h: int = 100,
+              k_global: Optional[int] = None,
+              k_candidates: Optional[Sequence[int]] = None,
+              max_iter: int = 200, tol: float = 1e-3,
+              reg_covar: float = 1e-6,
+              covariance_type: str = "diag") -> tuple[EMResult, jax.Array]:
+    """Algorithm 4.1 lines 21-31: merge, sample S, train global model."""
+    merged = merge_gmms(local_gmms, jnp.asarray(sizes))
+    n_synth = h * sum(g.n_components for g in local_gmms)
+    k_sample, k_fit = jax.random.split(key)
+    synthetic = merged.sample(k_sample, n_synth)
+    if k_global is not None:
+        res = fit_gmm(k_fit, synthetic, k_global,
+                      covariance_type=covariance_type, max_iter=max_iter,
+                      tol=tol, reg_covar=reg_covar)
+    else:
+        assert k_candidates is not None, "need k_global or k_candidates"
+        res, _ = fit_gmm_bic(k_fit, synthetic, k_candidates,
+                             covariance_type=covariance_type,
+                             max_iter=max_iter, tol=tol,
+                             reg_covar=reg_covar)
+    return res, synthetic
+
+
+# ----------------------------------------------------------------------
+# End-to-end FedGenGMM
+# ----------------------------------------------------------------------
+
+def fedgengmm(key: jax.Array, split: ClientSplit,
+              k_clients: Optional[int] = None,
+              k_global: Optional[int] = None,
+              k_candidates: Optional[Sequence[int]] = None,
+              h: int = 100,
+              max_iter: int = 200, tol: float = 1e-3,
+              reg_covar: float = 1e-6,
+              covariance_type: str = "diag") -> FedGenResult:
+    """Run the full one-shot pipeline on a partitioned dataset.
+
+    Either fix ``k_clients`` (paper's main experiments, K_c = K) or pass
+    ``k_candidates`` for per-client BIC selection (heterogeneous models).
+    """
+    k_local_train, k_agg = jax.random.split(key)
+    if k_clients is not None:
+        stacked, lls, iters = train_locals(
+            k_local_train, jnp.asarray(split.data), jnp.asarray(split.mask),
+            k_clients, max_iter=max_iter, tol=tol, reg_covar=reg_covar,
+            covariance_type=covariance_type)
+        local_gmms = [
+            GMM(stacked.weights[i], stacked.means[i], stacked.covs[i])
+            for i in range(split.data.shape[0])]
+        local_results = [
+            EMResult(g, lls[i], iters[i], jnp.array(True))
+            for i, g in enumerate(local_gmms)]
+    else:
+        assert k_candidates is not None, "need k_clients or k_candidates"
+        local_results = train_locals_bic(
+            k_local_train, split, k_candidates, max_iter=max_iter, tol=tol,
+            reg_covar=reg_covar)
+        local_gmms = [r.gmm for r in local_results]
+
+    res, synthetic = aggregate(
+        k_agg, local_gmms, split.sizes, h=h, k_global=k_global,
+        k_candidates=k_candidates, max_iter=max_iter, tol=tol,
+        reg_covar=reg_covar, covariance_type=covariance_type)
+
+    uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
+    down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
+    comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
+    return FedGenResult(res.gmm, local_gmms, synthetic, comm, local_results)

@@ -1,0 +1,81 @@
+"""Differential privacy for the FedGenGMM uplink (paper §4.4, left as
+future work there — implemented here as a beyond-paper feature).
+
+The one-shot structure is DP-friendly: the WHOLE privacy budget is spent on
+a single release of the local GMM parameters (vs. iterative methods that
+split epsilon across rounds — the depletion problem of Huang et al. '23
+cited in the paper).
+
+Mechanism: per-client Gaussian mechanism on the sufficient-statistic view
+of the GMM. Features are normalized to [0,1]^d (§5.1), so per-sample
+sensitivity of the (clipped) statistics is bounded:
+
+    weights  : histogram release, L2 sensitivity sqrt(2)/|D_c|
+    means    : each coordinate in [0,1]; sensitivity <= sqrt(d)/n_k
+    variances: each coordinate in [0,1]; sensitivity <= sqrt(d)/n_k
+
+We use the analytic Gaussian mechanism calibration sigma =
+sqrt(2 ln(1.25/delta)) * sensitivity / epsilon (composition across the
+three releases by simple epsilon-splitting). Variances are re-clipped to
+stay positive; weights are re-projected to the simplex.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gmm import GMM
+
+
+class DPConfig(NamedTuple):
+    epsilon: float = 1.0
+    delta: float = 1e-5
+    min_count: float = 8.0   # floor on per-component effective counts
+
+
+def gaussian_sigma(sensitivity: float, epsilon: float, delta: float) -> float:
+    return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / epsilon
+
+
+def privatize_gmm(key: jax.Array, gmm: GMM, n_samples: float,
+                  dp: DPConfig) -> GMM:
+    """Release a (epsilon, delta)-DP view of one client's GMM parameters.
+
+    Assumes diagonal covariance and features in [0,1]^d."""
+    assert gmm.is_diagonal, "DP release supports diagonal covariance"
+    k, d = gmm.means.shape
+    eps_each = dp.epsilon / 3.0
+    kw, km, kv = jax.random.split(key, 3)
+
+    # effective per-component counts (for sensitivity of means/vars)
+    counts = jnp.maximum(gmm.weights * n_samples, dp.min_count)
+
+    # weights: histogram of proportions
+    sig_w = gaussian_sigma(math.sqrt(2.0) / max(n_samples, 1.0), eps_each,
+                           dp.delta)
+    w = gmm.weights + sig_w * jax.random.normal(kw, (k,))
+    w = jnp.maximum(w, 1e-4)
+    w = w / jnp.sum(w)
+
+    # means: coordinates bounded by [0,1]
+    sig_m = gaussian_sigma(math.sqrt(d), eps_each, dp.delta)
+    mu = gmm.means + (sig_m / counts[:, None]) * \
+        jax.random.normal(km, (k, d))
+    mu = jnp.clip(mu, 0.0, 1.0)
+
+    # variances: bounded by [0, 1/4] coordinate-wise for [0,1] data
+    sig_v = gaussian_sigma(math.sqrt(d) / 4.0, eps_each, dp.delta)
+    var = gmm.covs + (sig_v / counts[:, None]) * \
+        jax.random.normal(kv, (k, d))
+    var = jnp.clip(var, 1e-5, 0.25)
+
+    return GMM(w, mu, var)
+
+
+def privatize_clients(key: jax.Array, gmms: list[GMM], sizes,
+                      dp: DPConfig) -> list[GMM]:
+    return [privatize_gmm(jax.random.fold_in(key, i), g, float(n), dp)
+            for i, (g, n) in enumerate(zip(gmms, sizes))]

@@ -1,0 +1,5 @@
+"""Distributed federated runtime: the paper's communication patterns as
+mesh collectives (one-shot all_gather vs per-round psum)."""
+from repro.distributed.fed import (ShardedFedResult, dem_sharded,
+                                   fedgen_sharded)
+__all__ = ["ShardedFedResult", "dem_sharded", "fedgen_sharded"]

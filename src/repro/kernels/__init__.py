@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the EM hot path (validated in interpret mode on
+CPU; see EXAMPLE.md / DESIGN.md for the TPU tiling rationale)."""
+from repro.kernels.ops import estep_stats, gmm_logpdf, kmeans_assign
+from repro.kernels import ref
+
+__all__ = ["estep_stats", "gmm_logpdf", "kmeans_assign", "ref"]

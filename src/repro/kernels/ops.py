@@ -1,0 +1,103 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding to TPU tile boundaries (lanes = 128, tunable N/K blocks),
+parameter re-packing into the matmul-identity form, and automatic fallback
+to ``interpret=True`` when not running on TPU (this container is CPU-only;
+interpret mode executes the kernel body in Python and is bit-compatible
+with the TPU lowering at f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.estep_stats import estep_stats_pallas
+from repro.kernels.gmm_logpdf import gmm_logpdf_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+LOG_2PI = 1.8378770664093453
+_NEG_BIG = -1e30
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pack_params(means, variances, log_weights, d_pad, k_pad, pad_c=0.0):
+    """Repack (means, variances) into (a, b, c) for the matmul identity,
+    padded to (d_pad, k_pad)."""
+    k, d = means.shape
+    inv_var = 1.0 / variances
+    a = jnp.zeros((d_pad, k_pad), jnp.float32).at[:d, :k].set(
+        (-0.5 * inv_var).T)
+    b = jnp.zeros((d_pad, k_pad), jnp.float32).at[:d, :k].set(
+        (means * inv_var).T)
+    cvec = -0.5 * (jnp.sum(means * means * inv_var, axis=-1)
+                   + jnp.sum(jnp.log(variances), axis=-1) + d * LOG_2PI)
+    if log_weights is not None:
+        cvec = cvec + log_weights
+    c = jnp.full((1, k_pad), pad_c, jnp.float32).at[0, :k].set(cvec)
+    return a, b, c
+
+
+def gmm_logpdf(x: jax.Array, means: jax.Array, variances: jax.Array,
+               log_weights: jax.Array | None = None, *,
+               block_n: int = 256, block_k: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Diagonal-GMM per-component log density, (N, d) -> (N, K) float32."""
+    interpret = _auto_interpret(interpret)
+    n, d = x.shape
+    k = means.shape[0]
+    n_pad, k_pad, d_pad = _round_up(n, block_n), _round_up(k, block_k), _round_up(d, 128)
+    a, b, c = _pack_params(means, variances, log_weights, d_pad, k_pad)
+    xp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(x)
+    out = gmm_logpdf_pallas(xp, a, b, c, block_n=block_n, block_k=block_k,
+                            interpret=interpret)
+    return out[:n, :k]
+
+
+def estep_stats(x: jax.Array, means: jax.Array, variances: jax.Array,
+                log_weights: jax.Array,
+                sample_weight: jax.Array | None = None, *,
+                block_n: int = 512, interpret: bool | None = None):
+    """Fused E-step statistics. Returns (s0 (K,), s1 (K,d), s2 (K,d), ll)."""
+    interpret = _auto_interpret(interpret)
+    n, d = x.shape
+    k = means.shape[0]
+    n_pad = _round_up(n, block_n)
+    d_pad = _round_up(d, 128)
+    k_pad = _round_up(k, 128)
+    a, b, c = _pack_params(means, variances, log_weights, d_pad, k_pad,
+                           pad_c=_NEG_BIG)
+    xp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(x)
+    w = jnp.ones(n, jnp.float32) if sample_weight is None else sample_weight
+    wp = jnp.zeros((n_pad, 1), jnp.float32).at[:n, 0].set(w)
+    s0, s1, s2, ll = estep_stats_pallas(xp, wp, a, b, c, block_n=block_n,
+                                        interpret=interpret)
+    return s0[0, :k], s1[:k, :d], s2[:k, :d], ll[0, 0]
+
+
+def kmeans_assign(x: jax.Array, centers: jax.Array, *,
+                  block_n: int = 512, interpret: bool | None = None):
+    """Nearest-center assignment. Returns ((N,) int32, (N,) squared dist)."""
+    interpret = _auto_interpret(interpret)
+    n, d = x.shape
+    k = centers.shape[0]
+    n_pad = _round_up(n, block_n)
+    d_pad = _round_up(d, 128)
+    k_pad = _round_up(k, 128)
+    xp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(x)
+    ct = jnp.zeros((d_pad, k_pad), jnp.float32).at[:d, :k].set(centers.T)
+    c2 = jnp.full((1, k_pad), 1e30, jnp.float32).at[0, :k].set(
+        jnp.sum(centers * centers, axis=1))
+    idx, d2 = kmeans_assign_pallas(xp, ct, c2, block_n=block_n,
+                                   interpret=interpret)
+    return idx[:n, 0], d2[:n, 0]

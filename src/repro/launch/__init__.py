@@ -1,0 +1,1 @@
+"""Launcher: meshes, step functions, trainer, dry-run driver."""

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination against the production mesh, record memory analysis, cost
+analysis and the collective schedule (bytes per collective op parsed from
+the optimized HLO).
+
+MUST be run as its own process (the two lines above force a 512-device host
+platform before jax initializes — do not import this module from tests).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_jitted
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict, str]:
+    """-> ({name: [lines]}, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and (line.startswith("ENTRY") or line.startswith("%")
+                  or line.strip().startswith("%")
+                  or line.strip().startswith("ENTRY")):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic: a scan/while condition compares the induction variable
+    against a constant — take the largest integer constant in the cond."""
+    best = 1
+    for ln in cond_lines:
+        for c in _CONST_RE.findall(ln):
+            best = max(best, int(c))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic, with while-loop bodies multiplied by
+    their trip counts (XLA's cost_analysis counts loop bodies ONCE, which
+    silently drops the per-layer-scan collectives — we walk the computation
+    graph ourselves)."""
+    comps, entry = _split_computations(hlo_text)
+    memo: dict[str, dict] = {}
+
+    def analyze(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+        memo[name] = out  # break cycles defensively
+        for ls in comps.get(name, ()):
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(",
+                         ls)
+            if not m:
+                continue
+            type_str, opname = m.groups()
+            matched = False
+            for c in _COLLECTIVES:
+                if opname in (c, c + "-start"):
+                    out[c]["count"] += 1
+                    out[c]["bytes"] += _shape_bytes(type_str)
+                    matched = True
+                    break
+            if matched:
+                continue
+            if opname == "while":
+                wm = _WHILE_RE.search(ls)
+                if wm:
+                    cond, body = wm.groups()
+                    trips = _trip_count(comps.get(cond, []))
+                    sub = analyze(body)
+                    for c in _COLLECTIVES:
+                        out[c]["count"] += sub[c]["count"] * trips
+                        out[c]["bytes"] += sub[c]["bytes"] * trips
+            elif opname in ("fusion", "call", "conditional", "custom-call"):
+                for callee in _CALL_RE.findall(ls):
+                    sub = analyze(callee)
+                    for c in _COLLECTIVES:
+                        out[c]["count"] += sub[c]["count"]
+                        out[c]["bytes"] += sub[c]["bytes"]
+        return out
+
+    if entry is None:
+        return {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    return analyze(entry)
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+            variant: str = "full", save_hlo: bool = False,
+            decode_cache_mode: str = "hd", tag: str = "") -> dict:
+    mesh_name = ("multipod" if multi_pod else "singlepod") + tag
+    cfg = get_config(arch, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    jitted, args = build_jitted(cfg, shape, mesh, multi_pod=multi_pod,
+                                decode_cache_mode=decode_cache_mode)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kind": INPUT_SHAPES[shape]["kind"],
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "peak_bytes": int(mem.argument_size_in_bytes
+                              + max(mem.output_size_in_bytes,
+                                    mem.temp_size_in_bytes)),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            "transcendentals": float(cost.get("transcendentals", -1.0)),
+        },
+        "collectives": coll,
+        "collective_bytes_total": sum(v["bytes"] for v in coll.values()),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape}__{mesh_name}"
+    (out_dir / f"{name}.json").write_text(json.dumps(result, indent=2))
+    if save_hlo:
+        (out_dir / f"{name}.hlo.txt").write_text(hlo)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="full")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--decode-cache-mode", default="seq",
+                    choices=["hd", "seq"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multipod" if mp else "singlepod"
+                name = f"{arch}__{shape}__{mesh_name}"
+                if args.skip_existing and (out_dir / f"{name}.json").exists():
+                    print(f"[skip] {name}")
+                    continue
+                try:
+                    r = run_one(arch, shape, mp, out_dir, args.variant,
+                                args.save_hlo, args.decode_cache_mode,
+                                args.tag)
+                    print(f"[ok] {name}: flops={r['cost']['flops']:.3e} "
+                          f"coll={r['collective_bytes_total']:.3e}B "
+                          f"compile={r['compile_s']}s", flush=True)
+                except Exception as e:
+                    failures.append((name, repr(e)))
+                    print(f"[FAIL] {name}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} failures:")
+        for n, e in failures:
+            print(" ", n, e)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

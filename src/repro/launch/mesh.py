@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — only launch/dryrun.py (which sets the
+512-device host-platform flag before any jax import) actually builds the
+production meshes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices actually exist (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def fsdp_axes(multi_pod: bool):
+    """The spec entry used for FSDP sharding of parameters: batch-parallel
+    axes also shard the parameter d_model/d_ff dimensions (ZeRO-3 style)."""
+    return ("pod", "data") if multi_pod else "data"
+
+
+def batch_axes(multi_pod: bool, global_batch: int):
+    """Axes over which the batch dimension shards (None when the batch is
+    too small to shard, e.g. long-context B=1 decode)."""
+    total = 32 if multi_pod else 16
+    if global_batch % total == 0:
+        return ("pod", "data") if multi_pod else "data"
+    if global_batch % 16 == 0:
+        return "data"
+    return None

@@ -1,0 +1,174 @@
+"""Jit-able step functions (train / prefill / decode) with their sharding
+specs — shared by the real trainer, the serving loop, and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, decode_capacity, uses_ring
+from repro.launch.mesh import batch_axes, fsdp_axes
+from repro.models.transformer import (ModelConfig, cache_specs, decode_step,
+                                      init_cache, init_params, param_specs,
+                                      prefill_forward, train_forward)
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_opt_state,
+                               opt_state_specs)
+
+
+def _serve_dtype(params_shape, cfg):
+    """Serve weights in the compute dtype (bf16): halves weight traffic."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, cfg.dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), params_shape)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, multi_pod: bool,
+                kind: str):
+    sh = INPUT_SHAPES[shape_name]
+    bax = batch_axes(multi_pod, sh["global_batch"])
+    specs = {"tokens": P(bax, None)}
+    if kind == "train":
+        specs["targets"] = P(bax, None)
+        specs["mask"] = P(bax, None)
+    if cfg.frontend == "vision":
+        specs["prefix"] = P(bax, None, None)
+    if cfg.n_enc_layers:
+        specs["src_embeds"] = P(bax, None, None)
+    return specs
+
+
+# ----------------------------------------------------------------------
+# Step functions
+# ----------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            # cast params to the compute dtype ONCE, outside the layer
+            # scan: FSDP all-gathers then move bf16, not f32 (halves the
+            # dominant weight-gather traffic; §Perf iteration 4). The
+            # astype boundary routes gradients back to f32 masters.
+            p_compute = jax.tree.map(
+                lambda a: a.astype(cfg.dtype)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a, p)
+            loss, metrics = train_forward(p_compute, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: int, ring: bool = False):
+    def prefill_step(params, batch):
+        return prefill_forward(params, cfg, batch, capacity, ring)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ring: bool = False):
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos, ring=ring)
+
+    return serve_step
+
+
+# ----------------------------------------------------------------------
+# Jit assembly for one (arch, shape, mesh) combination
+# ----------------------------------------------------------------------
+
+def build_jitted(cfg: ModelConfig, shape_name: str, mesh, *,
+                 multi_pod: bool,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 decode_cache_mode: str = "seq"):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    from repro.configs.base import input_specs, sds
+
+    from repro.models import sharding_ctx
+
+    sh = INPUT_SHAPES[shape_name]
+    kind = sh["kind"]
+    fsdp = fsdp_axes(multi_pod)
+    bax = batch_axes(multi_pod, sh["global_batch"])
+    expert_ax = None
+    if cfg.moe is not None and cfg.moe.n_experts % 16 == 0:
+        expert_ax = "model"
+    sharding_ctx.set_axes(batch=bax, model="model", expert=expert_ax)
+    p_specs = param_specs(cfg, fsdp=fsdp, model_axis_size=16)
+    params_shape = jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg))
+
+    if kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        step = make_train_step(cfg, opt_cfg)
+        o_specs = opt_state_specs(p_specs)
+        opt_shape = jax.eval_shape(lambda: init_opt_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         params_shape)))
+        b_specs = batch_specs(cfg, shape_name, multi_pod, "train")
+        in_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, o_specs),
+                 to_shardings(mesh, b_specs))
+        out_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, o_specs),
+                  None)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+        batch = input_specs(cfg, shape_name)["batch"]
+        return jitted, (params_shape, opt_shape, batch)
+
+    if kind == "prefill":
+        # Serving param layout (§Perf iteration 2): weights are stationary
+        # in inference, so FSDP only adds per-layer all-gathers — replicate
+        # over the data axes, shard over model, and serve in bf16.
+        p_specs = param_specs(cfg, fsdp=None, model_axis_size=16)
+        params_shape = _serve_dtype(params_shape, cfg)
+        capacity = sh["seq_len"]
+        step = make_prefill_step(cfg, capacity)
+        b_specs = batch_specs(cfg, shape_name, multi_pod, "prefill")
+        c_specs = cache_specs(cfg, bax, None)
+        in_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, b_specs))
+        out_sh = (to_shardings(mesh, P(bax, "model")),
+                  to_shardings(mesh, c_specs))
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        batch = input_specs(cfg, shape_name)["batch"]
+        return jitted, (params_shape, batch)
+
+    # decode kinds — same serving param layout as prefill
+    p_specs = param_specs(cfg, fsdp=None, model_axis_size=16)
+    params_shape = _serve_dtype(params_shape, cfg)
+    ring = uses_ring(shape_name)
+    capacity = decode_capacity(cfg, shape_name)
+    b = sh["global_batch"]
+    seq_axis = None
+    if bax is None:
+        # B too small to shard: shard the cache length over the data axis
+        seq_axis = "data"
+    step = make_decode_step(cfg, ring)
+    c_specs = cache_specs(cfg, bax, seq_axis, decode_cache_mode)
+    enc_len = (sh["seq_len"] // cfg.src_ratio) if cfg.n_enc_layers else 0
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, b, capacity, enc_len=enc_len))
+    in_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, c_specs),
+             to_shardings(mesh, P(bax)), to_shardings(mesh, P()))
+    out_sh = (to_shardings(mesh, P(bax, "model")),
+              to_shardings(mesh, c_specs))
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    from repro.configs.base import sds
+    token = sds((b,), jnp.int32)
+    pos = sds((), jnp.int32)
+    return jitted, (params_shape, cache_shape, token, pos)

@@ -1,0 +1,85 @@
+"""Training driver: runs real steps of any registered architecture on the
+available devices (CPU smoke / host mesh) or lowers against the production
+mesh. The FedGenGMM activation monitor (repro.monitor) can be attached to
+collect pooled hidden-state features during training.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --variant smoke --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import batches
+from repro.launch.steps import make_train_step
+from repro.models.transformer import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.checkpoint.store import save_checkpoint
+
+
+def train(arch: str, variant: str = "smoke", steps: int = 50,
+          batch_size: int = 8, seq_len: int = 128, lr: float = 3e-4,
+          seed: int = 0, log_every: int = 10,
+          checkpoint_path: str | None = None):
+    cfg = get_config(arch, variant)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                          total_steps=steps)
+    params = init_params(jax.random.key(seed), cfg)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for i, b in enumerate(batches(seed, cfg.vocab_size, batch_size, seq_len,
+                                  steps)):
+        batch = {"tokens": jnp.asarray(b.tokens),
+                 "targets": jnp.asarray(b.targets),
+                 "mask": jnp.asarray(b.mask)}
+        if cfg.frontend == "vision":
+            batch["prefix"] = jnp.asarray(
+                rng.normal(0, 0.02, (batch_size, cfg.n_prefix, cfg.d_model)),
+                cfg.dtype)
+        if cfg.n_enc_layers:
+            batch["src_embeds"] = jnp.asarray(
+                rng.normal(0, 0.02,
+                           (batch_size, seq_len // cfg.src_ratio,
+                            cfg.d_model)), cfg.dtype)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % log_every == 0 or i == 0:
+            print(f"step {i + 1:4d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params,
+                        {"step": steps, "arch": arch, "variant": variant})
+        print(f"checkpoint -> {checkpoint_path}")
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+    _, losses = train(args.arch, args.variant, args.steps, args.batch,
+                      args.seq, args.lr, checkpoint_path=args.checkpoint)
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

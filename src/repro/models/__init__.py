@@ -1,0 +1,9 @@
+"""Model substrate: generic transformer stack + per-family blocks."""
+from repro.models.transformer import (ModelConfig, cache_specs, decode_step,
+                                      init_cache, init_params, param_specs,
+                                      prefill_forward, train_forward)
+from repro.models.common import count_params
+
+__all__ = ["ModelConfig", "cache_specs", "decode_step", "init_cache",
+           "init_params", "param_specs", "prefill_forward", "train_forward",
+           "count_params"]

@@ -1,0 +1,254 @@
+"""Grouped-query attention with RoPE, causal/sliding-window masking,
+query-chunked computation (bounded VMEM/HBM transient), and KV-cache decode
+(full cache or ring buffer for sliding-window long-context).
+
+Sharding design (see EXPERIMENTS.md #Perf iteration 1):
+- TRAIN/PREFILL use a flat-head Megatron layout: q projects directly to
+  (B, S, H, hd) with H sharded on the model axis (every assigned arch has
+  H divisible by 16); k/v project model-REPLICATED to (B, S, KV, hd), are
+  repeated to H flat heads and locally sliced. Scores and attention output
+  stay head-sharded with ZERO collectives; the only tensor-parallel
+  collective is the canonical row-parallel all-reduce after w_o.
+  (The earlier head_dim-sharded layout psum'd the full (cq, Sk) score tile
+  every chunk - measured 5e13 collective bytes/device on deepseek-67b
+  prefill_32k; this layout removes ~all of it.)
+- DECODE keeps the grouped (B, C, KV, hd) cache. Two cache shardings are
+  supported by the launcher: "hd" (head_dim on model) and "seq"
+  (flash-decoding style: cache length on model, distributed softmax).
+
+Layout conventions:
+  activations  x : (B, S, D)
+  flat q/k/v     : (B, S, H, hd)   (k/v repeated kv-major: h = kv*G + g)
+  kv cache       : {"k": (B, C, KV, hd), "v": ...}
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import apply_rope, dense_init, make_rope
+from repro.models.sharding_ctx import constrain
+
+NEG_INF = -1e30
+
+
+class AttnDims(NamedTuple):
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding window; None = full attention
+
+
+# ----------------------------------------------------------------------
+# Params
+# ----------------------------------------------------------------------
+
+def attn_init(key, d_model: int, dims: AttnDims, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": dense_init(kq, (d_model, h, hd), d_model, dtype),
+        "wk": dense_init(kk, (d_model, kvh, hd), d_model, dtype),
+        "wv": dense_init(kv, (d_model, kvh, hd), d_model, dtype),
+        "wo": dense_init(ko, (h, hd, d_model), h * hd, dtype),
+    }
+
+
+def attn_specs(fsdp_axis: Optional[str] = "data") -> dict:
+    """Flat q heads sharded on model (column-parallel); kv projections
+    replicated on model (small: D*KV*hd) so the head repeat is a local
+    slice; w_o row-parallel (one all-reduce per layer)."""
+    return {
+        "wq": P(fsdp_axis, "model", None),
+        "wk": P(fsdp_axis, None, None),
+        "wv": P(fsdp_axis, None, None),
+        "wo": P("model", None, fsdp_axis),
+    }
+
+
+# ----------------------------------------------------------------------
+# Core attention math (flat heads)
+# ----------------------------------------------------------------------
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+          window: Optional[int]) -> jax.Array:
+    """(..., Sq, Sk) additive mask from absolute positions."""
+    rel = q_pos[..., :, None] - k_pos[..., None, :]
+    valid = jnp.ones_like(rel, dtype=jnp.bool_)
+    if causal:
+        valid &= rel >= 0
+    if window is not None:
+        valid &= rel < window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def flat_scores_softmax_out(q, k, v, mask):
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd), mask (Bm,Sq,Sk) -> (B,Sq,H,hd).
+
+    Head-sharded end to end; softmax in f32."""
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    # bf16 einsum (TPU accumulates f32 in the MXU regardless); the f32
+    # cast happens at the softmax boundary so backward cotangents flow
+    # back in bf16 — preferred_element_type=f32 here would make every
+    # downstream gradient (and its collectives) f32 (§Perf iteration 3).
+    scores = jnp.einsum("bqhe,bshe->bhqs", q, k)
+    scores = scores.astype(jnp.float32) * scale + mask[:, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshe->bqhe", w.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def gqa_scores_softmax_out(q, k, v, mask):
+    """Grouped decode form. q (B,Sq,KV,G,hd), k/v (B,Sk,KV,hd),
+    mask (Bm,Sq,Sk) -> (B,Sq,KV,G,hd)."""
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+    scores = scores.astype(jnp.float32) * scale + mask[:, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def chunked_causal_attention(q, k, v, q_positions, k_positions, *,
+                             causal: bool = True,
+                             window: Optional[int] = None,
+                             chunk: int = 256) -> jax.Array:
+    """Flat-head full-sequence attention, scanned over query chunks so the
+    (cq, Sk) score tile (not (Sq, Sk)) is the peak transient."""
+    b, sq = q.shape[0], q.shape[1]
+    if sq <= chunk:
+        mask = _mask(q_positions, k_positions, causal, window)  # (Sq, Sk)
+        return flat_scores_softmax_out(q, k, v, mask[None])
+    pad = (-sq) % chunk
+    if pad:  # pad queries to a chunk multiple (positions repeat the last one)
+        q = jnp.pad(q, ((0, 0), (0, pad)) + ((0, 0),) * (q.ndim - 2))
+        q_positions = jnp.concatenate(
+            [q_positions, jnp.broadcast_to(q_positions[-1], (pad,))])
+        out = chunked_causal_attention(q, k, v, q_positions, k_positions,
+                                       causal=causal, window=window,
+                                       chunk=chunk)
+        return out[:, :sq]
+    nc = sq // chunk
+    qc = q.reshape(b, nc, chunk, *q.shape[2:]).swapaxes(0, 1)
+    pc = q_positions.reshape(nc, chunk)
+
+    @jax.checkpoint  # recompute (cq, Sk) scores in backward: flash-style
+    def chunk_attn(qi, pi):
+        mask = _mask(pi, k_positions, causal, window)            # (cq, Sk)
+        return flat_scores_softmax_out(qi, k, v, mask[None])
+
+    def one(_, qp):
+        qi, pi = qp
+        return None, chunk_attn(qi, pi)
+
+    _, out = jax.lax.scan(one, None, (qc, pc))
+    return out.swapaxes(0, 1).reshape(b, sq, *q.shape[2:])
+
+
+# ----------------------------------------------------------------------
+# Block-level API
+# ----------------------------------------------------------------------
+
+def _project_q_flat(params, x):
+    """x (B,S,D) -> q (B,S,H,hd), head-sharded (column parallel)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+    return constrain(q, ("batch", None, "model", None))
+
+
+def _project_kv(params, x):
+    """x (B,S,D) -> k, v (B,S,KV,hd), model-replicated."""
+    k = jnp.einsum("bsd,dkh->bskh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", x, params["wv"].astype(x.dtype))
+    return k, v
+
+
+def _repeat_heads(kv, g: int):
+    """(B,S,KV,hd) -> (B,S,H,hd) flat kv-major; a local slice under the
+    head-sharded constraint (kv is model-replicated)."""
+    rep = jnp.repeat(kv, g, axis=2)
+    return constrain(rep, ("batch", None, "model", None))
+
+
+def _project_qkv(params, x, dims: AttnDims):
+    """Grouped projection (decode path). Returns q (B,S,KV,G,hd),
+    k/v (B,S,KV,hd)."""
+    b, s, _ = x.shape
+    g = dims.n_heads // dims.n_kv_heads
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+    q = q.reshape(b, s, dims.n_kv_heads, g, dims.head_dim)
+    k, v = _project_kv(params, x)
+    return q, k, v
+
+
+def attention_forward(params, x, positions, dims: AttnDims, *,
+                      causal: bool = True, chunk: int = 256,
+                      return_kv: bool = False):
+    """Training / prefill path (flat heads). positions (S,) absolute.
+    Returns (out (B,S,D)[, (k, v) grouped cache material])."""
+    g = dims.n_heads // dims.n_kv_heads
+    q = _project_q_flat(params, x)                       # (B,S,H,hd)
+    k, v = _project_kv(params, x)                        # (B,S,KV,hd)
+    cos, sin = make_rope(positions, dims.head_dim, dims.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kf = _repeat_heads(k, g)
+    vf = _repeat_heads(v, g)
+    out = chunked_causal_attention(q, kf, vf, positions, positions,
+                                   causal=causal, window=dims.window,
+                                   chunk=chunk)
+    out = constrain(out, ("batch", None, "model", None))
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+    out = constrain(out, ("batch", None, None))          # row-parallel psum
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(params, x, pos, cache_k, cache_v, dims: AttnDims, *,
+                     ring: bool = False, window: Optional[int] = None):
+    """One-token decode. x (B,1,D); pos () int32 absolute position;
+    cache_k/v (B, C, KV, hd) hold rotated keys for positions < pos.
+
+    ring=True treats the cache as a ring buffer of size C == window (the
+    sub-quadratic long-context variant); otherwise C is the full context
+    and the new kv is written at index ``pos``.
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    c = cache_k.shape[1]
+    q, k, v = _project_qkv(params, x, dims)          # Sq = 1
+    cos, sin = make_rope(pos[None].astype(jnp.float32), dims.head_dim,
+                         dims.rope_theta)
+    q = apply_rope(q.reshape(b, 1, -1, dims.head_dim), cos, sin) \
+        .reshape(q.shape)
+    k = apply_rope(k, cos, sin)
+    slot = pos % c if ring else jnp.minimum(pos, c - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    idx = jnp.arange(c)
+    if ring:
+        # entry i holds absolute position pos - ((pos - i) mod C) (>= 0 valid)
+        abs_pos = pos - jnp.mod(pos - idx, c)
+        valid = abs_pos >= 0
+        if window is not None and window < c:
+            valid &= (pos - abs_pos) < window
+    else:
+        valid = idx <= pos
+        if window is not None:  # full cache, windowed attention (SWA)
+            valid &= idx > pos - window
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, :]  # (1, 1, C)
+    out = gqa_scores_softmax_out(q, cache_k.astype(q.dtype),
+                                 cache_v.astype(q.dtype), mask)
+    out = out.reshape(b, 1, dims.n_heads, dims.head_dim)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache_k, cache_v

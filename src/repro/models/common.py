@@ -1,0 +1,78 @@
+"""Shared model building blocks: norms, RoPE, initializers, activations.
+
+Everything is functional: params are plain nested dicts of jax.Arrays, and
+every init function has a twin that returns the matching PartitionSpec
+pytree (same code path => specs can't drift from params).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def make_rope(positions: jax.Array, head_dim: int,
+              theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin tables (..., head_dim//2)."""
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+        / head_dim)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# ----------------------------------------------------------------------
+# Parameter init helpers (value + spec built together)
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(in_axis_size)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

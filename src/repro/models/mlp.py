@@ -1,0 +1,37 @@
+"""Dense feed-forward blocks: gated (SwiGLU/GeGLU) and plain."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import activation_fn, dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), d_ff, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k3, (d_model, d_ff), d_model, dtype)
+    return p
+
+
+def mlp_specs(gated: bool = True, fsdp_axis="data") -> dict:
+    p = {"w_up": P(fsdp_axis, "model"), "w_down": P("model", fsdp_axis)}
+    if gated:
+        p["w_gate"] = P(fsdp_axis, "model")
+    return p
+
+
+def mlp_forward(params, x, activation: str = "silu"):
+    act = activation_fn(activation)
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"].astype(x.dtype)

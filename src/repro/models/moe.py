@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN: GShard/Switch-style capacity-based token routing
+(the TPU-native dispatch/combine einsum formulation, which GSPMD lowers to
+all-to-all when experts are sharded), top-k gating with load-balance aux
+loss, optional always-on shared experts (DeepSeekMoE).
+
+Tokens are routed within fixed-size groups so the dispatch tensor stays
+(G, Tg, E, C) with bounded C = ceil(Tg * top_k * capacity_factor / E) —
+group size is a tunable memory/quality knob (and a §Perf hillclimb axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import activation_fn, dense_init
+from repro.models.sharding_ctx import constrain
+from repro.models.mlp import mlp_forward, mlp_init, mlp_specs
+
+
+class MoEDims(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_ff: int                  # per-expert hidden width
+    n_shared: int = 0          # DeepSeekMoE shared experts (always on)
+    capacity_factor: float = 1.25
+    group_size: int = 1024
+    expert_sharding: str = "auto"  # "expert" | "tensor" | "auto"
+
+
+def _expert_axis_sharded(dims: MoEDims, model_axis_size: int) -> bool:
+    if dims.expert_sharding == "expert":
+        return True
+    if dims.expert_sharding == "tensor":
+        return False
+    return dims.n_experts % model_axis_size == 0
+
+
+def moe_init(key, d_model: int, dims: MoEDims, dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, f = dims.n_experts, dims.d_ff
+    p = {
+        "router": dense_init(kr, (d_model, e), d_model, dtype),
+        "w_gate": dense_init(kg, (e, d_model, f), d_model, dtype),
+        "w_up": dense_init(ku, (e, d_model, f), d_model, dtype),
+        "w_down": dense_init(kd, (e, f, d_model), f, dtype),
+    }
+    if dims.n_shared:
+        p["shared"] = mlp_init(ks, d_model, dims.n_shared * f, gated=True,
+                               dtype=dtype)
+    return p
+
+
+def moe_specs(dims: MoEDims, model_axis_size: int, fsdp_axis="data") -> dict:
+    if _expert_axis_sharded(dims, model_axis_size):
+        w = P("model", fsdp_axis, None)   # expert parallelism
+        wd = P("model", None, fsdp_axis)
+    else:
+        w = P(None, fsdp_axis, "model")   # tensor parallelism inside experts
+        wd = P(None, "model", fsdp_axis)
+    p = {"router": P(fsdp_axis, None), "w_gate": w, "w_up": w, "w_down": wd}
+    if dims.n_shared:
+        p["shared"] = mlp_specs(gated=True, fsdp_axis=fsdp_axis)
+    return p
+
+
+def moe_forward(params, x, dims: MoEDims, activation: str = "silu"):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    tokens = x.reshape(t, d)
+    gs = min(dims.group_size, t)
+    pad = (-t) % gs
+    if pad:  # zero-pad to a group multiple; padded rows are sliced off below
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    g = (t + pad) // gs
+    tokens = tokens.reshape(g, gs, d)
+    tokens = constrain(tokens, ("batch", None, None))
+    e, k = dims.n_experts, dims.top_k
+    cap = int(math.ceil(gs * k * dims.capacity_factor / e))
+    cap = min(cap, gs)
+
+    logits = (tokens @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (g, gs, E)
+    top_w, top_i = jax.lax.top_k(logits, k)                     # (g, gs, K)
+    top_w = jax.nn.softmax(top_w, axis=-1)                      # renormalize
+
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)        # (g, gs, K, E)
+    # priority order: all rank-0 choices first, then rank-1, ...
+    prio = onehot.transpose(0, 2, 1, 3).reshape(g, k * gs, e)   # (g, K*gs, E)
+    pos = jnp.cumsum(prio, axis=1) - 1.0                        # position in expert
+    keep = (pos < cap).astype(jnp.float32) * prio
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) \
+        * keep[..., None]
+    slot = slot.reshape(g, k, gs, e, cap).transpose(0, 2, 1, 3, 4)  # (g,gs,K,E,C)
+
+    dispatch = jnp.sum(slot, axis=2)                            # (g, gs, E, C)
+    combine = jnp.sum(slot * top_w[..., None, None], axis=2)    # (g, gs, E, C)
+
+    # ---- expert computation (dispatch/combine einsums = all-to-all) ----
+    # bf16 throughout: the dispatch contraction has <= 1 nonzero per
+    # (e, c) slot so there is no accumulation error, and keeping outputs
+    # bf16 keeps the BACKWARD token tensors (and their collectives) bf16.
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), tokens)
+    xin = constrain(xin, ("batch", "expert", None, None))
+    act = activation_fn(activation)
+    h = act(jnp.einsum("gecd,edf->gecf", xin, params["w_gate"].astype(x.dtype))) \
+        * jnp.einsum("gecd,edf->gecf", xin, params["w_up"].astype(x.dtype))
+    xout = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    xout = constrain(xout, ("batch", "expert", None, None))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), xout)
+
+    # ---- load-balance aux loss (Switch eq. 4, averaged over groups) ----
+    frac_dispatched = jnp.mean(jnp.sum(dispatch, axis=-1), axis=1)  # (g, E)
+    mean_prob = jnp.mean(probs, axis=1)                             # (g, E)
+    aux = e * jnp.mean(jnp.sum(frac_dispatched * mean_prob, axis=-1))
+
+    out = constrain(out, ("batch", None, None))
+    out = out.reshape(g * gs, d)[:t].reshape(b, s, d)
+    if dims.n_shared:
+        out = out + mlp_forward(params["shared"], x, activation)
+    return out, aux

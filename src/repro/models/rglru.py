@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin temporal block).
+
+Structure (Griffin recurrent block):
+    x -> [linear -> gelu] gate branch
+      -> [linear -> causal depthwise conv1d(w=4) -> RG-LRU] recurrent branch
+    out = W_out (gate * recurrent)
+
+RG-LRU:  r_t = sigmoid(W_r x),  i_t = sigmoid(W_i x)
+         a_t = exp(-c * softplus(lambda) * r_t)          (c = 8)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: training/prefill uses jax.lax.associative_scan (log-depth
+parallel prefix) rather than a sequential loop — the recurrence is linear in
+h, so the (a, b) affine composition is associative. Decode keeps an O(1)
+state: (h (B, d_rnn), conv tail (B, 3, d_rnn)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import dense_init
+from repro.models.sharding_ctx import constrain
+
+_C = 8.0
+CONV_W = 4
+
+
+class RGLRUDims(NamedTuple):
+    d_rnn: int
+
+
+def rglru_init(key, d_model: int, dims: RGLRUDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    dr = dims.d_rnn
+    lam = jax.random.uniform(ks[6], (dr,), jnp.float32, 0.9, 0.999)
+    return {
+        "w_gate_in": dense_init(ks[0], (d_model, dr), d_model, dtype),
+        "w_rec_in": dense_init(ks[1], (d_model, dr), d_model, dtype),
+        "conv_w": dense_init(ks[2], (CONV_W, dr), CONV_W, dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_r": dense_init(ks[3], (dr, dr), dr, dtype),
+        "w_i": dense_init(ks[4], (dr, dr), dr, dtype),
+        # lambda parametrized so softplus(log_lambda) spans useful decay range
+        "log_lambda": jnp.log(jnp.exp(-jnp.log(lam) / _C) - 1.0).astype(dtype),
+        "w_out": dense_init(ks[5], (dr, d_model), dr, dtype),
+    }
+
+
+def rglru_specs(fsdp_axis="data") -> dict:
+    return {
+        "w_gate_in": P(fsdp_axis, "model"),
+        "w_rec_in": P(fsdp_axis, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "w_r": P(fsdp_axis, "model"),
+        "w_i": P(fsdp_axis, "model"),
+        "log_lambda": P("model"),
+        "w_out": P("model", fsdp_axis),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv width 4 as shifted adds. x (B,S,dr)."""
+    out = x * w[CONV_W - 1]
+    for j in range(1, CONV_W):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[CONV_W - 1 - j]
+    return out + b
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(u @ params["w_r"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ params["w_i"].astype(u.dtype))
+    decay = jax.nn.softplus(params["log_lambda"].astype(jnp.float32))
+    a = jnp.exp(-_C * decay * r.astype(jnp.float32))
+    bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * \
+        (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, bterm
+
+
+def rglru_forward(params, x):
+    """Training / prefill. x (B, S, D) ->
+    (out (B,S,D), state {"h": (B,dr) f32, "conv": (B,3,dr) pre-conv tail})."""
+    u_pre = constrain(x @ params["w_rec_in"].astype(x.dtype),
+                      ("batch", None, "model"))                 # (B,S,dr)
+    u = _causal_conv(u_pre, params["conv_w"].astype(u_pre.dtype),
+                     params["conv_b"].astype(u_pre.dtype))
+    a, bterm = _gates(params, u)
+    # h_t = a_t h_{t-1} + b_t  — associative affine composition, log-depth
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    gate = jax.nn.gelu(x @ params["w_gate_in"].astype(x.dtype))
+    out = (gate * h.astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    # decode handoff: last hidden state + last 3 pre-conv inputs
+    s = x.shape[1]
+    if s >= CONV_W - 1:
+        tail = u_pre[:, s - (CONV_W - 1):]
+    else:
+        tail = jnp.pad(u_pre, ((0, 0), (CONV_W - 1 - s, 0), (0, 0)))
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": tail}
+
+
+def rglru_decode(params, x, h_prev, conv_tail):
+    """One-token decode. x (B,1,D); h_prev (B,dr); conv_tail (B,3,dr) holds
+    the last 3 *pre-conv* inputs. Returns (out, h, new_conv_tail)."""
+    u_new = (x @ params["w_rec_in"].astype(x.dtype))[:, 0]      # (B, dr)
+    w = params["conv_w"].astype(u_new.dtype)
+    hist = jnp.concatenate([conv_tail.astype(u_new.dtype),
+                            u_new[:, None]], axis=1)            # (B, 4, dr)
+    u = jnp.einsum("bwd,wd->bd", hist, w) + params["conv_b"].astype(u_new.dtype)
+    a, bterm = _gates(params, u)
+    h = a * h_prev + bterm                                      # (B, dr) f32
+    gate = jax.nn.gelu((x @ params["w_gate_in"].astype(x.dtype))[:, 0])
+    out = (gate * h.astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    return out[:, None], h, hist[:, 1:].astype(conv_tail.dtype)

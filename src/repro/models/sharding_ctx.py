@@ -1,0 +1,52 @@
+"""Logical-axis sharding constraints for model internals.
+
+GSPMD propagation alone mis-shards attention internals: the fused
+(H*hd) projection output is model-sharded, but after the reshape to
+(B, S, KV, G, hd) the model axis no longer divides the KV dim for GQA
+(e.g. 8 kv heads on a 16-way model axis), so the partitioner drops batch
+sharding and falls back to full rematerialization (observed in the
+buffer-assignment dump: f32[256,4096,...] global-batch temporaries per
+device). The fix is explicit logical constraints: head_dim carries the
+model axis, batch carries the data axes.
+
+The launcher configures the logical->mesh axis mapping before tracing;
+without a mesh context (CPU smoke tests) constraints are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, tuple]
+
+_MAP: dict[str, Axis] = {"batch": None, "model": None, "expert": None}
+_ENABLED = False
+
+
+def set_axes(batch: Axis, model: Axis = "model", expert: Axis = None):
+    """Configure logical axes (call before tracing a step function)."""
+    global _ENABLED
+    _MAP["batch"] = batch
+    _MAP["model"] = model
+    _MAP["expert"] = expert if expert is not None else model
+    _ENABLED = True
+
+
+def clear_axes():
+    global _ENABLED
+    _ENABLED = False
+
+
+def constrain(x, dims: Sequence[Union[str, None]]):
+    """Apply a sharding constraint expressed in logical axis names.
+
+    No-op when axes are not configured or no mesh context is active."""
+    if not _ENABLED:
+        return x
+    spec = P(*[_MAP.get(d) if isinstance(d, str) else d for d in dims])
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except RuntimeError:
+        return x

@@ -1,0 +1,767 @@
+"""Generic multi-architecture transformer stack.
+
+One config object describes every assigned architecture: dense decoders
+(llama-style GQA), MoE (Mixtral / DeepSeekMoE), hybrid recurrent
+(RecurrentGemma: RG-LRU + local attention), xLSTM (mLSTM/sLSTM), VLM
+(prefix patch embeddings + decoder), and encoder-decoder audio
+(Seamless-style: frame embeddings -> encoder, text decoder w/ cross-attn).
+
+Layers are grouped by the repeating ``pattern`` and scanned with
+jax.lax.scan over stacked parameters (rematerialized per group), so a
+95-layer model lowers to a compact HLO. Remainder layers that don't fill a
+full pattern group run unrolled ("tail"); DeepSeekMoE's leading dense
+layers run unrolled ("head").
+
+Three entry points per architecture:
+    train_forward   — full-sequence causal LM loss
+    prefill_forward — forward + KV/state cache construction
+    decode_step     — one token with cache (full, windowed, or ring)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import embed_init, rms_norm
+from repro.models.sharding_ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0
+    activation: str = "silu"
+    gated_mlp: bool = True
+    pattern: tuple = ("attn",)
+    window: Optional[int] = None        # SWA window for "swa" layers
+    local_window: int = 2048            # window for "local_attn" layers
+    rope_theta: float = 10000.0
+    embed_scale: bool = False           # gemma-style sqrt(d) embed scaling
+    # moe
+    moe: Optional[moe_mod.MoEDims] = None
+    first_k_dense: int = 0
+    first_dense_d_ff: int = 0
+    # rglru
+    d_rnn: int = 0
+    # xlstm
+    xlstm: Optional[xlstm_mod.XLSTMDims] = None
+    # encoder-decoder
+    n_enc_layers: int = 0
+    src_ratio: int = 4                  # encoder frames = seq_len // ratio
+    # modality frontends (STUB: input_specs provides the embeddings)
+    frontend: Optional[str] = None      # "vision" | "audio" | None
+    n_prefix: int = 0                   # vision prefix tokens
+    # numerics / scheduling
+    dtype: Any = jnp.bfloat16
+    chunk_q: int = 256
+    loss_chunk: int = 512               # seq-chunked loss (0 = single shot)
+    long_window: int = 4096             # ring-buffer window for long_500k
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_dims(self, window=None) -> attn.AttnDims:
+        return attn.AttnDims(self.n_heads, self.n_kv_heads, self.hd,
+                             self.rope_theta, window)
+
+    @property
+    def n_groups(self) -> int:
+        return (self.n_layers - self.first_k_dense) // len(self.pattern)
+
+    @property
+    def n_tail(self) -> int:
+        return (self.n_layers - self.first_k_dense) % len(self.pattern)
+
+    def layer_types(self) -> list[str]:
+        body = list(self.pattern) * self.n_groups + \
+            list(self.pattern)[: self.n_tail]
+        return ["dense_attn"] * self.first_k_dense + body
+
+
+# ======================================================================
+# Parameter init + partition specs (built by the same code path)
+# ======================================================================
+
+def _layer_init(key, cfg: ModelConfig, ltype: str, dense_ffn: bool = False):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {}
+    if ltype in ("attn", "swa", "local_attn", "dense_attn", "enc_attn",
+                 "xattn"):
+        p["ln1"] = jnp.zeros((d,), jnp.float32)
+        p["attn"] = attn.attn_init(ks[0], d, cfg.attn_dims())
+        if ltype == "xattn":  # decoder layer with cross attention
+            p["lnx"] = jnp.zeros((d,), jnp.float32)
+            p["xattn"] = attn.attn_init(ks[2], d, cfg.attn_dims())
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        if cfg.moe is not None and not dense_ffn and ltype != "enc_attn":
+            p["moe"] = moe_mod.moe_init(ks[1], d, cfg.moe)
+        else:
+            width = cfg.first_dense_d_ff if dense_ffn and \
+                cfg.first_dense_d_ff else cfg.d_ff
+            p["ffn"] = mlp_mod.mlp_init(ks[1], d, width, cfg.gated_mlp)
+    elif ltype == "rglru":
+        p["ln1"] = jnp.zeros((d,), jnp.float32)
+        p["rglru"] = rglru_mod.rglru_init(ks[0], d,
+                                          rglru_mod.RGLRUDims(cfg.d_rnn))
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["ffn"] = mlp_mod.mlp_init(ks[1], d, cfg.d_ff, cfg.gated_mlp)
+    elif ltype == "mlstm":
+        p["ln"] = jnp.zeros((d,), jnp.float32)
+        p["mlstm"] = xlstm_mod.mlstm_init(ks[0], d, cfg.xlstm)
+    elif ltype == "slstm":
+        p["ln"] = jnp.zeros((d,), jnp.float32)
+        p["slstm"] = xlstm_mod.slstm_init(ks[0], d, cfg.xlstm)
+    else:
+        raise ValueError(ltype)
+    return p
+
+
+def _layer_specs(cfg: ModelConfig, ltype: str, fsdp, model_axis_size: int,
+                 dense_ffn: bool = False):
+    p: dict = {}
+    if ltype in ("attn", "swa", "local_attn", "dense_attn", "enc_attn",
+                 "xattn"):
+        p["ln1"] = P(None)
+        p["attn"] = attn.attn_specs(fsdp)
+        if ltype == "xattn":
+            p["lnx"] = P(None)
+            p["xattn"] = attn.attn_specs(fsdp)
+        p["ln2"] = P(None)
+        if cfg.moe is not None and not dense_ffn and ltype != "enc_attn":
+            p["moe"] = moe_mod.moe_specs(cfg.moe, model_axis_size, fsdp)
+        else:
+            p["ffn"] = mlp_mod.mlp_specs(cfg.gated_mlp, fsdp)
+    elif ltype == "rglru":
+        p["ln1"] = P(None)
+        p["rglru"] = rglru_mod.rglru_specs(fsdp)
+        p["ln2"] = P(None)
+        p["ffn"] = mlp_mod.mlp_specs(cfg.gated_mlp, fsdp)
+    elif ltype == "mlstm":
+        p["ln"] = P(None)
+        p["mlstm"] = xlstm_mod.mlstm_specs(fsdp)
+    elif ltype == "slstm":
+        p["ln"] = P(None)
+        p["slstm"] = xlstm_mod.slstm_specs(fsdp)
+    return p
+
+
+def _stack_spec(spec_tree):
+    """Prepend a replicated leading (group) axis to every PartitionSpec."""
+    return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict = {
+        "embed": embed_init(keys[0], (v, d)),
+        "head": embed_init(keys[1], (d, v)),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    # head (unscanned leading dense layers)
+    params["head_layers"] = [
+        _layer_init(jax.random.fold_in(keys[2], i), cfg,
+                    _decoder_ltype(cfg, "dense_attn"),
+                    dense_ffn=True) for i in range(cfg.first_k_dense)]
+    # scanned pattern groups: stack n_groups copies per pattern position
+    blocks = []
+    for pidx, ltype in enumerate(cfg.pattern):
+        per_group = [
+            _layer_init(jax.random.fold_in(keys[3], g * 16 + pidx), cfg,
+                        _decoder_ltype(cfg, ltype))
+            for g in range(cfg.n_groups)]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                      if cfg.n_groups else None)
+    params["blocks"] = blocks
+    params["tail"] = [
+        _layer_init(jax.random.fold_in(keys[4], i), cfg,
+                    _decoder_ltype(cfg, ltype))
+        for i, ltype in enumerate(cfg.pattern[: cfg.n_tail])]
+    if cfg.n_enc_layers:
+        enc_layers = [
+            _layer_init(jax.random.fold_in(keys[5], i), cfg, "enc_attn")
+            for i in range(cfg.n_enc_layers)]
+        params["encoder"] = {
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+            "final_norm": jnp.zeros((d,), jnp.float32),
+        }
+    return params
+
+
+def param_specs(cfg: ModelConfig, fsdp="data", model_axis_size: int = 16):
+    specs: dict = {
+        "embed": P("model", fsdp),
+        "head": P(fsdp, "model"),
+        "final_norm": P(None),
+    }
+    specs["head_layers"] = [
+        _layer_specs(cfg, _decoder_ltype(cfg, "dense_attn"), fsdp,
+                     model_axis_size, dense_ffn=True)
+        for _ in range(cfg.first_k_dense)]
+    specs["blocks"] = [
+        _stack_spec(_layer_specs(cfg, _decoder_ltype(cfg, ltype), fsdp,
+                                 model_axis_size))
+        for ltype in cfg.pattern]
+    specs["tail"] = [
+        _layer_specs(cfg, _decoder_ltype(cfg, ltype), fsdp, model_axis_size)
+        for ltype in cfg.pattern[: cfg.n_tail]]
+    if cfg.n_enc_layers:
+        specs["encoder"] = {
+            "blocks": _stack_spec(
+                _layer_specs(cfg, "enc_attn", fsdp, model_axis_size)),
+            "final_norm": P(None),
+        }
+    return specs
+
+
+# ======================================================================
+# Layer forward (full sequence)
+# ======================================================================
+
+def _decoder_ltype(cfg: ModelConfig, ltype: str) -> str:
+    """Decoder layers grow cross-attention in encoder-decoder models."""
+    if cfg.n_enc_layers and ltype in ("attn", "swa", "dense_attn"):
+        return "xattn"
+    return ltype
+
+
+def _layer_forward(p, cfg: ModelConfig, ltype: str, x, positions,
+                   enc_out=None, causal=True, seq_parallel=False):
+    """Full-sequence layer. Returns (x, aux, state) — state is the decode
+    cache seed (kv / recurrent state) for prefill, else None placeholders.
+
+    With seq_parallel=True (training), the residual stream stays
+    seq-sharded on the model axis between ops (Megatron-SP): each sublayer
+    gathers its input once and reduce-scatters its output, halving the
+    tensor-parallel all-reduce traffic and cutting saved-carry memory 16x.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    state = None
+
+    def gather_in(h):
+        return constrain(h, ("batch", None, None)) if seq_parallel else h
+
+    def scatter_out(o):
+        return constrain(o, ("batch", "model", None)) if seq_parallel else o
+
+    if ltype in ("attn", "swa", "local_attn", "dense_attn", "enc_attn",
+                 "xattn"):
+        window = cfg.window if ltype == "swa" else (
+            cfg.local_window if ltype == "local_attn" else None)
+        dims = cfg.attn_dims(window)
+        h = gather_in(rms_norm(x, p["ln1"]))
+        out, (k, v) = attn.attention_forward(
+            p["attn"], h, positions, dims,
+            causal=(ltype != "enc_attn") and causal, chunk=cfg.chunk_q,
+            return_kv=True)
+        x = x + scatter_out(out)
+        state = {"k": k, "v": v}
+        if ltype == "xattn":
+            hx = rms_norm(x, p["lnx"])
+            xq, _, _ = attn._project_qkv(p["xattn"], hx, dims)
+            # cross attention: no rope, no mask (encoder memory)
+            ek, ev = enc_out
+            b, s = hx.shape[:2]
+            xout = attn.gqa_scores_softmax_out(
+                xq, ek.astype(hx.dtype), ev.astype(hx.dtype),
+                jnp.zeros((1, s, ek.shape[1]), jnp.float32))
+            xout = xout.reshape(b, s, -1, xout.shape[-1])
+            x = x + jnp.einsum("bshe,hed->bsd", xout,
+                               p["xattn"]["wo"].astype(hx.dtype))
+            state["xk"], state["xv"] = ek, ev  # per-layer cross-attn memory
+        h = gather_in(rms_norm(x, p["ln2"]))
+        if "moe" in p:
+            out, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe,
+                                           cfg.activation)
+        else:
+            out = mlp_mod.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + scatter_out(out)
+    elif ltype == "rglru":
+        h = gather_in(rms_norm(x, p["ln1"]))
+        out, state = rglru_mod.rglru_forward(p["rglru"], h)
+        x = x + scatter_out(out)
+        x = x + scatter_out(mlp_mod.mlp_forward(
+            p["ffn"], gather_in(rms_norm(x, p["ln2"])), cfg.activation))
+    elif ltype == "mlstm":
+        h = gather_in(rms_norm(x, p["ln"]))
+        out, state = xlstm_mod.mlstm_forward(p["mlstm"], h, cfg.chunk_q)
+        x = x + scatter_out(out)
+    elif ltype == "slstm":
+        h = gather_in(rms_norm(x, p["ln"]))
+        out, state = xlstm_mod.slstm_forward(p["slstm"], h,
+                                             cfg.xlstm.n_heads)
+        x = x + scatter_out(out)
+    return x, aux, state
+
+
+# ======================================================================
+# Model forward: train
+# ======================================================================
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return constrain(x, ("batch",) + (None,) * (x.ndim - 1))
+
+
+def _run_encoder(params, cfg: ModelConfig, src_embeds):
+    """Bidirectional encoder over frame embeddings. Returns (B,Ssrc,D)."""
+    x = src_embeds.astype(cfg.dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.float32)
+
+    def body(x, p):
+        x, _, _ = _layer_forward(p, cfg, "enc_attn", x, positions,
+                                 causal=False)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["blocks"])
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def _enc_kv(params_layer, cfg: ModelConfig, enc_x):
+    """Precompute cross-attention K/V from encoder output for one layer."""
+    dims = cfg.attn_dims()
+    b, s, _ = enc_x.shape
+    k = jnp.einsum("bsd,dkh->bskh", enc_x,
+                   params_layer["xattn"]["wk"].astype(enc_x.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", enc_x,
+                   params_layer["xattn"]["wv"].astype(enc_x.dtype))
+    return k, v
+
+
+def _backbone(params, cfg: ModelConfig, x, positions, enc_x=None,
+              collect_states: bool = False, seq_parallel: bool = True):
+    """Run all decoder layers. Returns (x, aux_total, states or None)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    states: dict = {"head": [], "blocks": [], "tail": []}
+
+    for p in params["head_layers"]:
+        lt = _decoder_ltype(cfg, "dense_attn")
+        enc_kv = _enc_kv(p, cfg, enc_x) if lt == "xattn" else None
+        x, aux, st = _layer_forward(p, cfg, lt, x, positions, enc_kv,
+                                    seq_parallel=seq_parallel)
+        aux_total += aux
+        states["head"].append(st)
+
+    if cfg.n_groups:
+        def group_body(carry, gparams):
+            x, aux_total = carry
+            sts = []
+            for pidx, ltype in enumerate(cfg.pattern):
+                lt = _decoder_ltype(cfg, ltype)
+                enc_kv = _enc_kv(gparams[pidx], cfg, enc_x) \
+                    if lt == "xattn" else None
+                x, aux, st = _layer_forward(gparams[pidx], cfg, lt, x,
+                                            positions, enc_kv,
+                                            seq_parallel=seq_parallel)
+                aux_total += aux
+                sts.append(st)
+            # Megatron-style sequence parallelism on the inter-group
+            # residual: the scan saves this carry per group for backward,
+            # so sharding its seq dim over the model axis cuts the largest
+            # training buffer by the model-axis size (16x). TRAIN-ONLY:
+            # prefill saves no residuals, so the constraint would only add
+            # an all-gather per group (§Perf iteration 2).
+            if seq_parallel:
+                x = constrain(x, ("batch", "model", None))
+            return (x, aux_total), sts if collect_states else None
+
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        (x, aux_total), block_states = jax.lax.scan(
+            body, (x, aux_total), params["blocks"])
+        states["blocks"] = block_states
+
+    for i, p in enumerate(params["tail"]):
+        lt = _decoder_ltype(cfg, cfg.pattern[i])
+        enc_kv = _enc_kv(p, cfg, enc_x) if lt == "xattn" else None
+        x, aux, st = _layer_forward(p, cfg, lt, x, positions, enc_kv,
+                                    seq_parallel=seq_parallel)
+        aux_total += aux
+        states["tail"].append(st)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, aux_total, (states if collect_states else None)
+
+
+def train_forward(params, cfg: ModelConfig, batch: dict):
+    """batch: tokens (B,S) [, prefix (B,P,D) | src_embeds (B,Ss,D)],
+    targets (B,S), mask (B,S). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    offset = 0
+    if cfg.frontend == "vision" and cfg.n_prefix:
+        x = jnp.concatenate([batch["prefix"].astype(cfg.dtype), x], axis=1)
+        offset = cfg.n_prefix
+    enc_x = None
+    if cfg.n_enc_layers:
+        enc_x = _run_encoder(params, cfg, batch["src_embeds"])
+    positions = jnp.arange(offset + s, dtype=jnp.float32)
+    x, aux, _ = _backbone(params, cfg, x, positions, enc_x)
+    x = x[:, offset:]
+    nll_sum = _chunked_nll(params, cfg, x, batch["targets"], batch["mask"])
+    denom = jnp.maximum(jnp.sum(batch["mask"]), 1.0)
+    loss = nll_sum / denom
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux / max(cfg.n_layers, 1)
+    return loss, {"nll": nll_sum / denom, "aux": aux}
+
+
+def _nll_block(params, cfg: ModelConfig, xc, tc, mc):
+    """Summed NLL of one sequence block. xc (B,cs,D), tc/mc (B,cs)."""
+    logits = (xc @ params["head"].astype(cfg.dtype)).astype(jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # shard-friendly gold-logit extraction: a gather over the (sharded)
+    # vocab axis would force GSPMD to replicate the logits; the masked
+    # reduce below keeps the vocab axis sharded end-to-end.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(vocab_iota == tc[..., None], logits, 0.0),
+                   axis=-1)
+    return jnp.sum((logz - gold) * mc)
+
+
+def _chunked_nll(params, cfg: ModelConfig, x, targets, mask):
+    """Total NLL, scanned over sequence chunks with rematerialization so
+    only one (B, chunk, V) logits block is ever live (forward AND backward).
+    The vocab head is the single largest activation in every assigned
+    config — this is the memory-term optimization that keeps train_4k
+    under the per-device HBM budget."""
+    b, s, d = x.shape
+    cs = cfg.loss_chunk
+    if not cs or s <= cs or s % cs:
+        return _nll_block(params, cfg, x, targets, mask)
+    nc = s // cs
+    xs = x.reshape(b, nc, cs, d).swapaxes(0, 1)
+    ts = targets.reshape(b, nc, cs).swapaxes(0, 1)
+    ms = mask.reshape(b, nc, cs).swapaxes(0, 1)
+    blk = jax.checkpoint(lambda xc, tc, mc: _nll_block(params, cfg, xc, tc,
+                                                       mc))
+
+    def body(acc, args):
+        return acc + blk(*args), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts, ms))
+    return total
+
+
+# ======================================================================
+# Prefill + decode
+# ======================================================================
+
+def _cache_from_state(cfg: ModelConfig, ltype: str, st, capacity: int,
+                      ring: bool):
+    """Convert a prefill layer state into a fixed-capacity decode cache."""
+    if st is None:
+        return None
+    if "k" in st:  # attention kv: place the last `capacity` positions
+        k, v = st["k"], st["v"]
+        s = k.shape[1]
+        if s >= capacity:
+            k, v = k[:, s - capacity:], v[:, s - capacity:]
+            if ring and s % capacity:
+                # ring slot invariant: abs position p lives at p % capacity
+                k = jnp.roll(k, s % capacity, axis=1)
+                v = jnp.roll(v, s % capacity, axis=1)
+        else:
+            pad = capacity - s
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = {"k": k, "v": v}
+        for extra in ("xk", "xv"):
+            if extra in st:
+                out[extra] = st[extra]
+        return out
+    return st
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, token: jax.Array,
+                pos: jax.Array, *, ring: bool = False):
+    """One-token decode. token (B,) int32; pos () int32 absolute position.
+    cache layout mirrors params layout (head/blocks/tail lists + optional
+    cross-attention memory). ``ring=True`` treats attention caches as ring
+    buffers (sub-quadratic long-context decode).
+    Returns (logits (B, V), new_cache)."""
+    x = _embed(params, cfg, token[:, None])
+
+    new_cache: dict = {}
+    new_cache["head"] = []
+    for p, st in zip(params["head_layers"], cache["head"]):
+        x, new_st = _decode_layer(p, cfg, _decoder_ltype(cfg, "dense_attn"),
+                                  st, x, pos, cache, ring)
+        new_cache["head"].append(new_st)
+
+    if cfg.n_groups:
+        def group_body(x_carry, args):
+            gparams, gcache = args
+            new_sts = []
+            xx = x_carry
+            for pidx, ltype in enumerate(cfg.pattern):
+                lt = _decoder_ltype(cfg, ltype)
+                xx, new_st = _decode_layer(gparams[pidx], cfg, lt,
+                                           gcache[pidx], xx, pos, cache,
+                                           ring)
+                new_sts.append(new_st)
+            return xx, new_sts
+
+        x, block_caches = jax.lax.scan(group_body, x,
+                                       (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = block_caches
+    else:
+        new_cache["blocks"] = cache.get("blocks", [])
+
+    new_cache["tail"] = []
+    for i, p in enumerate(params["tail"]):
+        lt = _decoder_ltype(cfg, cfg.pattern[i])
+        x, st = _decode_layer(p, cfg, lt, cache["tail"][i], x, pos, cache,
+                              ring)
+        new_cache["tail"].append(st)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, 0] @ params["head"].astype(cfg.dtype)).astype(jnp.float32)
+    logits = constrain(logits, ("batch", "model"))
+    return logits, new_cache
+
+
+def _decode_layer(p, cfg: ModelConfig, lt: str, st, x, pos, cache, ring):
+    """One layer of decode (pure function of (x, state))."""
+    if lt in ("attn", "swa", "local_attn", "dense_attn", "xattn"):
+        window = cfg.window if lt == "swa" else (
+            cfg.local_window if lt == "local_attn" else None)
+        dims = cfg.attn_dims(window)
+        h = rms_norm(x, p["ln1"])
+        out, ck, cv = attn.attention_decode(p["attn"], h, pos, st["k"],
+                                            st["v"], dims, ring=ring,
+                                            window=window)
+        x = x + out
+        new_st = {"k": ck, "v": cv}
+        if lt == "xattn":
+            hx = rms_norm(x, p["lnx"])
+            q, _, _ = attn._project_qkv(p["xattn"], hx, dims)
+            b = hx.shape[0]
+            xo = attn.gqa_scores_softmax_out(
+                q, st["xk"].astype(hx.dtype), st["xv"].astype(hx.dtype),
+                jnp.zeros((1, 1, st["xk"].shape[1]), jnp.float32))
+            xo = xo.reshape(b, 1, -1, xo.shape[-1])
+            x = x + jnp.einsum("bshe,hed->bsd", xo,
+                               p["xattn"]["wo"].astype(hx.dtype))
+            new_st["xk"], new_st["xv"] = st["xk"], st["xv"]
+        h2 = rms_norm(x, p["ln2"])
+        if "moe" in p:
+            out, _ = moe_mod.moe_forward(p["moe"], h2, cfg.moe,
+                                         cfg.activation)
+        else:
+            out = mlp_mod.mlp_forward(p["ffn"], h2, cfg.activation)
+        x = x + out
+        return x, new_st
+    if lt == "rglru":
+        h = rms_norm(x, p["ln1"])
+        out, hh, tail = rglru_mod.rglru_decode(p["rglru"], h, st["h"],
+                                               st["conv"])
+        x = x + out
+        x = x + mlp_mod.mlp_forward(p["ffn"], rms_norm(x, p["ln2"]),
+                                    cfg.activation)
+        return x, {"h": hh, "conv": tail}
+    if lt == "mlstm":
+        h = rms_norm(x, p["ln"])
+        out, new = xlstm_mod.mlstm_decode(p["mlstm"], h, st)
+        return x + out, new
+    if lt == "slstm":
+        h = rms_norm(x, p["ln"])
+        out, new = xlstm_mod.slstm_decode(p["slstm"], h, st,
+                                          cfg.xlstm.n_heads)
+        return x + out, new
+    raise ValueError(lt)
+
+
+# ======================================================================
+# Prefill
+# ======================================================================
+
+def prefill_forward(params, cfg: ModelConfig, batch: dict, capacity: int,
+                    ring: bool = False):
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (last_logits (B, V), cache). capacity = cache size (>= S for
+    full attention; == window for ring buffers)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    offset = 0
+    if cfg.frontend == "vision" and cfg.n_prefix:
+        x = jnp.concatenate([batch["prefix"].astype(cfg.dtype), x], axis=1)
+        offset = cfg.n_prefix
+    enc_x = None
+    cache: dict = {}
+    if cfg.n_enc_layers:
+        enc_raw = _run_encoder(params, cfg, batch["src_embeds"])
+        enc_x = enc_raw
+    positions = jnp.arange(offset + s, dtype=jnp.float32)
+    x, _, states = _backbone(params, cfg, x, positions, enc_x,
+                             collect_states=True, seq_parallel=False)
+
+    def conv(st):
+        return _cache_from_state(cfg, "", st, capacity, ring)
+
+    cache["head"] = [conv(st) for st in states["head"]]
+    cache["blocks"] = jax.tree.map(
+        lambda *a: a[0], states["blocks"],
+        is_leaf=lambda z: False) if False else states["blocks"]
+    # stacked block states: kv leaves are (G, B, S, KV, hd) — trim/pad S
+    if cfg.n_groups:
+        def conv_stacked(st):
+            if st is None:
+                return None
+            if "k" in st:
+                k, v = st["k"], st["v"]
+                sl = k.shape[2]
+                if sl >= capacity:
+                    k = k[:, :, sl - capacity:]
+                    v = v[:, :, sl - capacity:]
+                    if ring and sl % capacity:
+                        k = jnp.roll(k, sl % capacity, axis=2)
+                        v = jnp.roll(v, sl % capacity, axis=2)
+                else:
+                    pad = capacity - sl
+                    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                out = {"k": k, "v": v}
+                for extra in ("xk", "xv"):
+                    if extra in st:
+                        out[extra] = st[extra]
+                return out
+            return st
+        cache["blocks"] = [conv_stacked(st) for st in states["blocks"]]
+    else:
+        cache["blocks"] = []
+    cache["tail"] = [conv(st) for st in states["tail"]]
+    logits = (x[:, -1] @ params["head"].astype(cfg.dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+# ======================================================================
+# Decode cache construction + partition specs
+# ======================================================================
+
+def _zero_state(cfg: ModelConfig, ltype: str, b: int, capacity: int,
+                enc_len: int = 0):
+    dims = cfg.attn_dims()
+    kvh, hd = dims.n_kv_heads, dims.head_dim
+    if ltype in ("attn", "swa", "local_attn", "dense_attn", "xattn"):
+        z = jnp.zeros((b, capacity, kvh, hd), cfg.dtype)
+        st = {"k": z, "v": z}
+        if ltype == "xattn":
+            ze = jnp.zeros((b, enc_len, kvh, hd), cfg.dtype)
+            st["xk"], st["xv"] = ze, ze
+        return st
+    if ltype == "rglru":
+        return {"h": jnp.zeros((b, cfg.d_rnn), jnp.float32),
+                "conv": jnp.zeros((b, rglru_mod.CONV_W - 1, cfg.d_rnn),
+                                  cfg.dtype)}
+    if ltype == "mlstm":
+        xh, xd = cfg.xlstm.n_heads, cfg.xlstm.head_dim
+        return {"c": jnp.zeros((b, xh, xd, xd), jnp.float32),
+                "n": jnp.zeros((b, xh, xd), jnp.float32),
+                "m": jnp.full((b, xh), -30.0, jnp.float32)}
+    if ltype == "slstm":
+        z = jnp.zeros((b, cfg.d_model), jnp.float32)
+        return {"h": z, "c": z, "n": z,
+                "m": jnp.full((b, cfg.d_model), -30.0, jnp.float32)}
+    raise ValueError(ltype)
+
+
+def _state_specs(cfg: ModelConfig, ltype: str, batch_axis, seq_axis,
+                 cache_mode: str = "hd"):
+    """Partition specs matching _zero_state. batch_axis shards B (or None
+    when B is too small); seq_axis optionally shards the cache length (used
+    for long-context B=1 decode). cache_mode:
+      "hd"  — head_dim on the model axis (baseline),
+      "seq" — cache length on the model axis (flash-decoding style:
+              per-shard partial softmax, tiny psums; see §Perf)."""
+    if ltype in ("attn", "swa", "local_attn", "dense_attn", "xattn"):
+        if cache_mode == "seq":
+            # flash-decoding: cache length on model (and on data too when
+            # the batch is unshardable, e.g. B=1 long-context)
+            seq_entry = "model" if batch_axis else ("data", "model")
+            s = P(batch_axis, seq_entry, None, None)
+        else:
+            s = P(batch_axis, seq_axis, None, "model")
+        st = {"k": s, "v": s}
+        if ltype == "xattn":
+            st["xk"] = P(batch_axis, None, None, "model")
+            st["xv"] = P(batch_axis, None, None, "model")
+        return st
+    if ltype == "rglru":
+        return {"h": P(batch_axis, "model"),
+                "conv": P(batch_axis, None, "model")}
+    if ltype == "mlstm":
+        return {"c": P(batch_axis, None, "model", None),
+                "n": P(batch_axis, None, "model"),
+                "m": P(batch_axis, None)}
+    if ltype == "slstm":
+        s = P(batch_axis, "model")
+        return {"h": s, "c": s, "n": s, "m": s}
+    raise ValueError(ltype)
+
+
+def init_cache(cfg: ModelConfig, b: int, capacity: int,
+               enc_len: int = 0) -> dict:
+    """Zero decode cache (the dry-run serve_step input)."""
+    cache: dict = {
+        "head": [_zero_state(cfg, _decoder_ltype(cfg, "dense_attn"), b,
+                             capacity, enc_len)
+                 for _ in range(cfg.first_k_dense)],
+        "blocks": [
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (cfg.n_groups,) + a.shape),
+                _zero_state(cfg, _decoder_ltype(cfg, lt), b, capacity,
+                            enc_len))
+            for lt in cfg.pattern] if cfg.n_groups else [],
+        "tail": [_zero_state(cfg, _decoder_ltype(cfg, lt), b, capacity,
+                             enc_len)
+                 for lt in cfg.pattern[: cfg.n_tail]],
+    }
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch_axis, seq_axis=None,
+                cache_mode: str = "hd") -> dict:
+    def stack(s):
+        return jax.tree.map(lambda q: P(None, *q), s,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    specs: dict = {
+        "head": [_state_specs(cfg, _decoder_ltype(cfg, "dense_attn"),
+                              batch_axis, seq_axis, cache_mode)
+                 for _ in range(cfg.first_k_dense)],
+        "blocks": [stack(_state_specs(cfg, _decoder_ltype(cfg, lt),
+                                      batch_axis, seq_axis, cache_mode))
+                   for lt in cfg.pattern] if cfg.n_groups else [],
+        "tail": [_state_specs(cfg, _decoder_ltype(cfg, lt), batch_axis,
+                              seq_axis, cache_mode)
+                 for lt in cfg.pattern[: cfg.n_tail]],
+    }
+    return specs

@@ -1,0 +1,281 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/chunked training form) and
+sLSTM (scalar memory, sequential scan) — Beck et al. '24 (arXiv:2405.04517).
+
+TPU adaptation notes (DESIGN.md §3):
+- mLSTM trains in its parallel quadratic form — structurally the same
+  einsum pattern as attention, so it reuses the query-chunked schedule
+  (cq x S score tiles) and maps onto the MXU. Decode is O(1) with the
+  (C, n, m) matrix-memory state.
+- sLSTM is inherently sequential (true recurrence through a nonlinearity);
+  training runs a jax.lax.scan over time. This is the faithful semantics —
+  there is no parallel form — and is documented as such.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import dense_init
+from repro.models.sharding_ctx import constrain
+
+
+class XLSTMDims(NamedTuple):
+    n_heads: int
+    head_dim: int     # d_model // n_heads after up-projection
+    up_factor: int = 2
+
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+
+def mlstm_init(key, d_model: int, dims: XLSTMDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d_inner = dims.n_heads * dims.head_dim
+    return {
+        "w_up": dense_init(ks[0], (d_model, 2 * d_inner), d_model, dtype),
+        "wq": dense_init(ks[1], (d_inner, dims.n_heads, dims.head_dim),
+                         d_inner, dtype),
+        "wk": dense_init(ks[2], (d_inner, dims.n_heads, dims.head_dim),
+                         d_inner, dtype),
+        "wv": dense_init(ks[3], (d_inner, dims.n_heads, dims.head_dim),
+                         d_inner, dtype),
+        "w_if": dense_init(ks[4], (d_inner, 2 * dims.n_heads), d_inner, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((dims.n_heads,), dtype),
+                                 jnp.full((dims.n_heads,), 3.0, dtype)]),
+        "w_down": dense_init(ks[5], (d_inner, d_model), d_inner, dtype),
+    }
+
+
+def mlstm_specs(fsdp_axis="data") -> dict:
+    return {
+        "w_up": P(fsdp_axis, "model"),
+        "wq": P(fsdp_axis, None, "model"),
+        "wk": P(fsdp_axis, None, "model"),
+        "wv": P(fsdp_axis, None, "model"),
+        "w_if": P(fsdp_axis, None), "b_if": P(None),
+        "w_down": P("model", fsdp_axis),
+    }
+
+
+def _mlstm_gates(params, u):
+    """u (B,S,d_inner) -> (log_f (B,S,H), i_tilde (B,S,H)) in f32."""
+    gf = (u @ params["w_if"].astype(u.dtype)).astype(jnp.float32) + \
+        params["b_if"].astype(jnp.float32)
+    h = gf.shape[-1] // 2
+    i_tilde, f_tilde = gf[..., :h], gf[..., h:]
+    log_f = -jax.nn.softplus(-f_tilde)     # log sigmoid(f~)
+    return log_f, i_tilde
+
+
+def mlstm_forward(params, x, chunk: int = 256):
+    """Parallel (training/prefill) form. x (B,S,D) -> (out, last_state)."""
+    b, s, _ = x.shape
+    dims_h = params["w_if"].shape[1] // 2
+    up = x @ params["w_up"].astype(x.dtype)
+    u, gate = jnp.split(up, 2, axis=-1)                    # (B,S,d_inner)
+    d_inner = u.shape[-1]
+    hd = d_inner // dims_h
+    q = jnp.einsum("bsd,dhe->bshe", u, params["wq"].astype(u.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", u, params["wk"].astype(u.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", u, params["wv"].astype(u.dtype))
+    # flash-style sequence sharding (§Perf iteration 5): with only 4 heads
+    # the model axis cannot ride H, and riding head_dim psums the full
+    # (cq, S, H) score tile every chunk (measured 384 GiB on prefill_32k).
+    # Sharding k/v/gates along S keeps scores local; the contractions over
+    # S reduce only (B,cq,H[,hd]) partials.
+    q = constrain(q, ("batch", None, None, None))
+    k = constrain(k, ("batch", "model", None, None))
+    v = constrain(v, ("batch", "model", None, None))
+    log_f, i_tilde = _mlstm_gates(params, u)               # (B,S,H)
+    lcum = jnp.cumsum(log_f, axis=1)                       # (B,S,H) prefix
+    i_tilde = constrain(i_tilde, ("batch", "model", None))
+    lcum_s = constrain(lcum, ("batch", "model", None))
+
+    scale = 1.0 / math.sqrt(hd)
+
+    def block(qc, lc, start):
+        """qc (B,cq,H,hd); lc (B,cq,H) cumulative logf of the chunk rows."""
+        # log D[t, s] = lcum_t - lcum_s + i~_s   for s <= t
+        logd = lc[:, :, None, :] - lcum_s[:, None, :, :] \
+            + i_tilde[:, None, :, :]
+        cq = qc.shape[1]
+        t_idx = start + jnp.arange(cq)
+        causal = t_idx[:, None] >= jnp.arange(s)[None, :]
+        logd = jnp.where(causal[None, :, :, None], logd, -jnp.inf)
+        m = jnp.maximum(jnp.max(logd, axis=2), 0.0)        # (B,cq,H) stabilizer
+        dmat = jnp.exp(logd - m[:, :, None, :])            # (B,cq,S,H)
+        scores = jnp.einsum("bqhe,bshe->bqsh", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        cmat = scores * dmat
+        norm = jnp.maximum(jnp.abs(jnp.sum(cmat, axis=2)), jnp.exp(-m))
+        out = jnp.einsum("bqsh,bshe->bqhe", cmat / norm[:, :, None, :],
+                         v.astype(jnp.float32))
+        return out.astype(x.dtype)
+
+    if s <= chunk:
+        h = block(q, lcum, 0)
+    else:
+        pad = (-s) % chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+        lp = jnp.pad(lcum, ((0, 0), (0, pad), (0, 0)), mode="edge") \
+            if pad else lcum
+        nc = (s + pad) // chunk
+        qc = qp.reshape(b, nc, chunk, dims_h, hd).swapaxes(0, 1)
+        lc = lp.reshape(b, nc, chunk, dims_h).swapaxes(0, 1)
+        chunk_blk = jax.checkpoint(block)
+        def one(_, args):
+            i, qi, li = args
+            return None, chunk_blk(qi, li, i * chunk)
+        _, hs = jax.lax.scan(one, None, (jnp.arange(nc), qc, lc))
+        h = hs.swapaxes(0, 1).reshape(b, s + pad, dims_h, hd)[:, :s]
+
+    h = h.reshape(b, s, d_inner) * jax.nn.silu(gate)
+    out = h @ params["w_down"].astype(x.dtype)
+    # recurrent state equivalent at t = S (for prefill -> decode handoff)
+    state = _mlstm_state_from_seq(k, v, log_f, i_tilde)
+    return out, state
+
+
+def _mlstm_state_from_seq(k, v, log_f, i_tilde):
+    """Fold the whole sequence into the (C, n, m) decode state."""
+    lcum = jnp.cumsum(log_f, axis=1)
+    total = lcum[:, -1:]
+    # weight of step t in final state: exp(lcum_S - lcum_t + i~_t - m)
+    logw = total - lcum + i_tilde                          # (B,S,H)
+    m = jnp.max(logw, axis=1)                              # (B,H)
+    w = jnp.exp(logw - m[:, None])
+    c = jnp.einsum("bsh,bshe,bshf->bhef", w, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshe->bhe", w, k.astype(jnp.float32))
+    return {"c": c, "n": n, "m": m}
+
+
+def mlstm_decode(params, x, state):
+    """One-token decode. state {c (B,H,hd,hd), n (B,H,hd), m (B,H)}."""
+    b = x.shape[0]
+    n_heads = params["w_if"].shape[1] // 2
+    up = x @ params["w_up"].astype(x.dtype)
+    u, gate = jnp.split(up, 2, axis=-1)
+    u2, gate = u[:, 0], gate[:, 0]
+    d_inner = u2.shape[-1]
+    hd = d_inner // n_heads
+    q = jnp.einsum("bd,dhe->bhe", u2, params["wq"].astype(u2.dtype))
+    k = jnp.einsum("bd,dhe->bhe", u2, params["wk"].astype(u2.dtype))
+    v = jnp.einsum("bd,dhe->bhe", u2, params["wv"].astype(u2.dtype))
+    log_f, i_tilde = _mlstm_gates(params, u2[:, None])
+    log_f, i_tilde = log_f[:, 0], i_tilde[:, 0]            # (B,H)
+    m_new = jnp.maximum(log_f + state["m"], i_tilde)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    ip = jnp.exp(i_tilde - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    c = state["c"] * fp[..., None, None] + \
+        ip[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n = state["n"] * fp[..., None] + ip[..., None] * kf
+    scale = 1.0 / math.sqrt(hd)
+    num = jnp.einsum("bhef,bhe->bhf", c, qf * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, qf * scale)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, d_inner).astype(x.dtype)
+    h = h * jax.nn.silu(gate)
+    out = (h @ params["w_down"].astype(x.dtype))[:, None]
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ======================================================================
+# sLSTM
+# ======================================================================
+
+def _up_width(d_model: int) -> int:
+    return max(256, (4 * d_model // 3 + 255) // 256 * 256)
+
+
+def slstm_init(key, d_model: int, dims: XLSTMDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    h, hd = dims.n_heads, d_model // dims.n_heads
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), d_model, dtype),
+        # block-diagonal recurrence: per head (hd -> 4*hd)
+        "r": dense_init(ks[1], (h, hd, 4 * hd), hd, dtype),
+        "b": jnp.zeros((4 * d_model,), dtype),
+        # 4/3 up-projection rounded to a shardable multiple of 256
+        "w_up": dense_init(ks[2], (d_model, 2 * _up_width(d_model)), d_model,
+                           dtype),
+        "w_down": dense_init(ks[3], (_up_width(d_model), d_model),
+                             _up_width(d_model), dtype),
+    }
+
+
+def slstm_specs(fsdp_axis="data") -> dict:
+    """sLSTM weights are REPLICATED over the model axis (§Perf iteration
+    5): the per-timestep recurrence is sequential, so tensor-sharded gates
+    would emit a (B, 4D) collective EVERY timestep of the scan (measured
+    ~8.9 s collective term on prefill_32k). The weights are small
+    (~16 MB/layer); keeping them local makes the whole recurrence
+    shard-local and batch-parallel. FSDP still shards the storage."""
+    return {"w_in": P(fsdp_axis, None), "r": P(None, None, None),
+            "b": P(None), "w_up": P(fsdp_axis, None),
+            "w_down": P(None, fsdp_axis)}
+
+
+def _slstm_cell(params, wx_t, state, n_heads):
+    """One timestep. wx_t (B, 4D) precomputed input part; state dict of
+    (B, D)/(B, H)-shaped f32 tensors."""
+    h_prev = state["h"]
+    b, d = h_prev.shape
+    hd = d // n_heads
+    rh = jnp.einsum("bhe,hef->bhf",
+                    h_prev.reshape(b, n_heads, hd).astype(params["r"].dtype),
+                    params["r"]).reshape(b, 4 * d)
+    pre = (wx_t + rh.astype(jnp.float32)
+           + params["b"].astype(jnp.float32))
+    z, i_t, f_t, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = -jax.nn.softplus(-f_t)
+    m_new = jnp.maximum(log_f + state["m"], i_t)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    ip = jnp.exp(i_t - m_new)
+    c = fp * state["c"] + ip * z
+    n = fp * state["n"] + ip
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_zero_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, d_model), -1e30, jnp.float32)}
+
+
+def slstm_forward(params, x, n_heads: int):
+    """Sequential scan over time. x (B,S,D) -> (out, last_state)."""
+    b, s, d = x.shape
+    wx = constrain((x @ params["w_in"].astype(x.dtype)).astype(jnp.float32),
+                   ("batch", None, None))  # (B,S,4D) — local recurrence
+    state0 = slstm_zero_state(b, d)
+
+    def step(state, wx_t):
+        new = _slstm_cell(params, wx_t, state, n_heads)
+        return new, new["h"]
+
+    last, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                  # (B,S,D)
+    up = h @ params["w_up"].astype(x.dtype)
+    a, g = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(g) * a) @ params["w_down"].astype(x.dtype)
+    return out, last
+
+
+def slstm_decode(params, x, state, n_heads: int):
+    wx = (x[:, 0] @ params["w_in"].astype(x.dtype)).astype(jnp.float32)
+    new = _slstm_cell(params, wx, state, n_heads)
+    h = new["h"].astype(x.dtype)
+    up = h @ params["w_up"].astype(x.dtype)
+    a, g = jnp.split(up, 2, axis=-1)
+    out = ((jax.nn.gelu(g) * a) @ params["w_down"].astype(x.dtype))[:, None]
+    return out, new

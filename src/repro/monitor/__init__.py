@@ -1,0 +1,5 @@
+from repro.monitor.activation_monitor import (FedGMMMonitor, MonitorConfig,
+                                              extract_features,
+                                              feature_projection)
+__all__ = ["FedGMMMonitor", "MonitorConfig", "extract_features",
+           "feature_projection"]

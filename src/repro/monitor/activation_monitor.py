@@ -1,0 +1,107 @@
+"""FedGenGMM activation monitor — the paper's technique attached to any
+assigned architecture as a first-class serving feature.
+
+Hidden-state distributions of a served model are a natural unsupervised
+anomaly signal (cf. the paper's refs [2] Beitollahi et al. and [9] Dong et
+al.: GMMs over model features). Here every data-parallel serving shard is a
+"client": it fits a local GMM over pooled hidden states of the traffic it
+saw, and the global monitor is aggregated with the one-shot FedGenGMM
+round. OOD inputs (domain shift, garbage prompts, adversarial noise) then
+score low under the global GMM.
+
+Feature extraction is architecture-agnostic: mean-pooled final hidden
+states, projected to a small fixed random basis (stable across clients)
+so GMM training stays edge-cheap — exactly the paper's constrained-client
+story (Fig. 5) applied to LLM serving.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.em import fit_gmm
+from repro.core.fedgen import aggregate
+from repro.core.gmm import GMM
+from repro.models.common import rms_norm
+from repro.models.transformer import (ModelConfig, _backbone, _embed,
+                                      _run_encoder)
+
+FEATURE_DIM = 32
+
+
+class MonitorConfig(NamedTuple):
+    feature_dim: int = FEATURE_DIM
+    k_local: int = 4
+    k_global: int = 8
+    h: int = 100
+    seed: int = 0
+
+
+def feature_projection(cfg: ModelConfig, mcfg: MonitorConfig) -> jax.Array:
+    """Fixed random projection (d_model -> feature_dim), identical on every
+    client (derived from a shared seed, so no coordination needed)."""
+    key = jax.random.key(mcfg.seed)
+    return jax.random.normal(key, (cfg.d_model, mcfg.feature_dim),
+                             jnp.float32) / np.sqrt(cfg.d_model)
+
+
+def extract_features(params, cfg: ModelConfig, batch: dict,
+                     proj: jax.Array) -> jax.Array:
+    """Mean-pooled final hidden states -> (B, feature_dim) float32."""
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens)
+    offset = 0
+    if cfg.frontend == "vision" and cfg.n_prefix:
+        x = jnp.concatenate([batch["prefix"].astype(cfg.dtype), x], axis=1)
+        offset = cfg.n_prefix
+    enc_x = None
+    if cfg.n_enc_layers:
+        enc_x = _run_encoder(params, cfg, batch["src_embeds"])
+    positions = jnp.arange(x.shape[1], dtype=jnp.float32)
+    h, _, _ = _backbone(params, cfg, x, positions, enc_x)
+    pooled = jnp.mean(h[:, offset:].astype(jnp.float32), axis=1)  # (B, D)
+    return pooled @ proj
+
+
+class FedGMMMonitor:
+    """One-shot federated anomaly monitor over serving shards."""
+
+    def __init__(self, cfg: ModelConfig, mcfg: MonitorConfig = MonitorConfig()):
+        self.cfg = cfg
+        self.mcfg = mcfg
+        self.proj = feature_projection(cfg, mcfg)
+        self._client_feats: dict[int, list[np.ndarray]] = {}
+        self.global_gmm: Optional[GMM] = None
+
+    # -- client side ----------------------------------------------------
+    def observe(self, client_id: int, params, batch: dict):
+        f = extract_features(params, self.cfg, batch, self.proj)
+        self._client_feats.setdefault(client_id, []).append(np.asarray(f))
+
+    def local_models(self) -> tuple[list[GMM], list[int]]:
+        gmms, sizes = [], []
+        for cid, feats in sorted(self._client_feats.items()):
+            x = jnp.asarray(np.concatenate(feats))
+            res = fit_gmm(jax.random.key(1000 + cid), x, self.mcfg.k_local)
+            gmms.append(res.gmm)
+            sizes.append(len(x))
+        return gmms, sizes
+
+    # -- the one-shot round ---------------------------------------------
+    def aggregate(self) -> GMM:
+        gmms, sizes = self.local_models()
+        res, _ = aggregate(jax.random.key(self.mcfg.seed), gmms,
+                           jnp.asarray(sizes, jnp.float32),
+                           h=self.mcfg.h, k_global=self.mcfg.k_global)
+        self.global_gmm = res.gmm
+        return res.gmm
+
+    # -- serving side ----------------------------------------------------
+    def score(self, params, batch: dict) -> np.ndarray:
+        """Anomaly scores (higher = more anomalous) for a serving batch."""
+        assert self.global_gmm is not None, "call aggregate() first"
+        f = extract_features(params, self.cfg, batch, self.proj)
+        return -np.asarray(self.global_gmm.log_prob(f))

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_opt_state,
+                               opt_state_specs, schedule)
+__all__ = ["AdamWConfig", "apply_updates", "init_opt_state",
+           "opt_state_specs", "schedule"]

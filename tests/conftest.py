@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the single real CPU device. Only launch/dryrun.py forces
+# the 512-device placeholder topology (in its own process).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def planted_gmm_data(rng, n=1500, d=4, k=3, spread=4.0, std=0.5):
+    """Well-separated planted mixture + labels."""
+    mus = rng.normal(0, spread, size=(k, d))
+    y = rng.integers(0, k, n)
+    x = mus[y] + rng.normal(0, std, size=(n, d))
+    return x.astype(np.float32), y.astype(np.int64), mus.astype(np.float32)
+
+
+@pytest.fixture
+def planted():
+    r = np.random.default_rng(42)
+    return planted_gmm_data(r)

@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, plus prefill->decode consistency
+against the full-sequence forward for representative families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (decode_step, init_cache, init_params,
+                          prefill_forward, train_forward)
+
+ARCHS = list_archs()
+B, S = 2, 32
+
+
+def make_batch(cfg, b=B, s=S, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                               jnp.int32),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        batch["prefix"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.n_prefix, cfg.d_model)), cfg.dtype)
+    if cfg.n_enc_layers:
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, s // cfg.src_ratio, cfg.d_model)),
+            cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    """One forward + backward on the reduced config: finite loss + grads."""
+    cfg = get_config(arch, "smoke")
+    params = init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg)
+
+    def loss_fn(p):
+        loss, metrics = train_forward(p, cfg, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params)
+    assert jnp.isfinite(loss), arch
+    # a loss near ln(V) is sane for random init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < \
+        3.0 * np.log(cfg.vocab_size), (arch, float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), arch
+    # gradient must reach the embedding and at least one block param
+    assert float(jnp.abs(grads["embed"]).max()) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_shapes(arch):
+    cfg = get_config(arch, "smoke")
+    params = init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg)
+    logits, cache = jax.jit(
+        lambda p, b: prefill_forward(p, cfg, b, capacity=S + 8))(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_runs(arch):
+    """serve_step on a zero cache: shape + finiteness (full consistency is
+    covered for representative families below)."""
+    cfg = get_config(arch, "smoke")
+    params = init_params(jax.random.key(0), cfg)
+    enc_len = (S // cfg.src_ratio) if cfg.n_enc_layers else 0
+    cache = init_cache(cfg, B, capacity=S, enc_len=enc_len)
+    token = jnp.zeros((B,), jnp.int32)
+    logits, new_cache = jax.jit(
+        lambda p, c, t: decode_step(p, cfg, c, t, jnp.asarray(4)))(
+        params, cache, token)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    # cache structure is preserved
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+CONSISTENCY_ARCHS = ["yi-6b", "mixtral-8x7b", "recurrentgemma-9b",
+                     "xlstm-350m", "internvl2-26b", "seamless-m4t-medium"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """prefill(S) + decode(token_S) logits == full forward(S+1) last-token
+    logits — the cache-correctness invariant, in float32.
+
+    MoE archs use a drop-free capacity factor here: capacity-based routing
+    is context-dependent (tokens compete for expert slots within a group),
+    so with drops enabled prefill and decode are *expected* to differ —
+    that is documented GShard/Switch behaviour, not a cache bug."""
+    cfg = dataclasses.replace(get_config(arch, "smoke"), dtype=jnp.float32)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=cfg.moe._replace(capacity_factor=float(cfg.moe.n_experts)))
+    params = init_params(jax.random.key(1), cfg)
+    rng = np.random.default_rng(3)
+    s_total = S + 1
+    full = make_batch(cfg, B, s_total, seed=3)
+    prefill_batch = dict(full)
+    prefill_batch["tokens"] = full["tokens"][:, :S]
+    prefill_batch.pop("targets"), prefill_batch.pop("mask")
+
+    capacity = s_total + (cfg.n_prefix if cfg.frontend == "vision" else 0)
+    _, cache = jax.jit(lambda p, b: prefill_forward(p, cfg, b, capacity))(
+        params, prefill_batch)
+    pos = jnp.asarray(S + (cfg.n_prefix if cfg.frontend == "vision" else 0),
+                      jnp.int32)
+    dec_logits, _ = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, pos))(
+        params, cache, full["tokens"][:, S])
+
+    # full forward over S+1 tokens; compare last position pre-loss logits
+    from repro.models.transformer import _backbone, _embed, _run_encoder
+    from repro.models.common import rms_norm
+
+    def full_logits(p):
+        x = _embed(p, cfg, full["tokens"])
+        off = 0
+        if cfg.frontend == "vision":
+            x = jnp.concatenate([full["prefix"].astype(cfg.dtype), x], 1)
+            off = cfg.n_prefix
+        enc = _run_encoder(p, cfg, full["src_embeds"]) \
+            if cfg.n_enc_layers else None
+        positions = jnp.arange(off + s_total, dtype=jnp.float32)
+        h, _, _ = _backbone(p, cfg, x, positions, enc)
+        return (h[:, -1] @ p["head"].astype(cfg.dtype)).astype(jnp.float32)
+
+    ref = jax.jit(full_logits)(params)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ring_cache_decode_matches_windowed():
+    """For a SWA arch, ring-buffer decode == full-cache windowed decode."""
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", "smoke"),
+                              dtype=jnp.float32, window=16)
+    params = init_params(jax.random.key(2), cfg)
+    batch = make_batch(cfg, B, S, seed=5)
+    prefill_batch = {"tokens": batch["tokens"]}
+    # full cache
+    _, cache_full = jax.jit(
+        lambda p, b: prefill_forward(p, cfg, b, capacity=S + 1))(
+        params, prefill_batch)
+    # ring cache of exactly the window
+    _, cache_ring = jax.jit(
+        lambda p, b: prefill_forward(p, cfg, b, capacity=cfg.window,
+                                     ring=True))(params, prefill_batch)
+    token = batch["tokens"][:, -1]
+    pos = jnp.asarray(S, jnp.int32)
+    lf, _ = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, pos))(
+        params, cache_full, token)
+    lr, _ = jax.jit(
+        lambda p, c, t: decode_step(p, cfg, c, t, pos, ring=True))(
+        params, cache_ring, token)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr), rtol=2e-3,
+                               atol=2e-3)

@@ -1,0 +1,79 @@
+"""Assigned-architecture config checks: every full config must carry the
+EXACT dimensions from the assignment table (vocab padding documented)."""
+import pytest
+
+from repro.configs import get_citation, get_config, list_archs
+
+# arch -> (L, d_model, H, kv, d_ff, vocab_as_assigned, citation)
+ASSIGNED = {
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000, "2401.04088"),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400, "2401.06066"),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000, "2403.04652"),
+    "gemma-7b": (28, 3072, 16, 16, 24576, 256000, "2403.08295"),
+    "deepseek-67b": (95, 8192, 64, 8, 22016, 102400, "2401.02954"),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000, "2402.19427"),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553, "2404.16821"),
+    "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544, "2403.17297"),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304, "2405.04517"),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206, "2308.11596"),
+}
+
+# vocab padded up to a multiple of the 16-way model axis where needed
+VOCAB_PAD = {"internvl2-26b": 92672, "seamless-m4t-medium": 256256}
+
+
+def test_all_archs_registered():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_dimensions(arch):
+    L, d, h, kv, ff, vocab, cite = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == VOCAB_PAD.get(arch, vocab)
+    assert cite in get_citation(arch)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_smoke_variant_reduced(arch):
+    cfg = get_config(arch, "smoke")
+    assert cfg.n_layers <= 3
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+
+
+def test_family_specifics():
+    mix = get_config("mixtral-8x7b")
+    assert mix.moe.n_experts == 8 and mix.moe.top_k == 2
+    assert mix.window == 4096 and mix.pattern == ("swa",)
+    dsm = get_config("deepseek-moe-16b")
+    assert dsm.moe.n_experts == 64 and dsm.moe.top_k == 6
+    assert dsm.moe.n_shared == 2 and dsm.first_k_dense == 1
+    rg = get_config("recurrentgemma-9b")
+    assert rg.pattern == ("rglru", "rglru", "local_attn")
+    assert rg.n_groups == 12 and rg.n_tail == 2  # 38 = 12*3 + 2
+    xl = get_config("xlstm-350m")
+    assert xl.pattern == ("mlstm", "slstm")
+    sm = get_config("seamless-m4t-medium")
+    assert sm.n_enc_layers == 12 and sm.frontend == "audio"
+    vl = get_config("internvl2-26b")
+    assert vl.frontend == "vision" and vl.n_prefix == 256
+    gm = get_config("gemma-7b")
+    assert gm.head_dim == 256 and gm.embed_scale
+
+
+def test_head_counts_shardable():
+    """Every attention arch must have H divisible by the 16-way model axis
+    (the flat-head layout depends on it)."""
+    for arch in sorted(ASSIGNED):
+        cfg = get_config(arch)
+        if any(t in ("attn", "swa", "local_attn")
+               for t in cfg.pattern) or cfg.first_k_dense:
+            assert cfg.n_heads % 16 == 0, arch
+        assert cfg.vocab_size % 16 == 0, arch

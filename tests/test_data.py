@@ -1,0 +1,76 @@
+"""Data substrate tests: generators, PCA, scaler, token pipeline."""
+import numpy as np
+import pytest
+
+from repro.data import (REGISTRY, batches, fit_minmax, fit_pca, load,
+                        synthetic_stream, transform_pca)
+
+EXPECTED = {  # name -> (d, n_classes, scheme, K, clients)  [Tables 1 & 3]
+    "mnist": (24, 10, "dirichlet", 30, 20),
+    "covertype": (10, 7, "dirichlet", 15, 20),
+    "rwhar": (16, 13, "dirichlet", 15, 20),
+    "wadi": (84, 10, "quantity", 10, 20),
+    "vehicle": (11, 3, "quantity", 15, 12),
+    "smd": (38, 28, "dirichlet", 10, 20),
+}
+
+
+@pytest.mark.parametrize("name", list(EXPECTED))
+def test_dataset_schema(name):
+    d, ncls, scheme, k, clients = EXPECTED[name]
+    ds = load(name, np.random.default_rng(0))
+    assert ds.x_train.shape[1] == d
+    assert ds.n_classes == ncls and ds.scheme == scheme
+    assert ds.k_global == k and ds.n_clients == clients
+    assert ds.x_train.min() >= 0.0 and ds.x_train.max() <= 1.0
+    assert ds.y_train.max() < ncls and ds.y_train.min() >= 0
+    assert np.isfinite(ds.x_test_in).all() and np.isfinite(ds.x_test_ood).all()
+    assert len(ds.x_test_ood) > 0
+
+
+@pytest.mark.parametrize("name", list(EXPECTED))
+def test_dataset_reproducible(name):
+    a = load(name, np.random.default_rng(7))
+    b = load(name, np.random.default_rng(7))
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+
+
+def test_pca_reconstruction_ordering():
+    rng = np.random.default_rng(0)
+    # low-rank data: PCA should capture it
+    w = rng.normal(size=(5, 20))
+    x = rng.normal(size=(500, 5)) @ w + 0.01 * rng.normal(size=(500, 20))
+    pca = fit_pca(x, 5)
+    z = transform_pca(pca, x)
+    assert z.shape == (500, 5)
+    assert (np.diff(pca.explained_variance) <= 1e-6).all()  # sorted desc
+    # 5 components capture nearly all variance
+    assert pca.explained_variance.sum() > 0.95 * x.var(0).sum()
+
+
+def test_minmax_scaler():
+    rng = np.random.default_rng(1)
+    x = rng.normal(2, 5, (100, 4))
+    s = fit_minmax(x)
+    z = s.transform(x)
+    assert z.min() >= 0 and z.max() <= 1
+    np.testing.assert_allclose(z.min(0), 0, atol=1e-7)
+    np.testing.assert_allclose(z.max(0), 1, atol=1e-7)
+    # out-of-range data is clipped
+    assert s.transform(x + 100).max() <= 1.0
+
+
+def test_token_stream_properties():
+    s = synthetic_stream(0, 1000, 50_000)
+    assert s.min() >= 0 and s.max() < 1000
+    # zipf-ish: most common token much more frequent than median
+    counts = np.bincount(s, minlength=1000)
+    assert counts.max() > 10 * np.median(counts[counts > 0])
+
+
+def test_batches_shapes_and_shift():
+    bs = list(batches(0, 500, batch_size=4, seq_len=16, n_batches=3))
+    assert len(bs) == 3
+    for b in bs:
+        assert b.tokens.shape == (4, 16) and b.targets.shape == (4, 16)
+        np.testing.assert_array_equal(b.tokens[:, 1:], b.targets[:, :-1])

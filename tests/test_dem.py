@@ -1,0 +1,83 @@
+"""DEM baseline tests: distributed stats aggregation == centralized EM,
+all three inits converge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dem, e_step_stats, fit_gmm, partition
+from repro.core.dem import (fed_kmeans_centers, max_separated_centers,
+                            pilot_subset_centers)
+from repro.core.em import init_from_means, m_step
+from conftest import planted_gmm_data
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(21)
+    x, y, _ = planted_gmm_data(rng, n=2400, d=4, k=3, spread=5.0, std=0.5)
+    split = partition(np.random.default_rng(0), x, y, 6, "dirichlet", 0.5)
+    return x, y, split
+
+
+class TestDEMEquivalence:
+    def test_distributed_estep_equals_centralized(self, setup):
+        """sum of per-client sufficient stats == stats on the union —
+        the correctness core of DEM (and of the sharded runtime psum)."""
+        x, y, split = setup
+        g = init_from_means(max_separated_centers(jax.random.key(0), 3, 4),
+                            jnp.asarray(x))
+        per = [e_step_stats(g, jnp.asarray(split.data[c]),
+                            jnp.asarray(split.mask[c]))
+               for c in range(split.data.shape[0])]
+        agg = jax.tree.map(lambda *s: sum(s), *per)
+        cen = e_step_stats(g, jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(agg.s0), np.asarray(cen.s0),
+                                   rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(agg.s1), np.asarray(cen.s1),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(float(agg.loglik), float(cen.loglik),
+                                   rtol=1e-4)
+
+    def test_dem_matches_centralized_fit(self, setup):
+        x, y, split = setup
+        dr = dem(jax.random.key(0), split, 3, init=3)
+        bench = fit_gmm(jax.random.key(1), jnp.asarray(x), 3)
+        ll_dem = float(dr.global_gmm.score(jnp.asarray(x)))
+        ll_cen = float(bench.gmm.score(jnp.asarray(x)))
+        assert ll_dem > ll_cen - 0.3, (ll_dem, ll_cen)
+
+
+class TestInits:
+    @pytest.mark.parametrize("init", [1, 2, 3])
+    def test_all_inits_converge(self, setup, init):
+        x, y, split = setup
+        dr = dem(jax.random.key(init), split, 3, init=init)
+        assert bool(dr.converged)
+        assert bool(jnp.all(jnp.isfinite(dr.global_gmm.means)))
+        assert int(dr.n_rounds) >= 2  # iterative, unlike one-shot
+
+    def test_max_separated_centers_spread(self):
+        c = max_separated_centers(jax.random.key(0), 8, 5)
+        assert c.shape == (8, 5)
+        assert bool(jnp.all((c >= 0) & (c <= 1)))
+        # pairwise distances all nonzero
+        d2 = jnp.sum((c[:, None] - c[None]) ** 2, -1) + jnp.eye(8)
+        assert float(d2.min()) > 1e-3
+
+    def test_pilot_subset_ignores_padding(self, setup):
+        x, y, split = setup
+        centers = pilot_subset_centers(jax.random.key(0), split, 3)
+        # all centers within data range (padding rows are zero but excluded)
+        assert bool(jnp.all(jnp.isfinite(centers)))
+
+    def test_fed_kmeans_centers_shape(self, setup):
+        x, y, split = setup
+        centers = fed_kmeans_centers(jax.random.key(0), split, 3)
+        assert centers.shape == (3, 4)
+
+    def test_comm_rounds_grow_with_iterations(self, setup):
+        x, y, split = setup
+        dr = dem(jax.random.key(0), split, 3, init=1)
+        assert dr.comm.rounds == int(dr.n_rounds)
+        assert dr.comm.uplink_floats > dr.comm.rounds  # per-round stats

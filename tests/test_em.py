@@ -1,0 +1,140 @@
+"""EM tests: planted-mixture recovery, monotonic loglik, weighted EM ==
+subset EM, BIC model selection, full-covariance path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.em import (e_step_stats, e_step_stats_fused, em_step, fit_gmm,
+                           fit_gmm_bic, init_from_kmeans, init_from_means,
+                           m_step)
+from repro.core.gmm import GMM
+
+from conftest import planted_gmm_data
+
+
+class TestFitGMM:
+    def test_recovers_planted_means(self, planted):
+        x, y, mus = planted
+        res = fit_gmm(jax.random.key(0), jnp.asarray(x), 3)
+        assert bool(res.converged)
+        got = np.sort(np.asarray(res.gmm.means), axis=0)
+        np.testing.assert_allclose(got, np.sort(mus, axis=0), atol=0.15)
+
+    def test_recovers_weights(self):
+        r = np.random.default_rng(3)
+        mus = np.array([[-5.0, 0.0], [5.0, 0.0]], np.float32)
+        y = (r.uniform(size=4000) < 0.75).astype(int)
+        x = (mus[y] + r.normal(0, 0.5, (4000, 2))).astype(np.float32)
+        res = fit_gmm(jax.random.key(0), jnp.asarray(x), 2)
+        w = np.sort(np.asarray(res.gmm.weights))
+        np.testing.assert_allclose(w, [0.25, 0.75], atol=0.03)
+
+    def test_loglik_monotonic(self, planted):
+        x, _, _ = planted
+        xj = jnp.asarray(x)
+        gmm = init_from_kmeans(jax.random.key(0), xj, 3)
+        lls = []
+        for _ in range(10):
+            gmm, ll = em_step(gmm, xj)
+            lls.append(float(ll))
+        assert all(b >= a - 1e-4 for a, b in zip(lls, lls[1:])), lls
+
+    def test_weighted_equals_subset(self, planted):
+        """EM on (x, weight mask) == EM on x[mask] — the ragged-client
+        representation invariant everything federated relies on."""
+        x, _, _ = planted
+        xj = jnp.asarray(x)
+        n = x.shape[0]
+        mask = jnp.asarray((np.arange(n) % 3 != 0), jnp.float32)
+        sub = xj[np.asarray(mask) > 0]
+        g0 = init_from_kmeans(jax.random.key(1), sub, 3)
+        a, lla = em_step(g0, xj, sample_weight=mask)
+        b, llb = em_step(g0, sub)
+        np.testing.assert_allclose(float(lla), float(llb), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(a.means), np.asarray(b.means),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(a.covs), np.asarray(b.covs),
+                                   rtol=1e-3, atol=1e-5)
+
+    def test_full_covariance(self):
+        r = np.random.default_rng(5)
+        cov = np.array([[1.0, 0.8], [0.8, 1.0]])
+        x = r.multivariate_normal([0, 0], cov, 3000).astype(np.float32)
+        res = fit_gmm(jax.random.key(0), jnp.asarray(x), 1,
+                      covariance_type="full")
+        np.testing.assert_allclose(np.asarray(res.gmm.covs[0]), cov, atol=0.08)
+
+    def test_respects_max_iter(self, planted):
+        x, _, _ = planted
+        res = fit_gmm(jax.random.key(0), jnp.asarray(x), 3, max_iter=2,
+                      tol=0.0)
+        assert int(res.n_iter) <= 2
+
+    def test_variances_positive(self, planted):
+        x, _, _ = planted
+        res = fit_gmm(jax.random.key(0), jnp.asarray(x), 8)
+        assert bool(jnp.all(res.gmm.covs > 0))
+
+
+class TestEStep:
+    def test_estep_stats_shapes(self, planted):
+        x, _, _ = planted
+        g = init_from_kmeans(jax.random.key(0), jnp.asarray(x), 3)
+        s = e_step_stats(g, jnp.asarray(x))
+        assert s.s0.shape == (3,) and s.s1.shape == (3, 4) and s.s2.shape == (3, 4)
+        np.testing.assert_allclose(float(s.s0.sum()), x.shape[0], rtol=1e-5)
+
+    def test_fused_kernel_matches(self, planted):
+        x, _, _ = planted
+        xj = jnp.asarray(x)
+        g = init_from_kmeans(jax.random.key(0), xj, 3)
+        w = jnp.asarray(np.random.default_rng(0).uniform(size=x.shape[0]),
+                        jnp.float32)
+        a = e_step_stats(g, xj, w)
+        b = e_step_stats_fused(g, xj, w, interpret=True)
+        np.testing.assert_allclose(np.asarray(a.s0), np.asarray(b.s0), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(a.s1), np.asarray(b.s1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(a.s2), np.asarray(b.s2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(a.loglik), float(b.loglik), rtol=1e-5)
+
+    def test_mstep_weights_normalized(self, planted):
+        x, _, _ = planted
+        g = init_from_kmeans(jax.random.key(0), jnp.asarray(x), 5)
+        stats = e_step_stats(g, jnp.asarray(x))
+        g2 = m_step(stats)
+        np.testing.assert_allclose(float(g2.weights.sum()), 1.0, rtol=1e-6)
+
+
+class TestBICSelection:
+    def test_bic_selects_true_k(self):
+        x, _, _ = planted_gmm_data(np.random.default_rng(7), n=3000, k=3,
+                                   spread=6.0, std=0.4)
+        res, bics = fit_gmm_bic(jax.random.key(0), jnp.asarray(x), [1, 2, 3, 4, 5])
+        assert res.gmm.n_components == 3, bics
+
+
+class TestInits:
+    def test_init_from_means_uniform_weights(self, planted):
+        x, _, _ = planted
+        centers = jnp.zeros((4, 4))
+        g = init_from_means(centers, jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(g.weights), 0.25, rtol=1e-6)
+        assert bool(jnp.all(g.covs > 0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=hst.integers(1, 5), seed=hst.integers(0, 10**6))
+def test_em_loglik_never_decreases_property(k, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 1, (400, 3)) + r.integers(0, 2, (400, 1)) * 4,
+                    jnp.float32)
+    g = init_from_kmeans(jax.random.key(seed), x, k)
+    prev = -np.inf
+    for _ in range(6):
+        g, ll = em_step(g, x)
+        assert float(ll) >= prev - 1e-3
+        prev = float(ll)

@@ -1,0 +1,142 @@
+"""GMM primitive tests: log densities vs scipy, sampling moments, BIC."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as st
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
+
+
+def random_gmm(rng, k=3, d=4, full=False):
+    w = rng.dirichlet(np.ones(k)).astype(np.float32)
+    mu = rng.normal(0, 2, (k, d)).astype(np.float32)
+    if full:
+        a = rng.normal(0, 1, (k, d, d))
+        cov = (a @ np.transpose(a, (0, 2, 1)) + 0.5 * np.eye(d)).astype(np.float32)
+    else:
+        cov = rng.uniform(0.2, 2.0, (k, d)).astype(np.float32)
+    return GMM(jnp.asarray(w), jnp.asarray(mu), jnp.asarray(cov))
+
+
+class TestLogProb:
+    def test_diag_matches_scipy(self, rng):
+        g = random_gmm(rng)
+        x = rng.normal(0, 2, (50, 4)).astype(np.float32)
+        ours = np.asarray(g.log_prob(jnp.asarray(x)))
+        dens = np.zeros(50)
+        for k in range(3):
+            dens += float(g.weights[k]) * st.multivariate_normal(
+                np.asarray(g.means[k]), np.diag(np.asarray(g.covs[k]))).pdf(x)
+        np.testing.assert_allclose(ours, np.log(dens), rtol=2e-4, atol=2e-4)
+
+    def test_full_matches_scipy(self, rng):
+        g = random_gmm(rng, full=True)
+        x = rng.normal(0, 2, (50, 4)).astype(np.float32)
+        ours = np.asarray(g.log_prob(jnp.asarray(x)))
+        dens = np.zeros(50)
+        for k in range(3):
+            dens += float(g.weights[k]) * st.multivariate_normal(
+                np.asarray(g.means[k]), np.asarray(g.covs[k])).pdf(x)
+        np.testing.assert_allclose(ours, np.log(dens), rtol=2e-3, atol=2e-3)
+
+    def test_responsibilities_sum_to_one(self, rng):
+        g = random_gmm(rng)
+        x = jnp.asarray(rng.normal(0, 3, (40, 4)), jnp.float32)
+        r = g.responsibilities(x)
+        np.testing.assert_allclose(np.asarray(r.sum(1)), 1.0, rtol=1e-5)
+        assert (np.asarray(r) >= 0).all()
+
+    def test_density_integrates_lowdim(self, rng):
+        # 1-d numeric integration of exp(log_prob) ~= 1
+        g = GMM(jnp.array([0.3, 0.7]), jnp.array([[-1.0], [2.0]]),
+                jnp.array([[0.5], [1.5]]))
+        xs = jnp.linspace(-15, 15, 20001)[:, None]
+        p = jnp.exp(g.log_prob(xs))
+        integral = float(jnp.trapezoid(p[:, ], dx=30 / 20000))
+        assert abs(integral - 1.0) < 1e-3
+
+
+class TestSampling:
+    def test_sample_moments_diag(self, rng):
+        g = random_gmm(rng, k=2, d=3)
+        x = np.asarray(g.sample(jax.random.key(0), 200_000))
+        w = np.asarray(g.weights)
+        mu = np.asarray(g.means)
+        expected_mean = w @ mu
+        np.testing.assert_allclose(x.mean(0), expected_mean, atol=0.03)
+        ex2 = w @ (np.asarray(g.covs) + mu ** 2)
+        np.testing.assert_allclose((x ** 2).mean(0), ex2, rtol=0.02, atol=0.02)
+
+    def test_sample_moments_full(self, rng):
+        g = random_gmm(rng, k=2, d=3, full=True)
+        x = np.asarray(g.sample(jax.random.key(1), 200_000))
+        w = np.asarray(g.weights)
+        mu = np.asarray(g.means)
+        np.testing.assert_allclose(x.mean(0), w @ mu, atol=0.05)
+
+    def test_sample_shape_dtype(self, rng):
+        g = random_gmm(rng)
+        x = g.sample(jax.random.key(0), 17)
+        assert x.shape == (17, 4) and x.dtype == jnp.float32
+
+
+class TestBIC:
+    def test_n_free_params(self):
+        g = GMM(jnp.ones(5) / 5, jnp.zeros((5, 7)), jnp.ones((5, 7)))
+        assert g.n_free_params() == 4 + 35 + 35
+        gf = GMM(jnp.ones(5) / 5, jnp.zeros((5, 7)),
+                 jnp.broadcast_to(jnp.eye(7), (5, 7, 7)))
+        assert gf.n_free_params() == 4 + 35 + 5 * 7 * 8 // 2
+
+    def test_bic_penalizes_complexity_equal_ll(self, rng):
+        # duplicate-component GMM has same density but worse (higher) BIC
+        g1 = GMM(jnp.array([1.0]), jnp.zeros((1, 2)), jnp.ones((1, 2)))
+        g2 = GMM(jnp.array([0.5, 0.5]), jnp.zeros((2, 2)), jnp.ones((2, 2)))
+        x = jnp.asarray(rng.normal(0, 1, (500, 2)), jnp.float32)
+        assert float(g2.bic(x)) > float(g1.bic(x))
+
+
+class TestMerge:
+    def test_merge_weights_proportional_to_sizes(self, rng):
+        g1, g2 = random_gmm(rng), random_gmm(rng)
+        m = merge_gmms([g1, g2], jnp.array([100.0, 300.0]))
+        assert m.n_components == 6
+        np.testing.assert_allclose(float(m.weights.sum()), 1.0, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(m.weights[:3]),
+                                   np.asarray(g1.weights) * 0.25, rtol=1e-5)
+
+    def test_merge_stacked_equivalent(self, rng):
+        gs = [random_gmm(rng) for _ in range(4)]
+        sizes = jnp.array([10.0, 20.0, 30.0, 40.0])
+        a = merge_gmms(gs, sizes)
+        b = merge_gmms_stacked(jnp.stack([g.weights for g in gs]),
+                               jnp.stack([g.means for g in gs]),
+                               jnp.stack([g.covs for g in gs]), sizes)
+        np.testing.assert_allclose(np.asarray(a.weights), np.asarray(b.weights),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(a.means), np.asarray(b.means))
+
+    def test_merged_density_is_size_weighted_mixture(self, rng):
+        g1, g2 = random_gmm(rng), random_gmm(rng)
+        m = merge_gmms([g1, g2], jnp.array([1.0, 3.0]))
+        x = jnp.asarray(rng.normal(0, 2, (20, 4)), jnp.float32)
+        expect = jnp.log(0.25 * jnp.exp(g1.log_prob(x))
+                         + 0.75 * jnp.exp(g2.log_prob(x)))
+        np.testing.assert_allclose(np.asarray(m.log_prob(x)),
+                                   np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=hst.integers(1, 8), d=hst.integers(1, 16), seed=hst.integers(0, 10**6))
+def test_logprob_finite_property(k, d, seed):
+    r = np.random.default_rng(seed)
+    g = GMM(jnp.asarray(r.dirichlet(np.ones(k)), jnp.float32),
+            jnp.asarray(r.normal(0, 3, (k, d)), jnp.float32),
+            jnp.asarray(r.uniform(0.05, 5, (k, d)), jnp.float32))
+    x = jnp.asarray(r.normal(0, 5, (32, d)), jnp.float32)
+    lp = g.log_prob(x)
+    assert bool(jnp.all(jnp.isfinite(lp)))
+    r_ = g.responsibilities(x)
+    assert bool(jnp.all(jnp.isfinite(r_)))

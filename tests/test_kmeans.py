@@ -1,0 +1,63 @@
+"""K-means tests: recovery, weighting invariant, federated variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import (federated_kmeans, kmeans, kmeans_multi,
+                               kmeans_plusplus)
+from conftest import planted_gmm_data
+
+
+def test_kmeans_recovers_planted_centers():
+    # multi-restart k-means (the library's EM-init path) recovers planted
+    # centers; a single init can legitimately land in a bad local optimum
+    x, y, mus = planted_gmm_data(np.random.default_rng(1), n=1800, k=3,
+                                 spread=6.0, std=0.4)
+    res = kmeans_multi(jax.random.key(0), jnp.asarray(x), 3, n_init=6)
+    got = np.sort(np.asarray(res.centers), axis=0)
+    np.testing.assert_allclose(got, np.sort(mus, axis=0), atol=0.2)
+    assert int(res.n_iter) < 50
+
+
+def test_kmeans_inertia_decreases_vs_random():
+    x, _, _ = planted_gmm_data(np.random.default_rng(2), n=900, k=4)
+    res = kmeans(jax.random.key(0), jnp.asarray(x), 4)
+    rand_centers = jnp.asarray(np.random.default_rng(0).normal(0, 4, (4, 4)),
+                               jnp.float32)
+    from repro.core.kmeans import _sq_dists
+    rand_inertia = float(jnp.sum(jnp.min(_sq_dists(jnp.asarray(x),
+                                                   rand_centers), axis=1)))
+    assert float(res.inertia) < rand_inertia
+
+
+def test_weighted_kmeans_ignores_zero_weight_rows():
+    x, _, _ = planted_gmm_data(np.random.default_rng(3), n=1000, k=2,
+                               spread=8.0)
+    xj = jnp.asarray(x)
+    # poison the second half with garbage, zero its weight
+    poisoned = xj.at[500:].set(1e3)
+    w = jnp.asarray(np.r_[np.ones(500), np.zeros(500)], jnp.float32)
+    res = kmeans(jax.random.key(0), poisoned, 2, sample_weight=w)
+    ref = kmeans(jax.random.key(0), xj[:500], 2)
+    np.testing.assert_allclose(np.sort(np.asarray(res.centers), 0),
+                               np.sort(np.asarray(ref.centers), 0), atol=0.3)
+
+
+def test_kmeans_plusplus_picks_data_points():
+    x, _, _ = planted_gmm_data(np.random.default_rng(4), n=500, k=3)
+    c = kmeans_plusplus(jax.random.key(0), jnp.asarray(x), 3)
+    # every seed must be an actual data row
+    d2 = jnp.min(jnp.sum((jnp.asarray(x)[None] - c[:, None]) ** 2, -1), axis=1)
+    assert float(d2.max()) < 1e-8
+
+
+def test_federated_kmeans_close_to_centralized():
+    x, y, mus = planted_gmm_data(np.random.default_rng(5), n=2000, k=3,
+                                 spread=7.0, std=0.4)
+    # 4 clients, heterogeneous
+    from repro.core.partition import partition_dirichlet
+    split = partition_dirichlet(np.random.default_rng(0), x, y, 4, 0.3)
+    centers = federated_kmeans(jax.random.key(0), jnp.asarray(split.data), 3,
+                               client_weights=jnp.asarray(split.mask))
+    got = np.sort(np.asarray(centers), axis=0)
+    np.testing.assert_allclose(got, np.sort(mus, axis=0), atol=0.4)

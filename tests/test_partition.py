@@ -1,0 +1,58 @@
+"""Partitioning invariants (hypothesis property tests)."""
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.partition import (partition_dirichlet, partition_quantity)
+
+
+def make_data(rng, n=600, d=3, n_classes=5):
+    y = rng.integers(0, n_classes, n)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32) + y[:, None]
+    return x, y.astype(np.int64)
+
+
+@settings(max_examples=15, deadline=None)
+@given(alpha=hst.floats(0.05, 10.0), n_clients=hst.integers(2, 12),
+       seed=hst.integers(0, 10**6))
+def test_dirichlet_conserves_data(alpha, n_clients, seed):
+    rng = np.random.default_rng(seed)
+    x, y = make_data(rng)
+    s = partition_dirichlet(rng, x, y, n_clients, alpha)
+    assert s.sizes.sum() == len(x)                      # no loss, no dup
+    assert (s.mask.sum(axis=1) == s.sizes).all()        # mask consistent
+    assert s.class_counts.sum() == len(x)
+    # padded region is zero
+    for c in range(n_clients):
+        assert not s.data[c, int(s.sizes[c]):].any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(alpha=hst.integers(1, 5), n_clients=hst.integers(2, 12),
+       seed=hst.integers(0, 10**6))
+def test_quantity_conserves_data(alpha, n_clients, seed):
+    rng = np.random.default_rng(seed)
+    x, y = make_data(rng)
+    s = partition_quantity(rng, x, y, n_clients, alpha)
+    assert s.sizes.sum() == len(x)
+    assert (s.mask.sum(axis=1) == s.sizes).all()
+    # each client has ~alpha classes; the coverage backstop may add extras
+    # when alpha*n_clients < n_classes (data conservation), bounded by the
+    # number of uncovered classes
+    n_classes = s.class_counts.shape[1]
+    max_extra = -(-n_classes // n_clients)  # ceil(M / C)
+    assert ((s.class_counts > 0).sum(axis=1) <= alpha + max_extra).all()
+    # every class is assigned somewhere (global distribution preserved)
+    assert ((s.class_counts.sum(axis=0) > 0)).all()
+
+
+def test_dirichlet_heterogeneity_increases_with_small_alpha():
+    """Fig. 1 semantics: smaller alpha => a class concentrates on few
+    clients. Measured by the mean max-share of a class on one client."""
+    rng = np.random.default_rng(0)
+    x, y = make_data(rng, n=4000, n_classes=8)
+    shares = {}
+    for alpha in (0.1, 100.0):
+        s = partition_dirichlet(np.random.default_rng(1), x, y, 10, alpha)
+        frac = s.class_counts / np.maximum(s.class_counts.sum(0, keepdims=True), 1)
+        shares[alpha] = frac.max(axis=0).mean()
+    assert shares[0.1] > shares[100.0] + 0.2, shares

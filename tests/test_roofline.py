@@ -1,0 +1,56 @@
+"""Roofline analytic-model validation: the parameter-count formula must
+match the ACTUAL parameter tree (eval_shape — no allocation) for every
+full-size assigned architecture; FLOPs formulas sanity-checked for
+monotonicity/positivity."""
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks package lives at repo root
+
+from benchmarks.roofline import forward_flops_per_token, n_params, step_flops
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.models import init_params
+from repro.models.common import count_params
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_n_params_matches_actual_tree(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    actual = sum(int(s.size) for s in jax.tree.leaves(shapes))
+    analytic = n_params(cfg)
+    # norms/biases are excluded from the analytic model -> tiny slack
+    assert abs(actual - analytic) / actual < 0.01, \
+        (arch, actual, analytic)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_flops_positive_and_ordered(arch):
+    cfg = get_config(arch)
+    f_train = step_flops(cfg, "train_4k")
+    f_prefill = step_flops(cfg, "prefill_32k")
+    f_decode = step_flops(cfg, "decode_32k")
+    f_long = step_flops(cfg, "long_500k")
+    assert f_train > 0 and f_prefill > 0 and f_decode > 0 and f_long > 0
+    # one-token decode is orders below full-batch train
+    assert f_decode < f_train / 100, arch
+    # a longer context can't be cheaper per token at equal batch
+    assert forward_flops_per_token(cfg, 32768) >= \
+        forward_flops_per_token(cfg, 1024)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("mixtral-8x7b")
+    assert n_params(cfg, active_only=True) < 0.5 * n_params(cfg)
+
+
+def test_known_param_counts():
+    """Anchor the formula against the models' published sizes."""
+    known = {"deepseek-67b": 67e9, "mixtral-8x7b": 46.7e9,
+             "internlm2-1.8b": 1.89e9, "yi-6b": 6.06e9,
+             "gemma-7b": 8.5e9}  # gemma counts embeddings (256k vocab)
+    for arch, expect in known.items():
+        got = n_params(get_config(arch))
+        assert abs(got - expect) / expect < 0.12, (arch, got, expect)

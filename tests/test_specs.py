@@ -1,0 +1,64 @@
+"""Partition-spec consistency: for every assigned architecture the spec
+pytrees must structurally match the actual param/cache pytrees (this is
+exactly what jit in_shardings dies on at 512 devices — caught here on CPU
+with eval_shape, no allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models.transformer import (cache_specs, init_cache, init_params,
+                                      param_specs)
+
+ARCHS = list_archs()
+
+
+def _struct(tree):
+    return jax.tree.structure(
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("fsdp", ["data", ("pod", "data"), None])
+def test_param_specs_match_tree(arch, fsdp):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    specs = param_specs(cfg, fsdp=fsdp, model_axis_size=16)
+    assert jax.tree.structure(shapes) == _struct(specs)
+    # every sharded dim must divide the tensor dim (16-way model axis,
+    # and up to 32-way fsdp)
+    for s, spec in zip(jax.tree.leaves(shapes),
+                       jax.tree.leaves(specs,
+                                       is_leaf=lambda x: isinstance(x, P))):
+        for dim, entry in zip(s.shape, spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= {"model": 16, "data": 16, "pod": 2}[a]
+            assert dim % size == 0, (arch, s.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mode", ["hd", "seq"])
+def test_cache_specs_match_tree(arch, mode):
+    cfg = get_config(arch)
+    enc_len = 8192 if cfg.n_enc_layers else 0
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, 128, 32768, enc_len=enc_len))
+    specs = cache_specs(cfg, "data", None, cache_mode=mode)
+    assert jax.tree.structure(shapes) == _struct(specs)
+    for s, spec in zip(jax.tree.leaves(shapes),
+                       jax.tree.leaves(specs,
+                                       is_leaf=lambda x: isinstance(x, P))):
+        assert len(spec) <= len(s.shape), (arch, s.shape, spec)
+        for dim, entry in zip(s.shape, spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= {"model": 16, "data": 16, "pod": 2}[a]
+            assert dim % size == 0, (arch, s.shape, spec)
