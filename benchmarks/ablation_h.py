@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import eval_auc, load_quick
+from benchmarks.common import load_quick
 from repro.core import fedgengmm, fit_gmm, partition
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dem, fedgengmm, fit_gmm, partition, train_locals
+from repro.core import dem, fedgengmm, fit_gmm, partition
 from repro.core.metrics import auc_pr, anomaly_scores
 from repro.data import load
 

@@ -1,7 +1,13 @@
 """Kernel micro-benchmarks: XLA reference path timings on CPU (the Pallas
 kernels themselves are TPU-targeted; interpret mode is correctness-only and
 its timing is meaningless, so we report the oracle path + a one-shot
-interpret-mode parity check)."""
+interpret-mode parity check).
+
+Also benchmarks the E-step *engine* backends end to end — reference
+(full-batch jnp), fused (Pallas kernel; real timing on TPU only), and
+chunked (lax.scan streaming accumulator) — in one run, together with the
+responsibility-matrix working set each needs, so both the speedup and the
+memory ceiling of the streaming path are measurable."""
 from __future__ import annotations
 
 import time
@@ -10,9 +16,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.em import e_step_stats, e_step_stats_chunked
+from repro.core.gmm import GMM
 from repro.kernels import ops, ref
+from repro.kernels.estep_stats import DEFAULT_BLOCK_N
 
 SHAPES = [(20000, 24, 30), (20000, 84, 10), (50000, 38, 10)]
+ENGINE_CHUNK = 4096
 
 
 def _time(fn, iters=5):
@@ -48,7 +58,45 @@ def run(quick: bool = True) -> list[str]:
         b = ref.estep_stats_ref(sub, mu, var, lw)
         err = max(float(jnp.max(jnp.abs(u - v))) for u, v in zip(a, b))
         rows.append(f"kernel/estep_pallas_parity/N2048d{d}K{k},0,{err:.2e}")
+
+        rows.extend(_engine_rows(x, mu, var, lw, n, d, k))
     return rows
+
+
+def _engine_rows(x, mu, var, lw, n, d, k) -> list[str]:
+    """reference vs fused vs chunked E-step engine, one shape.
+
+    Columns: label, wall us, responsibility working set in MiB (the (N, K)
+    matrix for the full-batch path, one (chunk, K) block for streaming; the
+    fused kernel keeps it in VMEM tiles, reported as its (block_n, K)).
+    """
+    gmm = GMM(jnp.exp(lw), mu, var)
+    on_tpu = jax.default_backend() == "tpu"
+    mib = lambda rows_resident: rows_resident * k * 4 / 2**20
+
+    engine_ref = jax.jit(
+        lambda x: e_step_stats(gmm, x, estep_backend="reference"))
+    us = _time(lambda: engine_ref(x))
+    out = [f"engine/estep_reference/N{n}d{d}K{k},{us:.0f},{mib(n):.2f}"]
+
+    engine_chunked = jax.jit(lambda x: e_step_stats_chunked(
+        gmm, x, chunk_size=ENGINE_CHUNK, estep_backend="reference"))
+    us = _time(lambda: engine_chunked(x))
+    out.append(f"engine/estep_chunked_c{ENGINE_CHUNK}/N{n}d{d}K{k},"
+               f"{us:.0f},{mib(ENGINE_CHUNK):.2f}")
+
+    if on_tpu:
+        engine_fused = jax.jit(
+            lambda x: e_step_stats(gmm, x, estep_backend="fused"))
+        us = _time(lambda: engine_fused(x))
+        # the kernel's default block_n: its resident resp tile
+        out.append(f"engine/estep_fused/N{n}d{d}K{k},{us:.0f},{mib(DEFAULT_BLOCK_N):.2f}")
+    else:
+        # CPU: interpret mode executes the kernel body in Python — parity
+        # is already checked above, a timing would only mislead. Keep the
+        # us column numeric (0 = not timed, like the parity rows).
+        out.append(f"engine/estep_fused/N{n}d{d}K{k},0,skipped_not_tpu")
+    return out
 
 
 if __name__ == "__main__":

@@ -7,7 +7,6 @@ AUC-PR evaluation against DEM and the non-federated benchmark.
 import sys
 from pathlib import Path
 
-import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.common import load_quick, run_methods

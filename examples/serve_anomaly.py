@@ -13,8 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import (decode_step, init_cache, init_params,
-                          prefill_forward)
+from repro.models import decode_step, init_params, prefill_forward
 from repro.monitor import FedGMMMonitor, MonitorConfig
 
 cfg = get_config("internlm2-1.8b", "smoke")

@@ -12,9 +12,6 @@ Input shapes (assigned):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 

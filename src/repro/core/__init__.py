@@ -1,9 +1,10 @@
 """FedGenGMM core: GMM primitives, EM, federated one-shot aggregation and
 distributed-EM baselines."""
 from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
-from repro.core.em import (EMResult, SufficientStats, e_step_stats, em_step,
-                           fit_gmm, fit_gmm_bic, init_from_kmeans,
-                           init_from_means, m_step)
+from repro.core.em import (EMResult, SufficientStats, e_step_stats,
+                           e_step_stats_chunked, em_step, fit_gmm,
+                           fit_gmm_bic, fit_gmm_streaming, init_from_kmeans,
+                           init_from_means, m_step, resolve_estep_backend)
 from repro.core.kmeans import KMeansResult, federated_kmeans, kmeans
 from repro.core.partition import (ClientSplit, partition, partition_dirichlet,
                                   partition_quantity)
@@ -17,8 +18,9 @@ from repro.core import metrics
 
 __all__ = [
     "GMM", "merge_gmms", "merge_gmms_stacked",
-    "EMResult", "SufficientStats", "e_step_stats", "em_step", "fit_gmm",
-    "fit_gmm_bic", "init_from_kmeans", "init_from_means", "m_step",
+    "EMResult", "SufficientStats", "e_step_stats", "e_step_stats_chunked",
+    "em_step", "fit_gmm", "fit_gmm_bic", "fit_gmm_streaming",
+    "init_from_kmeans", "init_from_means", "m_step", "resolve_estep_backend",
     "KMeansResult", "federated_kmeans", "kmeans",
     "ClientSplit", "partition", "partition_dirichlet", "partition_quantity",
     "CommStats", "FedGenResult", "aggregate", "fedgengmm", "payload_floats",

@@ -12,13 +12,14 @@ Three initializations of the global component centers are reproduced:
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
-                           init_from_means, m_step)
+from repro.core.em import (SufficientStats, e_step_stats,
+                           e_step_stats_chunked, fit_gmm, init_from_means,
+                           m_step)
 from repro.core.fedgen import CommStats, payload_floats
 from repro.core.gmm import GMM
 from repro.core.kmeans import federated_kmeans
@@ -83,14 +84,22 @@ def fed_kmeans_centers(key: jax.Array, split: ClientSplit, k: int) -> jax.Array:
 # DEM main loop
 # ----------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_rounds",))
+@partial(jax.jit, static_argnames=("max_rounds", "estep_backend",
+                                   "chunk_size"))
 def _dem_loop(gmm0: GMM, data: jax.Array, mask: jax.Array, tol: jax.Array,
-              reg_covar: float, max_rounds: int):
+              reg_covar: float, max_rounds: int,
+              estep_backend: str = "auto", chunk_size: int | None = None):
     """data: (C, N, d), mask: (C, N). Aggregation over the client axis is a
     tree-sum here; in the sharded runtime it is a jax.lax.psum."""
 
+    def per_client_stats(gmm, x, w):
+        if chunk_size is None:
+            return e_step_stats(gmm, x, w, estep_backend=estep_backend)
+        return e_step_stats_chunked(gmm, x, w, chunk_size, estep_backend)
+
     def global_stats(gmm: GMM) -> SufficientStats:
-        per_client = jax.vmap(lambda x, w: e_step_stats(gmm, x, w))(data, mask)
+        per_client = jax.vmap(lambda x, w: per_client_stats(gmm, x, w))(
+            data, mask)
         return jax.tree.map(lambda s: jnp.sum(s, axis=0), per_client)
 
     def cond(state):
@@ -116,8 +125,14 @@ def _dem_loop(gmm0: GMM, data: jax.Array, mask: jax.Array, tol: jax.Array,
 
 def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,
         max_rounds: int = 200, tol: float = 1e-3,
-        reg_covar: float = 1e-6) -> DEMResult:
-    """Run DEM with the requested initialization scheme (1, 2 or 3)."""
+        reg_covar: float = 1e-6, estep_backend: str = "auto",
+        chunk_size: int | None = None) -> DEMResult:
+    """Run DEM with the requested initialization scheme (1, 2 or 3).
+
+    ``estep_backend``/``chunk_size`` select the per-client E-step engine
+    (DESIGN.md §6), matching ``dem_sharded`` so baseline comparisons run
+    the same engine as FedGenGMM.
+    """
     data = jnp.asarray(split.data)
     mask = jnp.asarray(split.mask)
     d = data.shape[-1]
@@ -135,7 +150,8 @@ def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,
     flat_w = mask.reshape(-1)
     gmm0 = init_from_means(centers, flat, flat_w, reg_covar=reg_covar)
     gmm, ll, rounds, converged = _dem_loop(
-        gmm0, data, mask, jnp.asarray(tol, data.dtype), reg_covar, max_rounds)
+        gmm0, data, mask, jnp.asarray(tol, data.dtype), reg_covar, max_rounds,
+        estep_backend, chunk_size)
 
     c = data.shape[0]
     stats_floats = k + 2 * k * d + 2  # s0, s1, s2 (diag), loglik, wsum

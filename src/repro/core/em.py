@@ -45,16 +45,32 @@ class SufficientStats(NamedTuple):
 # E / M steps
 # ----------------------------------------------------------------------
 
-def e_step_stats(gmm: GMM, x: jax.Array,
-                 sample_weight: Optional[jax.Array] = None) -> SufficientStats:
-    """One E-step: responsibilities -> sufficient statistics.
+ESTEP_BACKENDS = ("auto", "reference", "fused")
 
-    This is the communication payload of DEM (each client computes local
-    stats; the server psums them) and the compute hot spot fused by
-    ``repro.kernels.estep_stats`` on TPU.
+
+def resolve_estep_backend(estep_backend: str, is_diagonal: bool) -> str:
+    """Resolve the user-facing backend knob to a concrete implementation.
+
+    ``auto`` picks the fused Pallas kernel when it can win (diagonal
+    covariance on a TPU backend); interpret mode on CPU is bit-compatible
+    but much slower than XLA, so ``auto`` keeps the reference path there.
+    The fused kernel only implements diagonal covariance, so full
+    covariance always falls back to reference semantics (DESIGN.md §6).
     """
-    n = x.shape[0]
-    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    if estep_backend not in ESTEP_BACKENDS:
+        raise ValueError(
+            f"estep_backend must be one of {ESTEP_BACKENDS}, "
+            f"got {estep_backend!r}")
+    if not is_diagonal:
+        return "reference"
+    if estep_backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "reference"
+    return estep_backend
+
+
+def _e_step_stats_reference(gmm: GMM, x: jax.Array,
+                            w: jax.Array) -> SufficientStats:
+    """Pure-jnp E-step: materializes the (N, K) responsibility matrix."""
     lp = gmm.component_log_prob(x) + jnp.log(gmm.weights)[None, :]   # (N, K)
     log_norm = jax.scipy.special.logsumexp(lp, axis=1)               # (N,)
     resp = jnp.exp(lp - log_norm[:, None]) * w[:, None]              # (N, K)
@@ -66,6 +82,25 @@ def e_step_stats(gmm: GMM, x: jax.Array,
         s2 = jnp.einsum("nk,ni,nj->kij", resp, x, x)                 # (K, d, d)
     loglik = jnp.sum(log_norm * w)
     return SufficientStats(s0, s1, s2, loglik, jnp.sum(w))
+
+
+def e_step_stats(gmm: GMM, x: jax.Array,
+                 sample_weight: Optional[jax.Array] = None,
+                 estep_backend: str = "auto") -> SufficientStats:
+    """One E-step: responsibilities -> sufficient statistics.
+
+    This is the communication payload of DEM (each client computes local
+    stats; the server psums them) and the compute hot spot. The
+    ``estep_backend`` knob dispatches between the pure-jnp reference path
+    and the fused Pallas kernel (``repro.kernels.ops.estep_stats``), which
+    never materializes the (N, K) responsibility matrix.
+    """
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    backend = resolve_estep_backend(estep_backend, gmm.is_diagonal)
+    if backend == "fused":
+        return e_step_stats_fused(gmm, x, w)
+    return _e_step_stats_reference(gmm, x, w)
 
 
 def e_step_stats_fused(gmm: GMM, x: jax.Array,
@@ -83,6 +118,51 @@ def e_step_stats_fused(gmm: GMM, x: jax.Array,
                                      jnp.log(gmm.weights), w,
                                      interpret=interpret)
     return SufficientStats(s0, s1, s2, ll, jnp.sum(w))
+
+
+def e_step_stats_chunked(gmm: GMM, x: jax.Array,
+                         sample_weight: Optional[jax.Array] = None,
+                         chunk_size: int = 4096,
+                         estep_backend: str = "auto") -> SufficientStats:
+    """Constant-memory E-step: ``lax.scan`` over fixed-size row chunks.
+
+    ``SufficientStats`` is additive in N, so the full-batch statistics are
+    the chunk-wise sum — the working set is one (chunk_size, K) block
+    instead of the whole (N, K) responsibility matrix. Rows are padded to a
+    multiple of ``chunk_size`` with zero sample weight, which contributes
+    exactly zero to every field. Accumulation runs at least in float32
+    (``promote_types(x.dtype, float32)``, so f64 stays f64 under x64); the
+    result is cast back to ``x.dtype`` so downstream loops see the same
+    dtypes as the full-batch path. Caveat: the *fused* backend computes
+    each chunk in f32 regardless (the kernel packs params as f32), so f64
+    precision is only preserved end-to-end on the reference backend.
+    """
+    n, d = x.shape
+    k = gmm.n_components
+    chunk_size = int(chunk_size)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    n_chunks = -(-n // chunk_size)
+    pad = n_chunks * chunk_size - n
+    xc = jnp.pad(x, ((0, pad), (0, 0))).reshape(n_chunks, chunk_size, d)
+    wc = jnp.pad(w, (0, pad)).reshape(n_chunks, chunk_size)
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    s2_shape = (k, d) if gmm.is_diagonal else (k, d, d)
+    init = SufficientStats(
+        jnp.zeros((k,), acc_dtype), jnp.zeros((k, d), acc_dtype),
+        jnp.zeros(s2_shape, acc_dtype), jnp.zeros((), acc_dtype),
+        jnp.zeros((), acc_dtype))
+
+    def body(carry, chunk):
+        xb, wb = chunk
+        s = e_step_stats(gmm, xb, wb, estep_backend=estep_backend)
+        carry = jax.tree.map(lambda acc, v: acc + v.astype(acc.dtype),
+                             carry, s)
+        return carry, None
+
+    stats, _ = jax.lax.scan(body, init, (xc, wc))
+    return jax.tree.map(lambda s: s.astype(x.dtype), stats)
 
 
 def m_step(stats: SufficientStats, reg_covar: float = 1e-6) -> GMM:
@@ -112,9 +192,18 @@ def m_step(stats: SufficientStats, reg_covar: float = 1e-6) -> GMM:
 
 
 def em_step(gmm: GMM, x: jax.Array, sample_weight: Optional[jax.Array] = None,
-            reg_covar: float = 1e-6) -> tuple[GMM, jax.Array]:
-    """One full EM iteration. Returns (new_gmm, avg_loglik_of_old_gmm)."""
-    stats = e_step_stats(gmm, x, sample_weight)
+            reg_covar: float = 1e-6, estep_backend: str = "auto",
+            chunk_size: Optional[int] = None) -> tuple[GMM, jax.Array]:
+    """One full EM iteration. Returns (new_gmm, avg_loglik_of_old_gmm).
+
+    ``chunk_size=None`` runs the whole batch in one E-step; an integer
+    streams it through :func:`e_step_stats_chunked` in bounded memory.
+    """
+    if chunk_size is None:
+        stats = e_step_stats(gmm, x, sample_weight, estep_backend)
+    else:
+        stats = e_step_stats_chunked(gmm, x, sample_weight, chunk_size,
+                                     estep_backend)
     avg_ll = stats.loglik / jnp.maximum(stats.wsum, 1e-12)
     return m_step(stats, reg_covar), avg_ll
 
@@ -167,21 +256,23 @@ def init_from_means(means: jax.Array, x: jax.Array,
 # Full EM fit
 # ----------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_iter",))
+@partial(jax.jit, static_argnames=("max_iter", "estep_backend", "chunk_size"))
 def _em_loop(gmm0: GMM, x: jax.Array, w: jax.Array, tol: float,
-             reg_covar: float, max_iter: int):
+             reg_covar: float, max_iter: int, estep_backend: str = "auto",
+             chunk_size: Optional[int] = None):
     def cond(state):
         _, prev_ll, ll, it = state
         return jnp.logical_and(it < max_iter, jnp.abs(ll - prev_ll) > tol)
 
     def body(state):
         gmm, _, ll, it = state
-        new_gmm, avg_ll = em_step(gmm, x, w, reg_covar)
+        new_gmm, avg_ll = em_step(gmm, x, w, reg_covar, estep_backend,
+                                  chunk_size)
         return new_gmm, ll, avg_ll, it + 1
 
     neg_inf = jnp.array(-jnp.inf, x.dtype)
     # Bootstrap: one step to get an initial loglik.
-    gmm1, ll0 = em_step(gmm0, x, w, reg_covar)
+    gmm1, ll0 = em_step(gmm0, x, w, reg_covar, estep_backend, chunk_size)
     state = (gmm1, neg_inf, ll0, jnp.array(1))
     gmm, prev_ll, ll, it = jax.lax.while_loop(cond, body, state)
     converged = jnp.abs(ll - prev_ll) <= tol
@@ -193,29 +284,63 @@ def fit_gmm(key: jax.Array, x: jax.Array, k: int,
             covariance_type: str = "diag",
             max_iter: int = 200, tol: float = 1e-3,
             reg_covar: float = 1e-6,
-            init_gmm: Optional[GMM] = None) -> EMResult:
+            init_gmm: Optional[GMM] = None,
+            estep_backend: str = "auto",
+            chunk_size: Optional[int] = None) -> EMResult:
     """Train a GMM with EM until the avg-loglik delta drops below ``tol``
-    (the paper's convergence criterion, 1e-3)."""
+    (the paper's convergence criterion, 1e-3).
+
+    ``estep_backend`` selects the E-step implementation (DESIGN.md §6);
+    ``chunk_size`` streams the E-step in bounded memory.
+    """
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    # Validate eagerly: _em_loop sees the knob as a static jit arg and a
+    # typo'd value would otherwise surface as an opaque trace-time error.
+    resolve_estep_backend(estep_backend, covariance_type == "diag"
+                          if init_gmm is None else init_gmm.is_diagonal)
     if init_gmm is None:
         init_gmm = init_from_kmeans(key, x, k, w, covariance_type, reg_covar)
     gmm, ll, it, converged = _em_loop(init_gmm, x, w, jnp.asarray(tol, x.dtype),
-                                      reg_covar, max_iter)
+                                      reg_covar, max_iter, estep_backend,
+                                      chunk_size)
     return EMResult(gmm, ll, it, converged)
+
+
+def fit_gmm_streaming(key: jax.Array, x: jax.Array, k: int,
+                      sample_weight: Optional[jax.Array] = None,
+                      covariance_type: str = "diag",
+                      max_iter: int = 200, tol: float = 1e-3,
+                      reg_covar: float = 1e-6,
+                      init_gmm: Optional[GMM] = None,
+                      estep_backend: str = "auto",
+                      chunk_size: int = 4096) -> EMResult:
+    """Streaming EM: every E-step scans (chunk_size, d) slices, so the
+    peak working set is O(chunk_size * K) instead of O(N * K) and N is no
+    longer bounded by one resident responsibility matrix. Mathematically
+    identical to :func:`fit_gmm` (chunk sums reorder float additions only).
+    """
+    return fit_gmm(key, x, k, sample_weight=sample_weight,
+                   covariance_type=covariance_type, max_iter=max_iter,
+                   tol=tol, reg_covar=reg_covar, init_gmm=init_gmm,
+                   estep_backend=estep_backend, chunk_size=int(chunk_size))
 
 
 def fit_gmm_bic(key: jax.Array, x: jax.Array, k_candidates: Sequence[int],
                 sample_weight: Optional[jax.Array] = None,
                 covariance_type: str = "diag",
                 max_iter: int = 200, tol: float = 1e-3,
-                reg_covar: float = 1e-6) -> tuple[EMResult, dict[int, float]]:
+                reg_covar: float = 1e-6,
+                estep_backend: str = "auto",
+                chunk_size: Optional[int] = None) -> tuple[EMResult,
+                                                           dict[int, float]]:
     """TrainGMM of Algorithm 4.1: fit every K in the candidate range, return
     the fit minimizing BIC (plus all BIC scores)."""
     best, best_bic, bics = None, jnp.inf, {}
     for i, k in enumerate(k_candidates):
         res = fit_gmm(jax.random.fold_in(key, i), x, k, sample_weight,
-                      covariance_type, max_iter, tol, reg_covar)
+                      covariance_type, max_iter, tol, reg_covar,
+                      estep_backend=estep_backend, chunk_size=chunk_size)
         b = float(res.gmm.bic(x, sample_weight))
         bics[k] = b
         if b < best_bic:

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.em import EMResult, fit_gmm, fit_gmm_bic
-from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
+from repro.core.gmm import GMM, merge_gmms
 from repro.core.partition import ClientSplit
 
 
@@ -50,12 +50,15 @@ def payload_floats(gmm: GMM) -> int:
 # Local training
 # ----------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("k", "max_iter", "covariance_type"))
+@partial(jax.jit, static_argnames=("k", "max_iter", "covariance_type",
+                                   "estep_backend", "chunk_size"))
 def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
                  max_iter: int = 200, tol: float = 1e-3,
                  reg_covar: float = 1e-6,
-                 covariance_type: str = "diag") -> tuple[GMM, jax.Array,
-                                                         jax.Array]:
+                 covariance_type: str = "diag",
+                 estep_backend: str = "auto",
+                 chunk_size: Optional[int] = None) -> tuple[GMM, jax.Array,
+                                                            jax.Array]:
     """vmap'd local EM, fixed K_c = k for all clients.
 
     data: (C, N, d) padded, mask: (C, N). Returns stacked GMM with leaves
@@ -67,7 +70,8 @@ def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
     def one(key, x, w):
         res = fit_gmm(key, x, k, sample_weight=w,
                       covariance_type=covariance_type, max_iter=max_iter,
-                      tol=tol, reg_covar=reg_covar)
+                      tol=tol, reg_covar=reg_covar,
+                      estep_backend=estep_backend, chunk_size=chunk_size)
         return res.gmm, res.log_likelihood, res.n_iter
 
     return jax.vmap(one)(keys, data, mask)
@@ -76,14 +80,20 @@ def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
 def train_locals_bic(key: jax.Array, split: ClientSplit,
                      k_candidates: Sequence[int],
                      max_iter: int = 200, tol: float = 1e-3,
-                     reg_covar: float = 1e-6) -> list[EMResult]:
+                     reg_covar: float = 1e-6,
+                     covariance_type: str = "diag",
+                     estep_backend: str = "auto",
+                     chunk_size: Optional[int] = None) -> list[EMResult]:
     """Per-client TrainGMM with BIC selection — heterogeneous K_c."""
     results = []
     for i in range(split.data.shape[0]):
         n = int(split.sizes[i])
         x = jnp.asarray(split.data[i, :n])
         res, _ = fit_gmm_bic(jax.random.fold_in(key, i), x, k_candidates,
-                             max_iter=max_iter, tol=tol, reg_covar=reg_covar)
+                             covariance_type=covariance_type,
+                             max_iter=max_iter, tol=tol, reg_covar=reg_covar,
+                             estep_backend=estep_backend,
+                             chunk_size=chunk_size)
         results.append(res)
     return results
 
@@ -98,8 +108,18 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
               k_candidates: Optional[Sequence[int]] = None,
               max_iter: int = 200, tol: float = 1e-3,
               reg_covar: float = 1e-6,
-              covariance_type: str = "diag") -> tuple[EMResult, jax.Array]:
-    """Algorithm 4.1 lines 21-31: merge, sample S, train global model."""
+              covariance_type: str = "diag",
+              estep_backend: str = "auto",
+              chunk_size: Optional[int] = None) -> tuple[EMResult, jax.Array]:
+    """Algorithm 4.1 lines 21-31: merge, sample S, train global model.
+
+    The synthetic set S = H * sum_c K_c points is the largest dataset in
+    the pipeline, so ``chunk_size`` matters most here: it bounds the
+    refit's E-step working set at (chunk_size, K). (Two full-batch
+    materializations remain: the k-means init's (|S|, K) one-hot, and —
+    on the ``k_candidates`` path — the (|S|, K) log-prob that BIC scoring
+    builds per candidate. Chunking both is a ROADMAP item.)
+    """
     merged = merge_gmms(local_gmms, jnp.asarray(sizes))
     n_synth = h * sum(g.n_components for g in local_gmms)
     k_sample, k_fit = jax.random.split(key)
@@ -107,13 +127,16 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
     if k_global is not None:
         res = fit_gmm(k_fit, synthetic, k_global,
                       covariance_type=covariance_type, max_iter=max_iter,
-                      tol=tol, reg_covar=reg_covar)
+                      tol=tol, reg_covar=reg_covar,
+                      estep_backend=estep_backend, chunk_size=chunk_size)
     else:
         assert k_candidates is not None, "need k_global or k_candidates"
         res, _ = fit_gmm_bic(k_fit, synthetic, k_candidates,
                              covariance_type=covariance_type,
                              max_iter=max_iter, tol=tol,
-                             reg_covar=reg_covar)
+                             reg_covar=reg_covar,
+                             estep_backend=estep_backend,
+                             chunk_size=chunk_size)
     return res, synthetic
 
 
@@ -128,18 +151,23 @@ def fedgengmm(key: jax.Array, split: ClientSplit,
               h: int = 100,
               max_iter: int = 200, tol: float = 1e-3,
               reg_covar: float = 1e-6,
-              covariance_type: str = "diag") -> FedGenResult:
+              covariance_type: str = "diag",
+              estep_backend: str = "auto",
+              chunk_size: Optional[int] = None) -> FedGenResult:
     """Run the full one-shot pipeline on a partitioned dataset.
 
     Either fix ``k_clients`` (paper's main experiments, K_c = K) or pass
     ``k_candidates`` for per-client BIC selection (heterogeneous models).
+    ``estep_backend``/``chunk_size`` select the E-step engine for both the
+    local fits and the server refit (DESIGN.md §6).
     """
     k_local_train, k_agg = jax.random.split(key)
     if k_clients is not None:
         stacked, lls, iters = train_locals(
             k_local_train, jnp.asarray(split.data), jnp.asarray(split.mask),
             k_clients, max_iter=max_iter, tol=tol, reg_covar=reg_covar,
-            covariance_type=covariance_type)
+            covariance_type=covariance_type, estep_backend=estep_backend,
+            chunk_size=chunk_size)
         local_gmms = [
             GMM(stacked.weights[i], stacked.means[i], stacked.covs[i])
             for i in range(split.data.shape[0])]
@@ -150,13 +178,15 @@ def fedgengmm(key: jax.Array, split: ClientSplit,
         assert k_candidates is not None, "need k_clients or k_candidates"
         local_results = train_locals_bic(
             k_local_train, split, k_candidates, max_iter=max_iter, tol=tol,
-            reg_covar=reg_covar)
+            reg_covar=reg_covar, covariance_type=covariance_type,
+            estep_backend=estep_backend, chunk_size=chunk_size)
         local_gmms = [r.gmm for r in local_results]
 
     res, synthetic = aggregate(
         k_agg, local_gmms, split.sizes, h=h, k_global=k_global,
         k_candidates=k_candidates, max_iter=max_iter, tol=tol,
-        reg_covar=reg_covar, covariance_type=covariance_type)
+        reg_covar=reg_covar, covariance_type=covariance_type,
+        estep_backend=estep_backend, chunk_size=chunk_size)
 
     uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
     down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G

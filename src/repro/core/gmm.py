@@ -14,7 +14,6 @@ VMEM tiling, and this module is its reference semantics.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

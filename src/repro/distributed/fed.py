@@ -19,16 +19,16 @@ clients per shard (the client axis is reshaped to (shards, per_shard)).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
-                           init_from_means, m_step)
+from repro.core.em import (SufficientStats, e_step_stats,
+                           e_step_stats_chunked, fit_gmm, init_from_means,
+                           m_step)
 from repro.core.gmm import GMM, merge_gmms_stacked
 
 
@@ -40,11 +40,15 @@ class ShardedFedResult(NamedTuple):
 
 
 def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
-                   h: int = 100, max_iter: int = 200, tol: float = 1e-3):
+                   h: int = 100, max_iter: int = 200, tol: float = 1e-3,
+                   estep_backend: str = "auto",
+                   chunk_size: int | None = None):
     """One-shot FedGenGMM over a device mesh.
 
     data: (C, N, d), mask: (C, N) with C divisible by the data-axis size.
     Returns ShardedFedResult (global model replicated).
+    ``estep_backend``/``chunk_size`` select the E-step engine for both the
+    per-shard local fits and the replicated server refit.
     """
     axis = "data"
     n_shards = mesh.shape[axis]
@@ -58,7 +62,8 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
 
         def one(kk, x, w):
             res = fit_gmm(kk, x, k, sample_weight=w, max_iter=max_iter,
-                          tol=tol)
+                          tol=tol, estep_backend=estep_backend,
+                          chunk_size=chunk_size)
             return res.gmm.weights, res.gmm.means, res.gmm.covs
 
         w, mu, cov = jax.vmap(one)(keys, data_shard, mask_shard)
@@ -82,21 +87,35 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
     n_synth = h * k * c
     k_sample, k_fit = jax.random.split(jax.random.fold_in(key, 1))
     synth = merged.sample(k_sample, n_synth)
-    res = fit_gmm(k_fit, synth, k_global, max_iter=max_iter, tol=tol)
+    res = fit_gmm(k_fit, synth, k_global, max_iter=max_iter, tol=tol,
+                  estep_backend=estep_backend, chunk_size=chunk_size)
     return ShardedFedResult(res.gmm, w_all, mu_all, cov_all)
 
 
 def dem_sharded(mesh, key, data, mask, k: int, init_centers,
                 max_rounds: int = 100, tol: float = 1e-3,
-                reg_covar: float = 1e-6) -> tuple[GMM, jax.Array]:
+                reg_covar: float = 1e-6,
+                estep_backend: str = "auto",
+                chunk_size: int | None = None) -> tuple[GMM, jax.Array]:
     """Distributed EM over the mesh: one psum of sufficient statistics per
-    EM round (the iterative baseline's communication pattern)."""
+    EM round (the iterative baseline's communication pattern).
+
+    With ``chunk_size`` set, each shard streams its clients' rows through
+    :func:`e_step_stats_chunked` so per-round shard memory is bounded by
+    (chunk_size, K) rather than (N, K) — the psum payload is unchanged
+    (SufficientStats is already the reduced form).
+    """
     axis = "data"
     d = data.shape[-1]
 
+    def per_client_stats(gmm, x, w):
+        if chunk_size is None:
+            return e_step_stats(gmm, x, w, estep_backend=estep_backend)
+        return e_step_stats_chunked(gmm, x, w, chunk_size, estep_backend)
+
     def sharded_round(gmm_leaves, data_shard, mask_shard):
         gmm = GMM(*gmm_leaves)
-        per = jax.vmap(lambda x, w: e_step_stats(gmm, x, w))(
+        per = jax.vmap(lambda x, w: per_client_stats(gmm, x, w))(
             data_shard, mask_shard)
         local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
         # === one all-reduce per EM round ===

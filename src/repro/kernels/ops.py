@@ -8,7 +8,6 @@ with the TPU lowering at f32).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

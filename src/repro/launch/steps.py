@@ -3,7 +3,6 @@ specs — shared by the real trainer, the serving loop, and the dry-run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

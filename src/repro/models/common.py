@@ -7,7 +7,6 @@ pytree (same code path => specs can't drift from params).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

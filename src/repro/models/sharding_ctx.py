@@ -14,7 +14,7 @@ without a mesh context (CPU smoke tests) constraints are no-ops.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Union
+from typing import Sequence, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -25,7 +25,6 @@ import numpy as np
 from repro.core.em import fit_gmm
 from repro.core.fedgen import aggregate
 from repro.core.gmm import GMM
-from repro.models.common import rms_norm
 from repro.models.transformer import (ModelConfig, _backbone, _embed,
                                       _run_encoder)
 

@@ -1,0 +1,260 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing API.
+
+This container has no network access, so the real library cannot be
+installed. The shim implements the small surface our test suite uses —
+``given``, ``settings``, ``assume`` and the ``strategies`` combinators —
+backed by *deterministic* seeded draws: each test function gets its own
+RNG seeded from its qualified name, so runs are reproducible and failures
+are replayable, at the cost of hypothesis' adaptive shrinking.
+
+``install()`` registers the shim as the ``hypothesis`` /
+``hypothesis.strategies`` modules in ``sys.modules``; ``tests/conftest.py``
+calls it only when the real library is missing, so an environment that does
+have hypothesis uses the real thing untouched.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+
+__all__ = ["given", "settings", "assume", "HealthCheck", "install",
+           "strategies"]
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by assume(False); the current example is silently skipped."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Accept-anything placeholder for settings(suppress_health_check=...)."""
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+# ----------------------------------------------------------------------
+# Strategies
+# ----------------------------------------------------------------------
+
+class SearchStrategy:
+    """A strategy is just a named wrapper around draw(rng) -> value."""
+
+    def __init__(self, draw, name="strategy"):
+        self._draw = draw
+        self._name = name
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)),
+                              f"{self._name}.map")
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption(f"filter on {self._name} never held")
+        return SearchStrategy(draw, f"{self._name}.filter")
+
+    def __repr__(self):
+        return f"<shim {self._name}>"
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 if max_value is None else int(max_value)
+    return SearchStrategy(lambda rng: rng.randint(lo, hi),
+                          f"integers({lo}, {hi})")
+
+
+def floats(min_value=None, max_value=None, allow_nan=False,
+           allow_infinity=False, width=64) -> SearchStrategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng):
+        # Edge values matter more than the bulk for property tests: hit the
+        # endpoints with small probability instead of only sampling uniform.
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw, f"floats({lo}, {hi})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))],
+                          f"sampled_from(<{len(elements)}>)")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def one_of(*strats) -> SearchStrategy:
+    flat = []
+    for s in strats:  # hypothesis accepts one_of([a, b]) and one_of(a, b)
+        flat.extend(s if isinstance(s, (list, tuple)) else [s])
+    return SearchStrategy(
+        lambda rng: flat[rng.randrange(len(flat))].example(rng),
+        f"one_of(<{len(flat)}>)")
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=None) -> SearchStrategy:
+    hi = (min_size + 10) if max_size is None else max_size
+    return SearchStrategy(
+        lambda rng: [elements.example(rng)
+                     for _ in range(rng.randint(min_size, hi))],
+        f"lists({elements._name})")
+
+
+def tuples(*strats) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strats),
+                          "tuples")
+
+
+# ----------------------------------------------------------------------
+# given / settings
+# ----------------------------------------------------------------------
+
+class settings:
+    """Decorator recording (max_examples,); everything else is accepted and
+    ignored — deadlines and health checks have no meaning for seeded draws."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, derandomize=False, **_ignored):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+    # no-op profile API, for conftests that configure the real library
+    _profiles: dict = {}
+
+    @classmethod
+    def register_profile(cls, name, profile=None, **kwargs):
+        cls._profiles[name] = profile or kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Keyword-strategy ``@given``: runs the wrapped test once per example
+    with deterministic draws (seed = crc32 of the test's qualified name)."""
+    if arg_strategies:
+        raise TypeError(
+            "the offline hypothesis shim supports keyword strategies only, "
+            "e.g. @given(k=st.integers(1, 5))")
+    for name, strat in kw_strategies.items():
+        if not isinstance(strat, SearchStrategy):
+            raise TypeError(f"{name}={strat!r} is not a shim strategy")
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        unknown = set(kw_strategies) - set(sig.parameters)
+        if unknown:
+            raise TypeError(f"@given strategies {sorted(unknown)} do not "
+                            f"match parameters of {fn.__name__}")
+
+        def wrapper(*args, **kwargs):
+            # @settings may sit above @given (tags the wrapper) or below it
+            # (tags the inner fn); honor both like real hypothesis does
+            s = (getattr(wrapper, "_shim_settings", None)
+                 or getattr(fn, "_shim_settings", None))
+            n = s.max_examples if s is not None else DEFAULT_MAX_EXAMPLES
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            ran = 0
+            for _ in range(n * 5):  # head-room for assume() rejections
+                if ran >= n:
+                    break
+                drawn = {name: strat.example(rng)
+                         for name, strat in kw_strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {drawn!r}: {e}"
+                    ) from e
+                ran += 1
+            if ran == 0:
+                # mirror hypothesis' FailedHealthCheck: a test whose every
+                # example was rejected must not silently pass
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume()/filter rejected all "
+                    f"{n * 5} drawn examples; property was never checked")
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        if hasattr(fn, "pytestmark"):  # marks applied below @given
+            wrapper.pytestmark = fn.pytestmark
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the strategy parameters from pytest so it doesn't look for
+        # fixtures named after them; remaining parameters stay visible.
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return decorate
+
+
+# ----------------------------------------------------------------------
+# Module registration
+# ----------------------------------------------------------------------
+
+def install():
+    """Register the shim as ``hypothesis`` (+``.strategies``) in sys.modules.
+    Idempotent; returns the module object."""
+    if "hypothesis" in sys.modules:
+        return sys.modules["hypothesis"]
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "just",
+                 "one_of", "lists", "tuples", "SearchStrategy"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.__version__ = "0.0.0-offline-shim"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    return hyp
+
+
+strategies = sys.modules[__name__]  # allow `from _hypothesis_shim import strategies`

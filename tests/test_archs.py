@@ -122,7 +122,6 @@ def test_prefill_decode_matches_full_forward(arch):
 
     # full forward over S+1 tokens; compare last position pre-loss logits
     from repro.models.transformer import _backbone, _embed, _run_encoder
-    from repro.models.common import rms_norm
 
     def full_logits(p):
         x = _embed(p, cfg, full["tokens"])

@@ -8,6 +8,9 @@ import pytest
 from repro.core import fit_gmm, partition
 from repro.core.continual import continual_round, init_state
 
+# end-to-end fits: multi-second EM training loops on CPU
+pytestmark = pytest.mark.slow
+
 
 def make_window(rng, mus, active, n=900):
     """Data drawn only from the ``active`` subset of components."""

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.data import (REGISTRY, batches, fit_minmax, fit_pca, load,
+from repro.data import (batches, fit_minmax, fit_pca, load,
                         synthetic_stream, transform_pca)
 
 EXPECTED = {  # name -> (d, n_classes, scheme, K, clients)  [Tables 1 & 3]

@@ -8,8 +8,11 @@ import pytest
 from repro.core import dem, e_step_stats, fit_gmm, partition
 from repro.core.dem import (fed_kmeans_centers, max_separated_centers,
                             pilot_subset_centers)
-from repro.core.em import init_from_means, m_step
+from repro.core.em import init_from_means
 from conftest import planted_gmm_data
+
+# end-to-end fits: multi-second EM training loops on CPU
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")

@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# end-to-end fits: multi-second EM training loops on CPU
+pytestmark = pytest.mark.slow
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

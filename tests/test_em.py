@@ -3,7 +3,6 @@ subset EM, BIC model selection, full-covariance path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as hst
 
 from repro.core.em import (e_step_stats, e_step_stats_fused, em_step, fit_gmm,

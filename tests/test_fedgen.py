@@ -9,6 +9,9 @@ import pytest
 from repro.core import (dem, fedgengmm, fit_gmm, partition)
 from conftest import planted_gmm_data
 
+# end-to-end fits: multi-second EM training loops on CPU
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 import scipy.stats as st
 from hypothesis import given, settings, strategies as hst
 

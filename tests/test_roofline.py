@@ -10,9 +10,8 @@ import pytest
 sys.path.insert(0, ".")  # benchmarks package lives at repo root
 
 from benchmarks.roofline import forward_flops_per_token, n_params, step_flops
-from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.models import init_params
-from repro.models.common import count_params
 
 
 @pytest.mark.parametrize("arch", list_archs())

@@ -3,7 +3,6 @@ pytrees must structurally match the actual param/cache pytrees (this is
 exactly what jit in_shardings dies on at 512 devices — caught here on CPU
 with eval_shape, no allocation)."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -9,6 +9,9 @@ from repro.core import aggregate, fit_gmm
 from repro.core.splitmerge import split_merge_fit
 from conftest import planted_gmm_data
 
+# end-to-end fits: multi-second EM training loops on CPU
+pytestmark = pytest.mark.slow
+
 
 def test_split_merge_never_worse():
     x, _, _ = planted_gmm_data(np.random.default_rng(3), n=2000, k=4,

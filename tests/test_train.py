@@ -3,7 +3,6 @@ an end-to-end loss-decrease run on a tiny arch."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.optim import (AdamWConfig, apply_updates, init_opt_state,
