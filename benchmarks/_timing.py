@@ -1,0 +1,40 @@
+"""Shared micro-benchmark timing harness.
+
+One implementation for every bench module so the noise-mitigation scheme
+(best-of-N, interleaving) can only evolve in one place and rows stay
+comparable with the tracked BENCH_streaming.json trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_pair(fa, fb=None, iters: int = 10):
+    """Interleaved best-of-iters wall time in us -> (us_a, us_b).
+
+    min is robust to scheduler noise, and alternating the measurements
+    means a bursty window (CPU steal on a small shared box) cannot land on
+    one path's entire block and fake a slowdown — each path's min still
+    finds its quiet windows. ``fb=None`` times a single function
+    (us_b = inf).
+    """
+    jax.block_until_ready(fa())  # warmup/compile
+    if fb is not None:
+        jax.block_until_ready(fb())
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fa())
+        best_a = min(best_a, time.time() - t0)
+        if fb is not None:
+            t0 = time.time()
+            jax.block_until_ready(fb())
+            best_b = min(best_b, time.time() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+def time_one(fn, iters: int = 10) -> float:
+    """Best-of-iters wall time of one function in us."""
+    return time_pair(fn, None, iters)[0]

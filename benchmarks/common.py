@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dem, fedgengmm, fit_gmm, partition
-from repro.core.metrics import auc_pr, anomaly_scores
+from repro.core.metrics import (anomaly_scores, auc_pr, auc_pr_for_model,
+                                average_log_likelihood)
 from repro.data import load
 
 QUICK_SIZES = {  # n_train per dataset in quick (CI) mode
@@ -30,19 +31,19 @@ def load_quick(name: str, seed: int = 0, quick: bool = True):
     return load(name, np.random.default_rng(seed), **kw)
 
 
-def eval_auc(gmm, ds) -> float:
-    s_in = anomaly_scores(gmm, jnp.asarray(ds.x_test_in))
-    s_out = anomaly_scores(gmm, jnp.asarray(ds.x_test_ood))
-    scores = np.concatenate([s_in, s_out])
-    labels = np.concatenate([np.zeros(len(s_in)), np.ones(len(s_out))])
-    return auc_pr(scores, labels)
+def eval_auc(gmm, ds, chunk_size=None) -> float:
+    return auc_pr_for_model(gmm, jnp.asarray(ds.x_test_in),
+                            jnp.asarray(ds.x_test_ood),
+                            chunk_size=chunk_size)
 
 
-def eval_auc_local_mean(local_gmms, ds) -> float:
+def eval_auc_local_mean(local_gmms, ds, chunk_size=None) -> float:
     """Local-models baseline: average the per-client scores (§5.4)."""
-    s_in = np.mean([anomaly_scores(g, jnp.asarray(ds.x_test_in))
+    s_in = np.mean([anomaly_scores(g, jnp.asarray(ds.x_test_in),
+                                   chunk_size=chunk_size)
                     for g in local_gmms], axis=0)
-    s_out = np.mean([anomaly_scores(g, jnp.asarray(ds.x_test_ood))
+    s_out = np.mean([anomaly_scores(g, jnp.asarray(ds.x_test_ood),
+                                    chunk_size=chunk_size)
                      for g in local_gmms], axis=0)
     scores = np.concatenate([s_in, s_out])
     labels = np.concatenate([np.zeros(len(s_in)), np.ones(len(s_out))])
@@ -54,9 +55,15 @@ def run_methods(ds, alpha: float, seed: int, *,
                 k_clients: Optional[int] = None,
                 n_clients: Optional[int] = None,
                 h: int = 50,
+                chunk_size: Optional[int] = None,
                 methods=("fedgen", "dem1", "dem2", "dem3", "local",
                          "central")) -> dict:
-    """Returns {method: {loglik, auc_pr, rounds, seconds}}."""
+    """Returns {method: {loglik, auc_pr, rounds, seconds}}.
+
+    ``chunk_size`` runs every method — training *and* scoring — through
+    the streaming engine in O(chunk·K) memory (DESIGN.md §6): the
+    memory-constrained edge-client configuration of Fig. 5.
+    """
     k = k or ds.k_global
     k_clients = k_clients or k
     n_clients = n_clients or ds.n_clients
@@ -67,15 +74,19 @@ def run_methods(ds, alpha: float, seed: int, *,
     key = jax.random.key(seed)
     out = {}
 
+    def score(gmm):
+        return average_log_likelihood(gmm, xj, chunk_size=chunk_size)
+
     local_gmms = None
     if "fedgen" in methods or "local" in methods:
         t0 = time.time()
         fr = fedgengmm(jax.random.fold_in(key, 0), split,
-                       k_clients=k_clients, k_global=k, h=h)
+                       k_clients=k_clients, k_global=k, h=h,
+                       chunk_size=chunk_size)
         if "fedgen" in methods:
             out["fedgen"] = {
-                "loglik": float(fr.global_gmm.score(xj)),
-                "auc_pr": eval_auc(fr.global_gmm, ds),
+                "loglik": score(fr.global_gmm),
+                "auc_pr": eval_auc(fr.global_gmm, ds, chunk_size),
                 "rounds": fr.comm.rounds,
                 "uplink_floats": fr.comm.uplink_floats,
                 "seconds": time.time() - t0,
@@ -83,10 +94,10 @@ def run_methods(ds, alpha: float, seed: int, *,
         local_gmms = fr.local_gmms
     if "local" in methods and local_gmms is not None:
         t0 = time.time()
-        scores = [float(g.score(xj)) for g in local_gmms]
+        scores = [score(g) for g in local_gmms]
         out["local"] = {
             "loglik": float(np.mean(scores)),
-            "auc_pr": eval_auc_local_mean(local_gmms, ds),
+            "auc_pr": eval_auc_local_mean(local_gmms, ds, chunk_size),
             "rounds": 0, "uplink_floats": 0,
             "seconds": time.time() - t0,
         }
@@ -95,20 +106,22 @@ def run_methods(ds, alpha: float, seed: int, *,
         if nm not in methods:
             continue
         t0 = time.time()
-        dr = dem(jax.random.fold_in(key, 10 + init), split, k, init=init)
+        dr = dem(jax.random.fold_in(key, 10 + init), split, k, init=init,
+                 chunk_size=chunk_size)
         out[nm] = {
-            "loglik": float(dr.global_gmm.score(xj)),
-            "auc_pr": eval_auc(dr.global_gmm, ds),
+            "loglik": score(dr.global_gmm),
+            "auc_pr": eval_auc(dr.global_gmm, ds, chunk_size),
             "rounds": int(dr.n_rounds),
             "uplink_floats": dr.comm.uplink_floats,
             "seconds": time.time() - t0,
         }
     if "central" in methods:
         t0 = time.time()
-        res = fit_gmm(jax.random.fold_in(key, 99), xj, k)
+        res = fit_gmm(jax.random.fold_in(key, 99), xj, k,
+                      chunk_size=chunk_size)
         out["central"] = {
-            "loglik": float(res.gmm.score(xj)),
-            "auc_pr": eval_auc(res.gmm, ds),
+            "loglik": score(res.gmm),
+            "auc_pr": eval_auc(res.gmm, ds, chunk_size),
             "rounds": 0, "uplink_floats": ds.x_train.size,
             "seconds": time.time() - t0,
         }

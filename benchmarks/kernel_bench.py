@@ -3,34 +3,32 @@ kernels themselves are TPU-targeted; interpret mode is correctness-only and
 its timing is meaningless, so we report the oracle path + a one-shot
 interpret-mode parity check).
 
-Also benchmarks the E-step *engine* backends end to end — reference
-(full-batch jnp), fused (Pallas kernel; real timing on TPU only), and
-chunked (lax.scan streaming accumulator) — in one run, together with the
-responsibility-matrix working set each needs, so both the speedup and the
-memory ceiling of the streaming path are measurable."""
+Also benchmarks the *engine* stages end to end — E-step, k-means Lloyd
+sweep, and BIC scoring, each as reference (full-batch jnp), fused (Pallas
+kernel; real timing on TPU only), and chunked (lax.scan streaming
+accumulator) — in one run, together with the (N, K)-block working set each
+needs, so both the speedup and the memory ceiling of the streaming paths
+are measurable."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.em import e_step_stats, e_step_stats_chunked
+try:  # package import (benchmarks/run.py)
+    from benchmarks._timing import time_one as _time
+    from benchmarks._timing import time_pair as _time_pair
+except ImportError:  # documented standalone: python benchmarks/kernel_bench.py
+    from _timing import time_one as _time
+    from _timing import time_pair as _time_pair
+from repro.core.em import bic_streaming, e_step_stats, e_step_stats_chunked
 from repro.core.gmm import GMM
+from repro.core.kmeans import kmeans
 from repro.kernels import ops, ref
 from repro.kernels.estep_stats import DEFAULT_BLOCK_N
 
 SHAPES = [(20000, 24, 30), (20000, 84, 10), (50000, 38, 10)]
 ENGINE_CHUNK = 4096
-
-
-def _time(fn, iters=5):
-    jax.block_until_ready(fn())  # warmup/compile
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn())
-    return (time.time() - t0) / iters * 1e6
 
 
 def run(quick: bool = True) -> list[str]:
@@ -60,6 +58,8 @@ def run(quick: bool = True) -> list[str]:
         rows.append(f"kernel/estep_pallas_parity/N2048d{d}K{k},0,{err:.2e}")
 
         rows.extend(_engine_rows(x, mu, var, lw, n, d, k))
+        rows.extend(_kmeans_rows(x, n, d, k))
+        rows.extend(_scoring_rows(x, mu, var, lw, n, d, k))
     return rows
 
 
@@ -97,6 +97,47 @@ def _engine_rows(x, mu, var, lw, n, d, k) -> list[str]:
         # us column numeric (0 = not timed, like the parity rows).
         out.append(f"engine/estep_fused/N{n}d{d}K{k},0,skipped_not_tpu")
     return out
+
+
+def _kmeans_rows(x, n, d, k) -> list[str]:
+    """Full-batch vs chunked Lloyd engine (fixed 10 sweeps, tol=0 so both
+    run the same iteration count). Working-set column: the (rows, K)
+    distance block each sweep materializes."""
+    mib = lambda rows_resident: rows_resident * k * 4 / 2**20
+    key = jax.random.key(0)
+    us_full, us_chunk = _time_pair(
+        lambda: kmeans(key, x, k, max_iter=10, tol=0.0).centers,
+        lambda: kmeans(key, x, k, max_iter=10, tol=0.0,
+                       chunk_size=ENGINE_CHUNK).centers)
+    out = [f"engine/kmeans_full/N{n}d{d}K{k},{us_full:.0f},{mib(n):.2f}",
+           f"engine/kmeans_chunked_c{ENGINE_CHUNK}/N{n}d{d}K{k},"
+           f"{us_chunk:.0f},{mib(ENGINE_CHUNK):.2f}"]
+    # interpret-mode parity of the Pallas assignment kernel (not a timing)
+    sub = x[:2048]
+    centers = x[:k]
+    idx_p, d2_p = ops.kmeans_assign(sub, centers, interpret=True)
+    from repro.core.kmeans import _sq_dists
+    dref = _sq_dists(sub, centers)
+    err = max(float(jnp.sum(idx_p != jnp.argmin(dref, 1))),
+              float(jnp.max(jnp.abs(d2_p - jnp.min(dref, 1)))))
+    out.append(f"kernel/kmeans_assign_parity/N2048d{d}K{k},0,{err:.2e}")
+    return out
+
+
+def _scoring_rows(x, mu, var, lw, n, d, k) -> list[str]:
+    """Full-batch GMM.bic vs streaming BIC (the per-candidate model
+    selection cost of TrainGMM). Working-set column: the (rows, K)
+    log-prob block."""
+    gmm = GMM(jnp.exp(lw), mu, var)
+    mib = lambda rows_resident: rows_resident * k * 4 / 2**20
+    bic_full = jax.jit(lambda x: gmm.bic(x))
+    bic_chunk = jax.jit(lambda x: bic_streaming(
+        gmm, x, chunk_size=ENGINE_CHUNK, backend="reference"))
+    us_full, us_chunk = _time_pair(lambda: bic_full(x),
+                                   lambda: bic_chunk(x))
+    return [f"engine/bic_full/N{n}d{d}K{k},{us_full:.0f},{mib(n):.2f}",
+            f"engine/bic_chunked_c{ENGINE_CHUNK}/N{n}d{d}K{k},"
+            f"{us_chunk:.0f},{mib(ENGINE_CHUNK):.2f}"]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,126 @@
+"""Streaming-engine trajectory benchmark (DESIGN.md §6).
+
+Times every stage of the constant-memory TrainGMM pipeline — k-means Lloyd
+sweeps, init label statistics, the E-step, and BIC scoring — full-batch vs
+chunked. In full mode (standalone, or ``BENCH_FULL=1 benchmarks/run.py``)
+it also writes the results to ``BENCH_streaming.json`` (repo root) in
+machine-readable form so the perf trajectory is tracked across PRs:
+
+    {"stages": {stage: {"full_us", "chunked_us", "full_peak_bytes",
+                        "chunked_peak_bytes", "slowdown"}}, ...}
+
+Quick (CI) mode runs a scaled-down sweep and prints rows only — it never
+touches the tracked JSON, so benchmark smoke runs don't dirty the working
+tree or replace reference timings with noisy-machine numbers.
+
+``peak_bytes`` is the analytic per-stage working set: the (rows, K) block
+(distances / responsibilities / log-probs) for the Lloyd, E-step and BIC
+stages, and the (rows, d) weighted-row block for the label statistics
+(whose (N, K) one-hot no longer exists on either path). ``slowdown`` is
+chunked/full wall time — the price of O(chunk·K) memory, tracked to stay
+under 2x.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # package import (benchmarks/run.py)
+    from benchmarks._timing import time_one as _time
+    from benchmarks._timing import time_pair as _time_pair
+except ImportError:  # standalone: python benchmarks/streaming_bench.py
+    from _timing import time_one as _time
+    from _timing import time_pair as _time_pair
+from repro.core.em import (bic_streaming, e_step_stats, init_from_kmeans,
+                           label_stats)
+from repro.core.gmm import GMM
+from repro.core.kmeans import kmeans
+
+N_FULL, N_QUICK, D, K = 100_000, 20_000, 16, 8
+# 8192 amortizes CPU scan serialization to <2x full-batch wall time while
+# keeping the per-stage working set at 8192·K·4 = 256 KiB (vs 3 MiB full
+# at N=100k); on TPU the fused kernels re-tile each chunk internally.
+CHUNK = 8192
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_streaming.json"
+
+
+def _stages(x, gmm, assignments):
+    """{stage: (full_fn, chunked_fn, full_peak_bytes, chunked_peak_bytes)}.
+    Data is a traced jit argument everywhere — a closed-over array would be
+    constant-folded by XLA and the full-batch timings would be fiction."""
+    n = x.shape[0]
+    nk = lambda rows: rows * K * 4
+    nd = lambda rows: rows * D * 4
+    key = jax.random.key(0)
+    lbl_full = jax.jit(lambda x, a: label_stats(x, a, K).s1)
+    lbl_chunk = jax.jit(lambda x, a: label_stats(x, a, K,
+                                                 chunk_size=CHUNK).s1)
+    es_full = jax.jit(lambda x: e_step_stats(gmm, x).s1)
+    es_chunk = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=CHUNK).s1)
+    bic_full = jax.jit(lambda x: gmm.bic(x))
+    bic_chunk = jax.jit(lambda x: bic_streaming(gmm, x, chunk_size=CHUNK))
+    return {
+        "kmeans_lloyd": (
+            lambda: kmeans(key, x, K, max_iter=10, tol=0.0).centers,
+            lambda: kmeans(key, x, K, max_iter=10, tol=0.0,
+                           chunk_size=CHUNK).centers,
+            nk(n), nk(CHUNK)),
+        "init_label_stats": (
+            lambda: lbl_full(x, assignments),
+            lambda: lbl_chunk(x, assignments),
+            nd(n), nd(CHUNK)),
+        "em_estep": (
+            lambda: es_full(x), lambda: es_chunk(x), nk(n), nk(CHUNK)),
+        "bic_score": (
+            lambda: bic_full(x), lambda: bic_chunk(x), nk(n), nk(CHUNK)),
+    }
+
+
+def run(quick: bool = True) -> list[str]:
+    n = N_QUICK if quick else N_FULL
+    rng = np.random.default_rng(0)
+    mus = rng.normal(0, 5, (K, D)).astype(np.float32)
+    comp = rng.integers(0, K, n)
+    x = jnp.asarray(mus[comp] + rng.normal(0, 0.7, (n, D)).astype(np.float32))
+    gmm = GMM(jnp.full((K,), 1.0 / K), jnp.asarray(mus),
+              jnp.full((K, D), 0.5))
+    assignments = jnp.asarray(comp, jnp.int32)
+
+    report = {
+        "backend": jax.default_backend(),
+        "shape": {"n": n, "d": D, "k": K},
+        "chunk_size": CHUNK,
+        "stages": {},
+    }
+    rows = []
+    for stage, (full_fn, chunked_fn, full_b, chunk_b) in _stages(
+            x, gmm, assignments).items():
+        full_us, chunked_us = _time_pair(full_fn, chunked_fn, iters=20)
+        report["stages"][stage] = {
+            "full_us": round(full_us),
+            "chunked_us": round(chunked_us),
+            "full_peak_bytes": full_b,
+            "chunked_peak_bytes": chunk_b,
+            "slowdown": round(chunked_us / full_us, 3),
+        }
+        rows.append(f"streaming/{stage}_full/N{n}d{D}K{K},{full_us:.0f},"
+                    f"{full_b / 2**20:.2f}")
+        rows.append(f"streaming/{stage}_chunked_c{CHUNK}/N{n}d{D}K{K},"
+                    f"{chunked_us:.0f},{chunk_b / 2**20:.2f}")
+    if not quick:
+        # end-to-end streaming init (4-restart k-means + label stats)
+        us = _time(lambda: init_from_kmeans(jax.random.key(1), x, K,
+                                            chunk_size=CHUNK).means, iters=1)
+        report["init_from_kmeans_chunked_us"] = round(us)
+        JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)
+    print(f"# wrote {JSON_PATH}")

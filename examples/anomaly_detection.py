@@ -15,9 +15,11 @@ ds = load_quick("vehicle")
 print(f"dataset: {ds.name}  train={ds.x_train.shape}  "
       f"anomaly_ratio={ds.anomaly_ratio}")
 
+# chunk_size streams training AND anomaly scoring through the engine in
+# O(chunk·K) memory — the edge-client mode; drop it for full-batch.
 for alpha in (1, 2):
     print(f"\n== Quantity(alpha={alpha}) heterogeneity ==")
-    res = run_methods(ds, alpha, seed=0)
+    res = run_methods(ds, alpha, seed=0, chunk_size=1024)
     for method, r in res.items():
         print(f"  {method:8s} AUC-PR={r['auc_pr']:.3f} "
               f"loglik={r['loglik']:8.3f} rounds={r['rounds']:>3}")

@@ -1,11 +1,16 @@
 """FedGenGMM core: GMM primitives, EM, federated one-shot aggregation and
 distributed-EM baselines."""
 from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
-from repro.core.em import (EMResult, SufficientStats, e_step_stats,
-                           e_step_stats_chunked, em_step, fit_gmm,
-                           fit_gmm_bic, fit_gmm_streaming, init_from_kmeans,
-                           init_from_means, m_step, resolve_estep_backend)
-from repro.core.kmeans import KMeansResult, federated_kmeans, kmeans
+from repro.core.em import (EMResult, SufficientStats, bic_streaming,
+                           e_step_stats, e_step_stats_chunked, em_step,
+                           fit_gmm, fit_gmm_bic, fit_gmm_streaming,
+                           init_from_kmeans, init_from_means, label_stats,
+                           log_prob_chunked, m_step, reduce_rows,
+                           resolve_backend, resolve_estep_backend,
+                           score_streaming, streaming_map_reduce,
+                           streaming_reduce)
+from repro.core.kmeans import (KMeansResult, federated_kmeans, kmeans,
+                               kmeans_multi)
 from repro.core.partition import (ClientSplit, partition, partition_dirichlet,
                                   partition_quantity)
 from repro.core.fedgen import (CommStats, FedGenResult, aggregate, fedgengmm,
@@ -20,8 +25,11 @@ __all__ = [
     "GMM", "merge_gmms", "merge_gmms_stacked",
     "EMResult", "SufficientStats", "e_step_stats", "e_step_stats_chunked",
     "em_step", "fit_gmm", "fit_gmm_bic", "fit_gmm_streaming",
-    "init_from_kmeans", "init_from_means", "m_step", "resolve_estep_backend",
-    "KMeansResult", "federated_kmeans", "kmeans",
+    "init_from_kmeans", "init_from_means", "label_stats", "m_step",
+    "bic_streaming", "score_streaming", "log_prob_chunked",
+    "reduce_rows", "streaming_reduce", "streaming_map_reduce",
+    "resolve_backend", "resolve_estep_backend",
+    "KMeansResult", "federated_kmeans", "kmeans", "kmeans_multi",
     "ClientSplit", "partition", "partition_dirichlet", "partition_quantity",
     "CommStats", "FedGenResult", "aggregate", "fedgengmm", "payload_floats",
     "train_locals", "train_locals_bic",

@@ -17,9 +17,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.em import (SufficientStats, e_step_stats,
-                           e_step_stats_chunked, fit_gmm, init_from_means,
-                           m_step)
+from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
+                           init_from_means, m_step)
 from repro.core.fedgen import CommStats, payload_floats
 from repro.core.gmm import GMM
 from repro.core.kmeans import federated_kmeans
@@ -74,10 +73,13 @@ def pilot_subset_centers(key: jax.Array, split: ClientSplit, k: int,
     return res.gmm.means
 
 
-def fed_kmeans_centers(key: jax.Array, split: ClientSplit, k: int) -> jax.Array:
-    """Init 3: one-shot federated k-means global centers."""
+def fed_kmeans_centers(key: jax.Array, split: ClientSplit, k: int,
+                       chunk_size: int | None = None) -> jax.Array:
+    """Init 3: one-shot federated k-means global centers. ``chunk_size``
+    streams the client-side Lloyd sweeps (DESIGN.md §6)."""
     return federated_kmeans(key, jnp.asarray(split.data), k,
-                            client_weights=jnp.asarray(split.mask))
+                            client_weights=jnp.asarray(split.mask),
+                            chunk_size=chunk_size)
 
 
 # ----------------------------------------------------------------------
@@ -90,15 +92,12 @@ def _dem_loop(gmm0: GMM, data: jax.Array, mask: jax.Array, tol: jax.Array,
               reg_covar: float, max_rounds: int,
               estep_backend: str = "auto", chunk_size: int | None = None):
     """data: (C, N, d), mask: (C, N). Aggregation over the client axis is a
-    tree-sum here; in the sharded runtime it is a jax.lax.psum."""
-
-    def per_client_stats(gmm, x, w):
-        if chunk_size is None:
-            return e_step_stats(gmm, x, w, estep_backend=estep_backend)
-        return e_step_stats_chunked(gmm, x, w, chunk_size, estep_backend)
+    tree-sum here; in the sharded runtime it is a jax.lax.psum. The
+    full-batch/chunked dispatch lives in the engine (``e_step_stats``)."""
 
     def global_stats(gmm: GMM) -> SufficientStats:
-        per_client = jax.vmap(lambda x, w: per_client_stats(gmm, x, w))(
+        per_client = jax.vmap(
+            lambda x, w: e_step_stats(gmm, x, w, estep_backend, chunk_size))(
             data, mask)
         return jax.tree.map(lambda s: jnp.sum(s, axis=0), per_client)
 
@@ -142,7 +141,7 @@ def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,
     elif init == 2:
         centers = pilot_subset_centers(k_init, split, k)
     elif init == 3:
-        centers = fed_kmeans_centers(k_init, split, k)
+        centers = fed_kmeans_centers(k_init, split, k, chunk_size=chunk_size)
     else:
         raise ValueError(f"unknown DEM init scheme {init}")
 

@@ -2,20 +2,30 @@
 convergence) plus BIC-based model selection — the TrainGMM procedure of
 Algorithm 4.1.
 
+This module also owns the **streaming-statistics engine** (DESIGN.md §6):
+one generic ``lax.scan``-over-row-chunks reduction (:func:`streaming_reduce`
+/ :func:`streaming_map_reduce`) plus the single ``chunk_size is None`` →
+full-batch / chunked dispatch (:func:`reduce_rows`). The E-step, the k-means
+Lloyd sweeps (``repro.core.kmeans``), the k-means-init label statistics and
+the log-likelihood/BIC scoring reductions below all run through it, so the
+whole TrainGMM pipeline — init, EM, model selection — has an O(chunk·K)
+constant-memory mode.
+
 Sample weights make padded/ragged federated client datasets representable as
 fixed-shape arrays (weight 0 = padding), which is what lets local training
-run under vmap/shard_map.
+run under vmap/shard_map — and what lets the engine pad row counts to chunk
+boundaries for free (zero-weight rows contribute exactly zero to every
+statistic).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gmm import GMM
-from repro.core.kmeans import kmeans_multi
 
 
 class EMResult(NamedTuple):
@@ -42,31 +52,116 @@ class SufficientStats(NamedTuple):
 
 
 # ----------------------------------------------------------------------
-# E / M steps
+# Streaming-statistics engine (DESIGN.md §6)
 # ----------------------------------------------------------------------
 
-ESTEP_BACKENDS = ("auto", "reference", "fused")
+ENGINE_BACKENDS = ("auto", "reference", "fused")
+ESTEP_BACKENDS = ENGINE_BACKENDS  # historical alias (PR 1 public name)
+
+
+def resolve_backend(backend: str, fused_supported: bool = True) -> str:
+    """Resolve the user-facing engine knob to a concrete implementation.
+
+    ``auto`` picks the fused Pallas kernel when it can win (the op has a
+    kernel and we are on a TPU backend); interpret mode on CPU is
+    bit-compatible but much slower than XLA, so ``auto`` keeps the
+    reference path there. Ops whose kernel does not support the requested
+    configuration (``fused_supported=False``, e.g. full covariance) always
+    fall back to reference semantics.
+    """
+    if backend not in ENGINE_BACKENDS:
+        raise ValueError(
+            f"engine backend must be one of {ENGINE_BACKENDS}, "
+            f"got {backend!r}")
+    if not fused_supported:
+        return "reference"
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "reference"
+    return backend
 
 
 def resolve_estep_backend(estep_backend: str, is_diagonal: bool) -> str:
-    """Resolve the user-facing backend knob to a concrete implementation.
-
-    ``auto`` picks the fused Pallas kernel when it can win (diagonal
-    covariance on a TPU backend); interpret mode on CPU is bit-compatible
-    but much slower than XLA, so ``auto`` keeps the reference path there.
-    The fused kernel only implements diagonal covariance, so full
-    covariance always falls back to reference semantics (DESIGN.md §6).
-    """
-    if estep_backend not in ESTEP_BACKENDS:
+    """E-step flavour of :func:`resolve_backend`: the fused kernel only
+    implements diagonal covariance (DESIGN.md §6)."""
+    try:
+        return resolve_backend(estep_backend, fused_supported=is_diagonal)
+    except ValueError:
         raise ValueError(
             f"estep_backend must be one of {ESTEP_BACKENDS}, "
-            f"got {estep_backend!r}")
-    if not is_diagonal:
-        return "reference"
-    if estep_backend == "auto":
-        return "fused" if jax.default_backend() == "tpu" else "reference"
-    return estep_backend
+            f"got {estep_backend!r}") from None
 
+
+def _pad_to_chunks(arrays: Sequence[jax.Array], chunk_size: int):
+    """Zero-pad leading axis N to a chunk multiple, reshape to
+    (n_chunks, chunk_size, ...). Zero padding is safe because every engine
+    statistic weights rows by a sample weight that pads to zero."""
+    chunk_size = int(chunk_size)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    n = arrays[0].shape[0]
+    n_chunks = -(-n // chunk_size)
+    pad = n_chunks * chunk_size - n
+    return tuple(
+        jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)).reshape(
+            (n_chunks, chunk_size) + a.shape[1:]) for a in arrays)
+
+
+def streaming_map_reduce(block_fn: Callable, arrays: Sequence[jax.Array],
+                         chunk_size: int):
+    """Scan ``block_fn`` over fixed-size row chunks of ``arrays``.
+
+    ``block_fn(*chunk_arrays) -> (stats, per_row)`` where ``stats`` is an
+    additive pytree (summed across chunks; pass ``()`` for map-only) and
+    ``per_row`` is a pytree of per-row outputs (stacked across chunks and
+    truncated back to N rows; pass ``()`` for reduce-only).
+
+    The working set is one chunk, not N: this is the constant-memory core
+    every streaming path shares. Stats accumulate at least in float32
+    (f64 stays f64 under x64) and are cast back to ``block_fn``'s output
+    dtypes, so callers see the same dtypes as a full-batch call.
+    """
+    n = arrays[0].shape[0]
+    chunks = _pad_to_chunks(arrays, chunk_size)
+    stats_shape, _ = jax.eval_shape(block_fn, *(c[0] for c in chunks))
+    init = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.promote_types(s.dtype, jnp.float32)),
+        stats_shape)
+
+    def body(carry, chunk):
+        stats, rows = block_fn(*chunk)
+        carry = jax.tree.map(lambda acc, v: acc + v.astype(acc.dtype),
+                             carry, stats)
+        return carry, rows
+
+    stats, rows = jax.lax.scan(body, init, chunks)
+    stats = jax.tree.map(lambda acc, s: acc.astype(s.dtype),
+                         stats, stats_shape)
+    rows = jax.tree.map(lambda r: r.reshape((-1,) + r.shape[2:])[:n], rows)
+    return stats, rows
+
+
+def streaming_reduce(block_fn: Callable, arrays: Sequence[jax.Array],
+                     chunk_size: int):
+    """Reduce-only :func:`streaming_map_reduce`: sum ``block_fn``'s additive
+    pytree over all row chunks."""
+    stats, _ = streaming_map_reduce(lambda *a: (block_fn(*a), ()),
+                                    arrays, chunk_size)
+    return stats
+
+
+def reduce_rows(block_fn: Callable, arrays: Sequence[jax.Array],
+                chunk_size: Optional[int] = None):
+    """THE chunk dispatch (previously copy-pasted across em/dem/fed):
+    ``chunk_size is None`` runs one full-batch call, an integer streams
+    fixed-size chunks through :func:`streaming_reduce`."""
+    if chunk_size is None:
+        return block_fn(*arrays)
+    return streaming_reduce(block_fn, arrays, chunk_size)
+
+
+# ----------------------------------------------------------------------
+# E / M steps
+# ----------------------------------------------------------------------
 
 def _e_step_stats_reference(gmm: GMM, x: jax.Array,
                             w: jax.Array) -> SufficientStats:
@@ -86,21 +181,26 @@ def _e_step_stats_reference(gmm: GMM, x: jax.Array,
 
 def e_step_stats(gmm: GMM, x: jax.Array,
                  sample_weight: Optional[jax.Array] = None,
-                 estep_backend: str = "auto") -> SufficientStats:
+                 estep_backend: str = "auto",
+                 chunk_size: Optional[int] = None) -> SufficientStats:
     """One E-step: responsibilities -> sufficient statistics.
 
     This is the communication payload of DEM (each client computes local
     stats; the server psums them) and the compute hot spot. The
     ``estep_backend`` knob dispatches between the pure-jnp reference path
     and the fused Pallas kernel (``repro.kernels.ops.estep_stats``), which
-    never materializes the (N, K) responsibility matrix.
+    never materializes the (N, K) responsibility matrix; ``chunk_size``
+    streams either backend through the engine in O(chunk·K) memory, so
+    this one function is the whole dispatch table for federated callers.
     """
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
     backend = resolve_estep_backend(estep_backend, gmm.is_diagonal)
     if backend == "fused":
-        return e_step_stats_fused(gmm, x, w)
-    return _e_step_stats_reference(gmm, x, w)
+        block = lambda xb, wb: e_step_stats_fused(gmm, xb, wb)
+    else:
+        block = lambda xb, wb: _e_step_stats_reference(gmm, xb, wb)
+    return reduce_rows(block, (x, w), chunk_size)
 
 
 def e_step_stats_fused(gmm: GMM, x: jax.Array,
@@ -128,41 +228,14 @@ def e_step_stats_chunked(gmm: GMM, x: jax.Array,
 
     ``SufficientStats`` is additive in N, so the full-batch statistics are
     the chunk-wise sum — the working set is one (chunk_size, K) block
-    instead of the whole (N, K) responsibility matrix. Rows are padded to a
-    multiple of ``chunk_size`` with zero sample weight, which contributes
-    exactly zero to every field. Accumulation runs at least in float32
-    (``promote_types(x.dtype, float32)``, so f64 stays f64 under x64); the
-    result is cast back to ``x.dtype`` so downstream loops see the same
-    dtypes as the full-batch path. Caveat: the *fused* backend computes
-    each chunk in f32 regardless (the kernel packs params as f32), so f64
-    precision is only preserved end-to-end on the reference backend.
+    instead of the whole (N, K) responsibility matrix (see
+    :func:`streaming_reduce` for padding/accumulation semantics). Caveat:
+    the *fused* backend computes each chunk in f32 regardless (the kernel
+    packs params as f32), so f64 precision is only preserved end-to-end on
+    the reference backend.
     """
-    n, d = x.shape
-    k = gmm.n_components
-    chunk_size = int(chunk_size)
-    if chunk_size <= 0:
-        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
-    n_chunks = -(-n // chunk_size)
-    pad = n_chunks * chunk_size - n
-    xc = jnp.pad(x, ((0, pad), (0, 0))).reshape(n_chunks, chunk_size, d)
-    wc = jnp.pad(w, (0, pad)).reshape(n_chunks, chunk_size)
-    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
-    s2_shape = (k, d) if gmm.is_diagonal else (k, d, d)
-    init = SufficientStats(
-        jnp.zeros((k,), acc_dtype), jnp.zeros((k, d), acc_dtype),
-        jnp.zeros(s2_shape, acc_dtype), jnp.zeros((), acc_dtype),
-        jnp.zeros((), acc_dtype))
-
-    def body(carry, chunk):
-        xb, wb = chunk
-        s = e_step_stats(gmm, xb, wb, estep_backend=estep_backend)
-        carry = jax.tree.map(lambda acc, v: acc + v.astype(acc.dtype),
-                             carry, s)
-        return carry, None
-
-    stats, _ = jax.lax.scan(body, init, (xc, wc))
-    return jax.tree.map(lambda s: s.astype(x.dtype), stats)
+    return e_step_stats(gmm, x, sample_weight, estep_backend,
+                        chunk_size=int(chunk_size))
 
 
 def m_step(stats: SufficientStats, reg_covar: float = 1e-6) -> GMM:
@@ -197,35 +270,132 @@ def em_step(gmm: GMM, x: jax.Array, sample_weight: Optional[jax.Array] = None,
     """One full EM iteration. Returns (new_gmm, avg_loglik_of_old_gmm).
 
     ``chunk_size=None`` runs the whole batch in one E-step; an integer
-    streams it through :func:`e_step_stats_chunked` in bounded memory.
+    streams it through the engine in bounded memory.
     """
-    if chunk_size is None:
-        stats = e_step_stats(gmm, x, sample_weight, estep_backend)
-    else:
-        stats = e_step_stats_chunked(gmm, x, sample_weight, chunk_size,
-                                     estep_backend)
+    stats = e_step_stats(gmm, x, sample_weight, estep_backend, chunk_size)
     avg_ll = stats.loglik / jnp.maximum(stats.wsum, 1e-12)
     return m_step(stats, reg_covar), avg_ll
+
+
+# ----------------------------------------------------------------------
+# Streaming scoring: log-likelihood and BIC without the (N, K) matrix
+# ----------------------------------------------------------------------
+
+def _log_prob_block(gmm: GMM, xb: jax.Array, backend: str) -> jax.Array:
+    """Mixture log density of one row block, (B, d) -> (B,). The fused
+    backend routes the (B, K) per-component density through the Pallas
+    ``gmm_logpdf`` kernel (diagonal only); reference uses ``GMM.log_prob``."""
+    if backend == "fused":
+        from repro.kernels import ops  # local import: kernels are optional
+        lp = ops.gmm_logpdf(xb, gmm.means, gmm.covs, jnp.log(gmm.weights))
+        return jax.scipy.special.logsumexp(lp, axis=1).astype(xb.dtype)
+    return gmm.log_prob(xb)
+
+
+def log_prob_chunked(gmm: GMM, x: jax.Array,
+                     chunk_size: Optional[int] = 4096,
+                     backend: str = "auto") -> jax.Array:
+    """``GMM.log_prob`` in fixed-size row chunks -> (N,).
+
+    Peak working set is one (chunk_size, K) density block instead of the
+    full (N, K) matrix — what the anomaly-detection scorer needs to run
+    over datasets that don't fit the full-batch path. ``chunk_size=None``
+    runs one full-batch block (same backend resolution), so callers can
+    delegate unconditionally like every other engine entry point.
+    """
+    backend = resolve_backend(backend, fused_supported=gmm.is_diagonal)
+    if chunk_size is None:
+        return _log_prob_block(gmm, x, backend)
+    _, lp = streaming_map_reduce(
+        lambda xb: ((), _log_prob_block(gmm, xb, backend)), (x,), chunk_size)
+    return lp
+
+
+def _score_sums(gmm: GMM, x: jax.Array, sample_weight: Optional[jax.Array],
+                chunk_size: Optional[int], backend: str):
+    """(sum_n w_n log p(x_n), sum_n w_n) through the engine."""
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    backend = resolve_backend(backend, fused_supported=gmm.is_diagonal)
+
+    def block(xb, wb):
+        lp = _log_prob_block(gmm, xb, backend)
+        return jnp.sum(lp * wb), jnp.sum(wb)
+
+    return reduce_rows(block, (x, w), chunk_size)
+
+
+def score_streaming(gmm: GMM, x: jax.Array,
+                    sample_weight: Optional[jax.Array] = None,
+                    chunk_size: Optional[int] = 4096,
+                    backend: str = "auto") -> jax.Array:
+    """Average log-likelihood (the paper's fitness score, Eq. 2) in
+    O(chunk·K) memory. Equals ``GMM.score`` up to float-summation order."""
+    total, wsum = _score_sums(gmm, x, sample_weight, chunk_size, backend)
+    return total / jnp.maximum(wsum, 1e-12)
+
+
+def bic_streaming(gmm: GMM, x: jax.Array,
+                  sample_weight: Optional[jax.Array] = None,
+                  chunk_size: Optional[int] = 4096,
+                  backend: str = "auto") -> jax.Array:
+    """Bayesian Information Criterion in O(chunk·K) memory (lower is
+    better). Equals ``GMM.bic`` up to float-summation order; this is what
+    makes BIC model selection over candidate K constant-memory."""
+    total, wsum = _score_sums(gmm, x, sample_weight, chunk_size, backend)
+    return gmm.n_free_params() * jnp.log(wsum) - 2.0 * total
 
 
 # ----------------------------------------------------------------------
 # Initialization
 # ----------------------------------------------------------------------
 
+def label_stats(x: jax.Array, assignments: jax.Array, k: int,
+                sample_weight: Optional[jax.Array] = None,
+                covariance_type: str = "diag",
+                chunk_size: Optional[int] = None) -> SufficientStats:
+    """Hard-assignment sufficient statistics via segment sums — the one-hot
+    (N, K) responsibility matrix of the classic k-means init never exists,
+    even full-batch; ``chunk_size`` additionally bounds the row working set.
+    """
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+
+    def block(xb, wb, ab):
+        s0 = jax.ops.segment_sum(wb, ab, num_segments=k)
+        s1 = jax.ops.segment_sum(xb * wb[:, None], ab, num_segments=k)
+        if covariance_type == "diag":
+            s2 = jax.ops.segment_sum(xb * xb * wb[:, None], ab,
+                                     num_segments=k)
+        else:
+            outer = xb[:, :, None] * xb[:, None, :] * wb[:, None, None]
+            s2 = jax.ops.segment_sum(outer, ab, num_segments=k)
+        return SufficientStats(s0, s1, s2, jnp.zeros((), xb.dtype),
+                               jnp.sum(wb))
+
+    return reduce_rows(block, (x, w, assignments), chunk_size)
+
+
 def init_from_kmeans(key: jax.Array, x: jax.Array, k: int,
                      sample_weight: Optional[jax.Array] = None,
                      covariance_type: str = "diag",
-                     reg_covar: float = 1e-6) -> GMM:
-    """sklearn-style init: k-means labels -> one-hot responsibilities -> M-step."""
+                     reg_covar: float = 1e-6,
+                     chunk_size: Optional[int] = None,
+                     assign_backend: str = "auto") -> GMM:
+    """sklearn-style init: k-means labels -> label stats -> M-step.
+
+    With ``chunk_size`` set, both the Lloyd iterations (chunked k-means,
+    see ``repro.core.kmeans``) and the label statistics stream in
+    O(chunk·K) memory, closing the init leg of the constant-memory
+    pipeline.
+    """
+    # Local import: this module hosts the engine that kmeans.py builds on.
+    from repro.core.kmeans import kmeans_multi
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
-    res = kmeans_multi(key, x, k, sample_weight=w, max_iter=50)
-    resp = jax.nn.one_hot(res.assignments, k, dtype=x.dtype) * w[:, None]
-    s0 = jnp.sum(resp, axis=0)
-    s1 = resp.T @ x
-    s2 = resp.T @ (x * x) if covariance_type == "diag" else jnp.einsum(
-        "nk,ni,nj->kij", resp, x, x)
-    stats = SufficientStats(s0, s1, s2, jnp.array(0.0, x.dtype), jnp.sum(w))
+    res = kmeans_multi(key, x, k, sample_weight=w, max_iter=50,
+                       chunk_size=chunk_size, assign_backend=assign_backend)
+    stats = label_stats(x, res.assignments, k, w, covariance_type, chunk_size)
     return m_step(stats, reg_covar)
 
 
@@ -291,7 +461,12 @@ def fit_gmm(key: jax.Array, x: jax.Array, k: int,
     (the paper's convergence criterion, 1e-3).
 
     ``estep_backend`` selects the E-step implementation (DESIGN.md §6);
-    ``chunk_size`` streams the E-step in bounded memory.
+    ``chunk_size`` streams the init (k-means + label stats) *and* every
+    E-step in bounded memory. The k-means assignment backend stays "auto"
+    (kernel on TPU, reference elsewhere) rather than following
+    ``estep_backend``: an explicitly requested fused E-step off-TPU is a
+    parity-testing configuration, and interpret-mode Lloyd sweeps would
+    make it unusably slow.
     """
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
@@ -300,7 +475,8 @@ def fit_gmm(key: jax.Array, x: jax.Array, k: int,
     resolve_estep_backend(estep_backend, covariance_type == "diag"
                           if init_gmm is None else init_gmm.is_diagonal)
     if init_gmm is None:
-        init_gmm = init_from_kmeans(key, x, k, w, covariance_type, reg_covar)
+        init_gmm = init_from_kmeans(key, x, k, w, covariance_type, reg_covar,
+                                    chunk_size=chunk_size)
     gmm, ll, it, converged = _em_loop(init_gmm, x, w, jnp.asarray(tol, x.dtype),
                                       reg_covar, max_iter, estep_backend,
                                       chunk_size)
@@ -315,9 +491,10 @@ def fit_gmm_streaming(key: jax.Array, x: jax.Array, k: int,
                       init_gmm: Optional[GMM] = None,
                       estep_backend: str = "auto",
                       chunk_size: int = 4096) -> EMResult:
-    """Streaming EM: every E-step scans (chunk_size, d) slices, so the
-    peak working set is O(chunk_size * K) instead of O(N * K) and N is no
-    longer bounded by one resident responsibility matrix. Mathematically
+    """Streaming EM: the k-means init, the label statistics and every
+    E-step scan (chunk_size, d) slices, so the peak working set is
+    O(chunk_size * K) instead of O(N * K) from init through convergence —
+    N is no longer bounded by any resident (N, K) array. Mathematically
     identical to :func:`fit_gmm` (chunk sums reorder float additions only).
     """
     return fit_gmm(key, x, k, sample_weight=sample_weight,
@@ -335,13 +512,24 @@ def fit_gmm_bic(key: jax.Array, x: jax.Array, k_candidates: Sequence[int],
                 chunk_size: Optional[int] = None) -> tuple[EMResult,
                                                            dict[int, float]]:
     """TrainGMM of Algorithm 4.1: fit every K in the candidate range, return
-    the fit minimizing BIC (plus all BIC scores)."""
+    the fit minimizing BIC (plus all BIC scores).
+
+    With ``chunk_size`` set the per-candidate scoring runs through
+    :func:`bic_streaming`, so model selection never materializes the
+    (N, K) log-prob matrix the full-batch ``GMM.bic`` builds.
+    """
     best, best_bic, bics = None, jnp.inf, {}
     for i, k in enumerate(k_candidates):
         res = fit_gmm(jax.random.fold_in(key, i), x, k, sample_weight,
                       covariance_type, max_iter, tol, reg_covar,
                       estep_backend=estep_backend, chunk_size=chunk_size)
-        b = float(res.gmm.bic(x, sample_weight))
+        # scoring backend stays "auto" (kernel on TPU, reference elsewhere)
+        # rather than following estep_backend, for the same reason fit_gmm
+        # pins the k-means assign backend: an explicit fused E-step off-TPU
+        # is a parity-testing configuration, and interpret-mode scoring of
+        # every candidate K would crawl.
+        b = float(bic_streaming(res.gmm, x, sample_weight,
+                                chunk_size=chunk_size))
         bics[k] = b
         if b < best_bic:
             best, best_bic = res, b

@@ -114,11 +114,10 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
     """Algorithm 4.1 lines 21-31: merge, sample S, train global model.
 
     The synthetic set S = H * sum_c K_c points is the largest dataset in
-    the pipeline, so ``chunk_size`` matters most here: it bounds the
-    refit's E-step working set at (chunk_size, K). (Two full-batch
-    materializations remain: the k-means init's (|S|, K) one-hot, and —
-    on the ``k_candidates`` path — the (|S|, K) log-prob that BIC scoring
-    builds per candidate. Chunking both is a ROADMAP item.)
+    the pipeline, so ``chunk_size`` matters most here: it bounds the whole
+    refit — the k-means init's Lloyd sweeps and label statistics, every
+    E-step, and (on the ``k_candidates`` path) the per-candidate BIC
+    scoring — at an O(chunk_size·K) working set (DESIGN.md §6).
     """
     merged = merge_gmms(local_gmms, jnp.asarray(sizes))
     n_synth = h * sum(g.n_components for g in local_gmms)

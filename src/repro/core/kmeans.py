@@ -1,6 +1,15 @@
 """K-means in JAX: k-means++ seeding, weighted Lloyd iterations, and the
 one-shot federated k-means of Dennis et al. '21 (paper ref [7]) used both
-standalone and as DEM init 3."""
+standalone and as DEM init 3.
+
+Lloyd sweeps run on the streaming-statistics engine (``repro.core.em``,
+DESIGN.md §6): each sweep reduces (counts, sums, inertia) sufficient
+statistics over row blocks — never an (N, K) one-hot — and with
+``chunk_size`` set the distance block itself shrinks to (chunk_size, K).
+Per-block assignment dispatches through the ``kmeans_assign`` Pallas kernel
+on TPU (``assign_backend="auto"``) and the matmul-identity reference
+elsewhere.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,6 +17,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.em import (reduce_rows, resolve_backend,
+                           streaming_map_reduce)
 
 
 class KMeansResult(NamedTuple):
@@ -23,6 +35,19 @@ def _sq_dists(x: jax.Array, centers: jax.Array) -> jax.Array:
     x2 = jnp.sum(x * x, axis=1, keepdims=True)           # (N, 1)
     c2 = jnp.sum(centers * centers, axis=1)[None, :]     # (1, K)
     return jnp.maximum(x2 - 2.0 * (x @ centers.T) + c2, 0.0)
+
+
+def _assign_block(xb: jax.Array, centers: jax.Array,
+                  backend: str) -> tuple[jax.Array, jax.Array]:
+    """Nearest-center assignment of one row block -> ((B,) int32, (B,) d2).
+    ``fused`` routes through the Pallas ``kmeans_assign`` kernel, reference
+    through the matmul identity; both share the §3 contraction."""
+    if backend == "fused":
+        from repro.kernels import ops  # local import: kernels are optional
+        return ops.kmeans_assign(xb, centers)
+    dists = _sq_dists(xb, centers)
+    return (jnp.argmin(dists, axis=1).astype(jnp.int32),
+            jnp.min(dists, axis=1))
 
 
 def kmeans_plusplus(key: jax.Array, x: jax.Array, k: int,
@@ -49,53 +74,82 @@ def kmeans_plusplus(key: jax.Array, x: jax.Array, k: int,
     return centers
 
 
-@partial(jax.jit, static_argnames=("k", "max_iter"))
+@partial(jax.jit, static_argnames=("k", "max_iter", "chunk_size",
+                                   "assign_backend"))
 def kmeans(key: jax.Array, x: jax.Array, k: int,
            sample_weight: Optional[jax.Array] = None,
-           max_iter: int = 100, tol: float = 1e-4) -> KMeansResult:
-    """Weighted Lloyd's algorithm with k-means++ init."""
+           max_iter: int = 100, tol: float = 1e-4,
+           chunk_size: Optional[int] = None,
+           assign_backend: str = "auto") -> KMeansResult:
+    """Weighted Lloyd's algorithm with k-means++ init.
+
+    Every sweep accumulates (counts (K,), sums (K, d), inertia) sufficient
+    statistics per assignment block — no (N, K) one-hot. ``chunk_size=None``
+    assigns the whole batch at once (one (N, K) distance block on the
+    reference backend); an integer scans (chunk_size, d) slices so the peak
+    working set is O(chunk_size·K). The returned assignments, inertia and
+    cluster sizes are recomputed against the *returned* centers (a final
+    sweep), not the pre-update centers of the last Lloyd iteration.
+    """
     n, d = x.shape
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
-    centers = kmeans_plusplus(key, x, k, w)
+    backend = resolve_backend(assign_backend)
+    centers0 = kmeans_plusplus(key, x, k, w)
 
-    def step(centers):
-        dists = _sq_dists(x, centers)                    # (N, K)
-        assign = jnp.argmin(dists, axis=1)
-        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype) * w[:, None]  # (N, K)
-        counts = jnp.sum(onehot, axis=0)                 # (K,)
-        sums = onehot.T @ x                              # (K, d)
-        new_centers = jnp.where(
-            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1e-12), centers)
-        inertia = jnp.sum(jnp.min(dists, axis=1) * w)
-        return new_centers, assign, inertia, counts
+    def block_stats(xb, wb, centers):
+        idx, d2 = _assign_block(xb, centers, backend)
+        counts = jax.ops.segment_sum(wb, idx, num_segments=k)
+        sums = jax.ops.segment_sum(xb * wb[:, None], idx, num_segments=k)
+        return (counts, sums, jnp.sum(d2 * wb)), idx
+
+    def sweep(centers):
+        """One assignment pass -> ((counts, sums, inertia), assignments)."""
+        if chunk_size is None:
+            return block_stats(x, w, centers)
+        return streaming_map_reduce(
+            lambda xb, wb: block_stats(xb, wb, centers), (x, w), chunk_size)
+
+    def sweep_stats(centers):
+        """Reduce-only sweep for the Lloyd loop (assignments not collected)."""
+        return reduce_rows(lambda xb, wb: block_stats(xb, wb, centers)[0],
+                           (x, w), chunk_size)
 
     def cond(state):
-        _, _, it, shift, *_ = state
+        _, it, shift = state
         return jnp.logical_and(it < max_iter, shift > tol)
 
     def body(state):
-        centers, _, it, _, _, _ = state
-        new_centers, assign, inertia, counts = step(centers)
+        centers, it, _ = state
+        counts, sums, _ = sweep_stats(centers)
+        new_centers = jnp.where(
+            counts[:, None] > 0,
+            sums / jnp.maximum(counts[:, None], 1e-12), centers)
         shift = jnp.sum((new_centers - centers) ** 2)
-        return new_centers, assign, it + 1, shift, inertia, counts
+        return new_centers, it + 1, shift
 
-    assign0 = jnp.zeros(n, jnp.int32)
-    state = (centers, assign0, jnp.array(0), jnp.array(jnp.inf, x.dtype),
-             jnp.array(0.0, x.dtype), jnp.zeros(k, x.dtype))
-    centers, assign, n_iter, _, inertia, counts = jax.lax.while_loop(cond, body, state)
+    state = (centers0, jnp.array(0), jnp.array(jnp.inf, x.dtype))
+    centers, n_iter, _ = jax.lax.while_loop(cond, body, state)
+    # Final sweep against the returned centers: the loop body scores the
+    # pre-update centers, which used to skew kmeans_multi's restart pick.
+    (counts, _, inertia), assign = sweep(centers)
     return KMeansResult(centers, assign, inertia, n_iter, counts)
 
 
-@partial(jax.jit, static_argnames=("k", "max_iter", "n_init"))
+@partial(jax.jit, static_argnames=("k", "max_iter", "n_init", "chunk_size",
+                                   "assign_backend"))
 def kmeans_multi(key: jax.Array, x: jax.Array, k: int,
                  sample_weight: Optional[jax.Array] = None,
                  max_iter: int = 100, tol: float = 1e-4,
-                 n_init: int = 4) -> KMeansResult:
+                 n_init: int = 4,
+                 chunk_size: Optional[int] = None,
+                 assign_backend: str = "auto") -> KMeansResult:
     """Best of ``n_init`` k-means restarts (lowest inertia) — sklearn-style
     robustness against bad seeding, which matters for small local client
-    datasets."""
+    datasets. Restart selection compares inertias of the *final* centers
+    (see :func:`kmeans`)."""
     keys = jax.random.split(key, n_init)
-    runs = jax.vmap(lambda kk: kmeans(kk, x, k, sample_weight, max_iter, tol))(keys)
+    runs = jax.vmap(lambda kk: kmeans(kk, x, k, sample_weight, max_iter, tol,
+                                      chunk_size, assign_backend))(keys)
     best = jnp.argmin(runs.inertia)
     return jax.tree.map(lambda a: a[best], runs)
 
@@ -103,11 +157,15 @@ def kmeans_multi(key: jax.Array, x: jax.Array, k: int,
 def federated_kmeans(key: jax.Array, client_data: jax.Array, k_global: int,
                      k_local: Optional[int] = None,
                      client_weights: Optional[jax.Array] = None,
-                     max_iter: int = 100) -> jax.Array:
+                     max_iter: int = 100,
+                     chunk_size: Optional[int] = None,
+                     assign_backend: str = "auto") -> jax.Array:
     """One-shot federated k-means (Dennis et al. '21).
 
     Each client runs local k-means; the server clusters the (weighted) local
-    centers to produce global centers.
+    centers to produce global centers. ``chunk_size``/``assign_backend``
+    select the Lloyd-sweep engine for the client-side runs (the server-side
+    run is over C·K_local centers — already tiny).
 
     client_data : (C, N_c, d) padded client datasets
     client_weights : (C, N_c) 0/1 mask (or general weights) for padding
@@ -118,7 +176,8 @@ def federated_kmeans(key: jax.Array, client_data: jax.Array, k_global: int,
     keys = jax.random.split(key, c + 1)
 
     def local(key, x, w):
-        res = kmeans(key, x, k_local, sample_weight=w, max_iter=max_iter)
+        res = kmeans(key, x, k_local, sample_weight=w, max_iter=max_iter,
+                     chunk_size=chunk_size, assign_backend=assign_backend)
         return res.centers, res.cluster_sizes
 
     if client_weights is None:

@@ -5,9 +5,12 @@ from __future__ import annotations
 import numpy as np
 
 
-def average_log_likelihood(gmm, x) -> float:
-    """The paper's fitness score gamma_G (Eq. 2)."""
-    return float(gmm.score(x))
+def average_log_likelihood(gmm, x, chunk_size=None) -> float:
+    """The paper's fitness score gamma_G (Eq. 2). ``chunk_size`` scores in
+    O(chunk·K) memory via the streaming engine (DESIGN.md §6); the engine
+    owns the None → full-batch dispatch."""
+    from repro.core.em import score_streaming
+    return float(score_streaming(gmm, x, chunk_size=chunk_size))
 
 
 def precision_recall_curve(scores: np.ndarray, labels: np.ndarray):
@@ -38,15 +41,20 @@ def auc_pr(scores: np.ndarray, labels: np.ndarray) -> float:
     return float(np.sum(np.diff(recall) * precision[1:]))
 
 
-def anomaly_scores(gmm, x) -> np.ndarray:
-    """Point-wise anomaly score = negative log-likelihood under the model."""
-    return -np.asarray(gmm.log_prob(x))
+def anomaly_scores(gmm, x, chunk_size=None) -> np.ndarray:
+    """Point-wise anomaly score = negative log-likelihood under the model.
+
+    ``chunk_size`` computes the log density in fixed-size row chunks
+    (O(chunk·K) peak memory) — the edge-client scoring mode; the engine
+    owns the None → full-batch dispatch."""
+    from repro.core.em import log_prob_chunked
+    return -np.asarray(log_prob_chunked(gmm, x, chunk_size=chunk_size))
 
 
-def auc_pr_for_model(gmm, x_inlier, x_ood) -> float:
+def auc_pr_for_model(gmm, x_inlier, x_ood, chunk_size=None) -> float:
     import numpy as np
-    s_in = anomaly_scores(gmm, x_inlier)
-    s_out = anomaly_scores(gmm, x_ood)
+    s_in = anomaly_scores(gmm, x_inlier, chunk_size=chunk_size)
+    s_out = anomaly_scores(gmm, x_ood, chunk_size=chunk_size)
     scores = np.concatenate([s_in, s_out])
     labels = np.concatenate([np.zeros(len(s_in)), np.ones(len(s_out))])
     return auc_pr(scores, labels)

@@ -26,9 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.em import (SufficientStats, e_step_stats,
-                           e_step_stats_chunked, fit_gmm, init_from_means,
-                           m_step)
+from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
+                           init_from_means, m_step)
 from repro.core.gmm import GMM, merge_gmms_stacked
 
 
@@ -101,21 +100,18 @@ def dem_sharded(mesh, key, data, mask, k: int, init_centers,
     EM round (the iterative baseline's communication pattern).
 
     With ``chunk_size`` set, each shard streams its clients' rows through
-    :func:`e_step_stats_chunked` so per-round shard memory is bounded by
-    (chunk_size, K) rather than (N, K) — the psum payload is unchanged
-    (SufficientStats is already the reduced form).
+    the engine (``e_step_stats`` owns the full-batch/chunked dispatch) so
+    per-round shard memory is bounded by (chunk_size, K) rather than
+    (N, K) — the psum payload is unchanged (SufficientStats is already the
+    reduced form).
     """
     axis = "data"
     d = data.shape[-1]
 
-    def per_client_stats(gmm, x, w):
-        if chunk_size is None:
-            return e_step_stats(gmm, x, w, estep_backend=estep_backend)
-        return e_step_stats_chunked(gmm, x, w, chunk_size, estep_backend)
-
     def sharded_round(gmm_leaves, data_shard, mask_shard):
         gmm = GMM(*gmm_leaves)
-        per = jax.vmap(lambda x, w: per_client_stats(gmm, x, w))(
+        per = jax.vmap(
+            lambda x, w: e_step_stats(gmm, x, w, estep_backend, chunk_size))(
             data_shard, mask_shard)
         local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
         # === one all-reduce per EM round ===

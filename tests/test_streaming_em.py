@@ -159,6 +159,19 @@ class TestEndToEndParity:
                                    np.asarray(stream.gmm.means),
                                    rtol=1e-3, atol=1e-3)
 
+    def test_fit_gmm_streaming_chunk_invariance(self, planted):
+        """End-to-end invariance to chunk_size with the chunked init path:
+        k-means, label stats and EM all stream, and any two chunkings
+        agree up to float-summation reordering."""
+        x, _, _ = planted
+        xj = jnp.asarray(x)
+        a = fit_gmm_streaming(jax.random.key(5), xj, 3, chunk_size=128)
+        b = fit_gmm_streaming(jax.random.key(5), xj, 3, chunk_size=1024)
+        assert abs(float(a.log_likelihood) - float(b.log_likelihood)) < 1e-4
+        np.testing.assert_allclose(np.asarray(a.gmm.means),
+                                   np.asarray(b.gmm.means),
+                                   rtol=1e-3, atol=1e-3)
+
     def test_fedgengmm_chunked_runs(self):
         x, y, _ = planted_gmm_data(np.random.default_rng(6), n=900, d=3, k=3,
                                    spread=6.0, std=0.5, min_sep_sigma=8.0)

@@ -1,0 +1,228 @@
+"""Parity and regression tests for the chunked k-means and streaming
+scoring legs of the engine (DESIGN.md §6).
+
+Claims under test, each load-bearing for constant-memory TrainGMM:
+  1. kmeans returns assignments/inertia/cluster_sizes computed against the
+     *returned* centers (regression: the loop body used to score the
+     pre-update centers, skewing kmeans_multi's best-restart pick);
+  2. chunked Lloyd sweeps == full-batch for any chunk size, including
+     non-dividing ones and weighted/padded rows;
+  3. label-stats init == the one-hot init it replaced, full-batch and
+     chunked, diagonal and full covariance;
+  4. streaming score/BIC/log_prob == the full-batch GMM methods;
+  5. fit_gmm_bic model selection is chunking-invariant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.em import (bic_streaming, fit_gmm_bic, init_from_kmeans,
+                           label_stats, log_prob_chunked, score_streaming)
+from repro.core.gmm import GMM
+from repro.core.kmeans import _sq_dists, kmeans, kmeans_multi
+from conftest import planted_gmm_data
+
+
+def random_diag_gmm(rng, k, d):
+    return GMM(jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32),
+               jnp.asarray(rng.normal(0, 2, (k, d)), jnp.float32),
+               jnp.asarray(rng.uniform(0.1, 2.0, (k, d)), jnp.float32))
+
+
+class TestKMeansFinalStats:
+    """Regression: returned stats must describe the returned centers."""
+
+    def test_inertia_and_assignments_match_returned_centers(self):
+        x, _, _ = planted_gmm_data(np.random.default_rng(0), n=700, k=3)
+        xj = jnp.asarray(x)
+        res = kmeans(jax.random.key(3), xj, 3)
+        d2 = _sq_dists(xj, res.centers)
+        np.testing.assert_allclose(float(res.inertia),
+                                   float(jnp.sum(jnp.min(d2, axis=1))),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(res.assignments),
+                                      np.asarray(jnp.argmin(d2, axis=1)))
+
+    def test_cluster_sizes_match_assignments(self):
+        x, _, _ = planted_gmm_data(np.random.default_rng(1), n=600, k=4)
+        w = jnp.asarray(np.random.default_rng(2).uniform(0.1, 1, 600),
+                        jnp.float32)
+        res = kmeans(jax.random.key(0), jnp.asarray(x), 4, sample_weight=w)
+        expect = jax.ops.segment_sum(w, res.assignments, num_segments=4)
+        np.testing.assert_allclose(np.asarray(res.cluster_sizes),
+                                   np.asarray(expect), rtol=1e-5)
+
+    def test_multi_restart_selection_uses_final_inertia(self):
+        x, _, _ = planted_gmm_data(np.random.default_rng(3), n=800, k=3,
+                                   spread=6.0, std=0.4, min_sep_sigma=8.0)
+        xj = jnp.asarray(x)
+        best = kmeans_multi(jax.random.key(1), xj, 3, n_init=5)
+        # the selected restart's inertia must be reproducible from its
+        # returned centers — the pre-fix code reported the previous sweep's
+        d2 = _sq_dists(xj, best.centers)
+        np.testing.assert_allclose(float(best.inertia),
+                                   float(jnp.sum(jnp.min(d2, axis=1))),
+                                   rtol=1e-5)
+
+
+class TestChunkedKMeans:
+    # dividing (250), non-dividing (333, 64), >N (2048) chunk sizes
+    @pytest.mark.parametrize("chunk_size", [64, 250, 333, 2048])
+    def test_chunk_size_invariance(self, chunk_size):
+        x, _, _ = planted_gmm_data(np.random.default_rng(4), n=1000, k=3,
+                                   spread=6.0, std=0.5, min_sep_sigma=8.0)
+        xj = jnp.asarray(x)
+        full = kmeans(jax.random.key(0), xj, 3)
+        chunked = kmeans(jax.random.key(0), xj, 3, chunk_size=chunk_size)
+        np.testing.assert_allclose(np.asarray(full.centers),
+                                   np.asarray(chunked.centers),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(full.inertia),
+                                   float(chunked.inertia), rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(full.assignments),
+                                      np.asarray(chunked.assignments))
+
+    def test_weighted_and_padded_rows(self):
+        """Zero-weight (padding) rows are invisible to the chunked sweep,
+        exactly as they are to the full-batch one."""
+        x, _, _ = planted_gmm_data(np.random.default_rng(5), n=800, k=2,
+                                   spread=8.0, min_sep_sigma=8.0)
+        xj = jnp.asarray(x)
+        poisoned = xj.at[400:].set(1e3)   # garbage rows, weight 0
+        w = jnp.asarray(np.r_[np.ones(400), np.zeros(400)], jnp.float32)
+        full = kmeans(jax.random.key(0), poisoned, 2, sample_weight=w)
+        chunked = kmeans(jax.random.key(0), poisoned, 2, sample_weight=w,
+                         chunk_size=96)
+        np.testing.assert_allclose(np.asarray(full.centers),
+                                   np.asarray(chunked.centers),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(full.inertia),
+                                   float(chunked.inertia), rtol=1e-4)
+        ref = kmeans(jax.random.key(0), xj[:400], 2, chunk_size=96)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(chunked.centers), 0),
+            np.sort(np.asarray(ref.centers), 0), atol=0.3)
+
+    def test_kmeans_multi_chunked(self):
+        x, _, mus = planted_gmm_data(np.random.default_rng(6), n=1200, k=3,
+                                     spread=6.0, std=0.4, min_sep_sigma=8.0)
+        res = kmeans_multi(jax.random.key(0), jnp.asarray(x), 3, n_init=4,
+                           chunk_size=500)
+        np.testing.assert_allclose(np.sort(np.asarray(res.centers), axis=0),
+                                   np.sort(mus, axis=0), atol=0.2)
+
+
+class TestChunkedInit:
+    @pytest.mark.parametrize("covariance_type", ["diag", "full"])
+    def test_init_from_kmeans_chunk_invariance(self, covariance_type):
+        x, _, _ = planted_gmm_data(np.random.default_rng(7), n=900, k=3,
+                                   spread=6.0, std=0.5, min_sep_sigma=8.0)
+        xj = jnp.asarray(x)
+        w = jnp.asarray(np.random.default_rng(8).uniform(0.2, 1, 900),
+                        jnp.float32)
+        full = init_from_kmeans(jax.random.key(0), xj, 3, w, covariance_type)
+        chunked = init_from_kmeans(jax.random.key(0), xj, 3, w,
+                                   covariance_type, chunk_size=256)
+        for name in ("weights", "means", "covs"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(full, name)),
+                np.asarray(getattr(chunked, name)),
+                rtol=1e-4, atol=1e-4, err_msg=name)
+
+    def test_label_stats_match_one_hot_reference(self):
+        """The segment-sum stats equal the (N, K) one-hot contraction they
+        replaced (the pre-engine init_from_kmeans formulation)."""
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.normal(0, 2, (257, 5)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0, 1, 257), jnp.float32)
+        a = jnp.asarray(rng.integers(0, 4, 257), jnp.int32)
+        for chunk in (None, 100):
+            stats = label_stats(x, a, 4, w, "diag", chunk_size=chunk)
+            resp = jax.nn.one_hot(a, 4, dtype=x.dtype) * w[:, None]
+            np.testing.assert_allclose(np.asarray(stats.s0),
+                                       np.asarray(jnp.sum(resp, 0)),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(stats.s1),
+                                       np.asarray(resp.T @ x),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(stats.s2),
+                                       np.asarray(resp.T @ (x * x)),
+                                       rtol=1e-4, atol=1e-4)
+
+
+class TestStreamingScoring:
+    @pytest.mark.parametrize("chunk_size", [64, 333, 999, 4096])
+    def test_score_and_bic_parity(self, chunk_size):
+        rng = np.random.default_rng(10)
+        gmm = random_diag_gmm(rng, 5, 7)
+        x = jnp.asarray(rng.normal(0, 2, (1000, 7)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0, 1, 1000), jnp.float32)
+        np.testing.assert_allclose(
+            float(score_streaming(gmm, x, w, chunk_size=chunk_size)),
+            float(gmm.score(x, w)), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            float(bic_streaming(gmm, x, w, chunk_size=chunk_size)),
+            float(gmm.bic(x, w)), rtol=1e-4)
+
+    def test_unweighted_bic_uses_row_count(self):
+        rng = np.random.default_rng(11)
+        gmm = random_diag_gmm(rng, 3, 4)
+        x = jnp.asarray(rng.normal(0, 2, (501, 4)), jnp.float32)
+        np.testing.assert_allclose(float(bic_streaming(gmm, x,
+                                                       chunk_size=200)),
+                                   float(gmm.bic(x)), rtol=1e-4)
+
+    def test_full_covariance_falls_back_to_reference(self):
+        rng = np.random.default_rng(12)
+        k, d = 3, 4
+        a = rng.normal(0, 1, (k, d, d))
+        covs = a @ np.transpose(a, (0, 2, 1)) + 0.7 * np.eye(d)
+        gmm = GMM(jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32),
+                  jnp.asarray(rng.normal(0, 2, (k, d)), jnp.float32),
+                  jnp.asarray(covs, jnp.float32))
+        x = jnp.asarray(rng.normal(0, 2, (700, d)), jnp.float32)
+        # "fused" must silently resolve to reference for full covariance
+        np.testing.assert_allclose(
+            float(score_streaming(gmm, x, chunk_size=128, backend="fused")),
+            float(gmm.score(x)), rtol=1e-4, atol=1e-4)
+
+    def test_log_prob_chunked_parity(self):
+        rng = np.random.default_rng(13)
+        gmm = random_diag_gmm(rng, 4, 6)
+        x = jnp.asarray(rng.normal(0, 2, (777, 6)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(log_prob_chunked(gmm, x, chunk_size=250)),
+            np.asarray(gmm.log_prob(x)), rtol=1e-4, atol=1e-4)
+
+    def test_log_prob_chunked_fused_interpret_parity(self):
+        """The kernel-backed scoring path (interpret mode on CPU) matches
+        the reference log density."""
+        rng = np.random.default_rng(14)
+        gmm = random_diag_gmm(rng, 3, 5)
+        x = jnp.asarray(rng.normal(0, 2, (300, 5)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(log_prob_chunked(gmm, x, chunk_size=128,
+                                        backend="fused")),
+            np.asarray(gmm.log_prob(x)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+class TestStreamingModelSelection:
+    def test_fit_gmm_bic_chunking_invariant(self):
+        x, _, _ = planted_gmm_data(np.random.default_rng(15), n=900, d=3,
+                                   k=3, spread=6.0, std=0.5,
+                                   min_sep_sigma=8.0)
+        xj = jnp.asarray(x)
+        full, bics_full = fit_gmm_bic(jax.random.key(0), xj, [2, 3],
+                                      max_iter=60)
+        chunked, bics_chunk = fit_gmm_bic(jax.random.key(0), xj, [2, 3],
+                                          max_iter=60, chunk_size=256)
+        assert min(bics_full, key=bics_full.get) == \
+            min(bics_chunk, key=bics_chunk.get) == 3
+        for k in bics_full:
+            np.testing.assert_allclose(bics_chunk[k], bics_full[k],
+                                       rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(full.gmm.means),
+                                   np.asarray(chunked.gmm.means),
+                                   rtol=1e-3, atol=1e-3)
