@@ -8,8 +8,15 @@ sweep, and BIC scoring, each as reference (full-batch jnp), fused (Pallas
 kernel; real timing on TPU only), and chunked (lax.scan streaming
 accumulator) — in one run, together with the (N, K)-block working set each
 needs, so both the speedup and the memory ceiling of the streaming paths
-are measurable."""
+are measurable.
+
+``--dry-run`` (the CI bench-smoke lane) runs one tiny shape with a single
+timing iteration and validates every emitted row against the
+``name,us_per_call,derived`` CSV contract — execution coverage without
+pretending the numbers mean anything."""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +35,33 @@ from repro.kernels import ops, ref
 from repro.kernels.estep_stats import DEFAULT_BLOCK_N
 
 SHAPES = [(20000, 24, 30), (20000, 84, 10), (50000, 38, 10)]
+SHAPES_DRY = [(2048, 24, 10)]
 ENGINE_CHUNK = 4096
 
 
-def run(quick: bool = True) -> list[str]:
+def validate_rows(rows: list[str]) -> None:
+    """Every row must parse as ``name,us_per_call,derived`` with a numeric
+    us column — the contract benchmarks/run.py's CSV consumers rely on."""
+    problems = []
+    for row in rows:
+        parts = row.split(",")
+        if len(parts) != 3:
+            problems.append(f"expected 3 CSV fields: {row!r}")
+            continue
+        try:
+            float(parts[1])
+        except ValueError:
+            problems.append(f"non-numeric us column: {row!r}")
+    if problems:
+        raise ValueError("kernel_bench row-format violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def run(quick: bool = True, dry_run: bool = False) -> list[str]:
+    shapes = SHAPES_DRY if dry_run else (SHAPES[:2] if quick else SHAPES)
+    iters = 1 if dry_run else 10
     rows = []
-    for n, d, k in (SHAPES[:2] if quick else SHAPES):
+    for n, d, k in shapes:
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
         mu = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
@@ -41,12 +69,12 @@ def run(quick: bool = True) -> list[str]:
         lw = jnp.asarray(np.log(rng.dirichlet(np.ones(k))), jnp.float32)
 
         logpdf = jax.jit(ref.gmm_logpdf_ref)
-        us = _time(lambda: logpdf(x, mu, var, lw))
+        us = _time(lambda: logpdf(x, mu, var, lw), iters=iters)
         rows.append(f"kernel/gmm_logpdf_ref/N{n}d{d}K{k},{us:.0f},"
                     f"{2 * n * d * k * 2 / (us * 1e-6) / 1e9:.2f}")
 
         estep = jax.jit(ref.estep_stats_ref)
-        us = _time(lambda: estep(x, mu, var, lw))
+        us = _time(lambda: estep(x, mu, var, lw), iters=iters)
         rows.append(f"kernel/estep_stats_ref/N{n}d{d}K{k},{us:.0f},"
                     f"{4 * n * d * k * 2 / (us * 1e-6) / 1e9:.2f}")
 
@@ -57,13 +85,16 @@ def run(quick: bool = True) -> list[str]:
         err = max(float(jnp.max(jnp.abs(u - v))) for u, v in zip(a, b))
         rows.append(f"kernel/estep_pallas_parity/N2048d{d}K{k},0,{err:.2e}")
 
-        rows.extend(_engine_rows(x, mu, var, lw, n, d, k))
-        rows.extend(_kmeans_rows(x, n, d, k))
-        rows.extend(_scoring_rows(x, mu, var, lw, n, d, k))
+        rows.extend(_engine_rows(x, mu, var, lw, n, d, k, iters))
+        rows.extend(_kmeans_rows(x, n, d, k, iters))
+        rows.extend(_scoring_rows(x, mu, var, lw, n, d, k, iters))
+    if dry_run:
+        validate_rows(rows)
+        rows.append("# dry-run: row format OK, timings are placeholders")
     return rows
 
 
-def _engine_rows(x, mu, var, lw, n, d, k) -> list[str]:
+def _engine_rows(x, mu, var, lw, n, d, k, iters=10) -> list[str]:
     """reference vs fused vs chunked E-step engine, one shape.
 
     Columns: label, wall us, responsibility working set in MiB (the (N, K)
@@ -76,19 +107,19 @@ def _engine_rows(x, mu, var, lw, n, d, k) -> list[str]:
 
     engine_ref = jax.jit(
         lambda x: e_step_stats(gmm, x, estep_backend="reference"))
-    us = _time(lambda: engine_ref(x))
+    us = _time(lambda: engine_ref(x), iters=iters)
     out = [f"engine/estep_reference/N{n}d{d}K{k},{us:.0f},{mib(n):.2f}"]
 
     engine_chunked = jax.jit(lambda x: e_step_stats_chunked(
         gmm, x, chunk_size=ENGINE_CHUNK, estep_backend="reference"))
-    us = _time(lambda: engine_chunked(x))
+    us = _time(lambda: engine_chunked(x), iters=iters)
     out.append(f"engine/estep_chunked_c{ENGINE_CHUNK}/N{n}d{d}K{k},"
                f"{us:.0f},{mib(ENGINE_CHUNK):.2f}")
 
     if on_tpu:
         engine_fused = jax.jit(
             lambda x: e_step_stats(gmm, x, estep_backend="fused"))
-        us = _time(lambda: engine_fused(x))
+        us = _time(lambda: engine_fused(x), iters=iters)
         # the kernel's default block_n: its resident resp tile
         out.append(f"engine/estep_fused/N{n}d{d}K{k},{us:.0f},{mib(DEFAULT_BLOCK_N):.2f}")
     else:
@@ -99,7 +130,7 @@ def _engine_rows(x, mu, var, lw, n, d, k) -> list[str]:
     return out
 
 
-def _kmeans_rows(x, n, d, k) -> list[str]:
+def _kmeans_rows(x, n, d, k, iters=10) -> list[str]:
     """Full-batch vs chunked Lloyd engine (fixed 10 sweeps, tol=0 so both
     run the same iteration count). Working-set column: the (rows, K)
     distance block each sweep materializes."""
@@ -108,7 +139,7 @@ def _kmeans_rows(x, n, d, k) -> list[str]:
     us_full, us_chunk = _time_pair(
         lambda: kmeans(key, x, k, max_iter=10, tol=0.0).centers,
         lambda: kmeans(key, x, k, max_iter=10, tol=0.0,
-                       chunk_size=ENGINE_CHUNK).centers)
+                       chunk_size=ENGINE_CHUNK).centers, iters=iters)
     out = [f"engine/kmeans_full/N{n}d{d}K{k},{us_full:.0f},{mib(n):.2f}",
            f"engine/kmeans_chunked_c{ENGINE_CHUNK}/N{n}d{d}K{k},"
            f"{us_chunk:.0f},{mib(ENGINE_CHUNK):.2f}"]
@@ -124,7 +155,7 @@ def _kmeans_rows(x, n, d, k) -> list[str]:
     return out
 
 
-def _scoring_rows(x, mu, var, lw, n, d, k) -> list[str]:
+def _scoring_rows(x, mu, var, lw, n, d, k, iters=10) -> list[str]:
     """Full-batch GMM.bic vs streaming BIC (the per-candidate model
     selection cost of TrainGMM). Working-set column: the (rows, K)
     log-prob block."""
@@ -134,12 +165,17 @@ def _scoring_rows(x, mu, var, lw, n, d, k) -> list[str]:
     bic_chunk = jax.jit(lambda x: bic_streaming(
         gmm, x, chunk_size=ENGINE_CHUNK, backend="reference"))
     us_full, us_chunk = _time_pair(lambda: bic_full(x),
-                                   lambda: bic_chunk(x))
+                                   lambda: bic_chunk(x), iters=iters)
     return [f"engine/bic_full/N{n}d{d}K{k},{us_full:.0f},{mib(n):.2f}",
             f"engine/bic_chunked_c{ENGINE_CHUNK}/N{n}d{d}K{k},"
             f"{us_chunk:.0f},{mib(ENGINE_CHUNK):.2f}"]
 
 
 if __name__ == "__main__":
-    for r in run():
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--dry-run", action="store_true",
+                        help="tiny-N row-format validation mode (CI "
+                             "bench-smoke lane)")
+    cli = parser.parse_args()
+    for r in run(dry_run=cli.dry_run):
         print(r)

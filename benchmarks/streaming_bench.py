@@ -1,17 +1,32 @@
-"""Streaming-engine trajectory benchmark (DESIGN.md §6).
+"""Streaming-engine trajectory benchmark (DESIGN.md §6/§7).
 
 Times every stage of the constant-memory TrainGMM pipeline — k-means Lloyd
 sweeps, init label statistics, the E-step, and BIC scoring — full-batch vs
-chunked. In full mode (standalone, or ``BENCH_FULL=1 benchmarks/run.py``)
-it also writes the results to ``BENCH_streaming.json`` (repo root) in
-machine-readable form so the perf trajectory is tracked across PRs:
+chunked, plus the out-of-core E-step through each DataSource flavour
+(resident-array-as-source, mmap ``.npy``, seeded synthetic stream). The
+source rows answer ROADMAP follow-up (b): whether the host-side block loop
+avoids the CPU ``lax.scan`` serialization cost that the resident chunked
+path pays.
+
+In full mode (standalone ``python benchmarks/streaming_bench.py``, or
+``BENCH_FULL=1 benchmarks/run.py``) it also writes the results to
+``BENCH_streaming.json`` (repo root) in machine-readable form so the perf
+trajectory is tracked across PRs:
 
     {"stages": {stage: {"full_us", "chunked_us", "full_peak_bytes",
-                        "chunked_peak_bytes", "slowdown"}}, ...}
+                        "chunked_peak_bytes", "slowdown"}},
+     "sources": {"estep_full_us", "estep_scan_chunked_us",
+                 "estep_array_source_us", "estep_mmap_source_us",
+                 "estep_synthetic_source_us", "source_vs_scan",
+                 "source_vs_full"}, ...}
 
 Quick (CI) mode runs a scaled-down sweep and prints rows only — it never
 touches the tracked JSON, so benchmark smoke runs don't dirty the working
-tree or replace reference timings with noisy-machine numbers.
+tree or replace reference timings with noisy-machine numbers. ``--dry-run``
+shrinks further (tiny N, single timing iteration — numbers are meaningless
+by design) and instead *validates the report schema*, which is what the CI
+bench-smoke lane runs: the bench can't silently rot even though no real
+timing happens in CI.
 
 ``peak_bytes`` is the analytic per-stage working set: the (rows, K) block
 (distances / responsibilities / log-probs) for the Lloyd, E-step and BIC
@@ -22,7 +37,9 @@ under 2x.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import tempfile
 from pathlib import Path
 
 import jax
@@ -39,16 +56,62 @@ from repro.core.em import (bic_streaming, e_step_stats, init_from_kmeans,
                            label_stats)
 from repro.core.gmm import GMM
 from repro.core.kmeans import kmeans
+from repro.data.sources import ArraySource, NpyFileSource, SyntheticGMMSource
 
-N_FULL, N_QUICK, D, K = 100_000, 20_000, 16, 8
+N_FULL, N_QUICK, N_DRY, D, K = 100_000, 20_000, 2_048, 16, 8
 # 8192 amortizes CPU scan serialization to <2x full-batch wall time while
 # keeping the per-stage working set at 8192·K·4 = 256 KiB (vs 3 MiB full
 # at N=100k); on TPU the fused kernels re-tile each chunk internally.
-CHUNK = 8192
+CHUNK, CHUNK_DRY = 8192, 512
 JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_streaming.json"
 
+# {section: required keys} of the machine-readable report — the contract
+# the CI dry-run enforces so downstream tooling (and the next perf PR) can
+# rely on the JSON shape without re-reading this module.
+REPORT_SCHEMA = {
+    "stages": ("full_us", "chunked_us", "full_peak_bytes",
+               "chunked_peak_bytes", "slowdown"),
+    "sources": ("chunk_size", "estep_full_us", "estep_scan_chunked_us",
+                "estep_array_source_us", "estep_mmap_source_us",
+                "estep_synthetic_source_us", "source_vs_scan",
+                "source_vs_full"),
+}
+STAGES = ("kmeans_lloyd", "init_label_stats", "em_estep", "bic_score")
 
-def _stages(x, gmm, assignments):
+
+def validate_report(report: dict) -> None:
+    """Schema gate for the tracked JSON; raises ValueError listing every
+    violation rather than stopping at the first."""
+    problems = []
+    for field in ("backend", "shape", "chunk_size", "stages", "sources"):
+        if field not in report:
+            problems.append(f"missing top-level field {field!r}")
+    shape = report.get("shape", {})
+    for field in ("n", "d", "k"):
+        if not isinstance(shape.get(field), int):
+            problems.append(f"shape.{field} must be an int")
+    stages = report.get("stages", {})
+    missing_stages = set(STAGES) - set(stages)
+    if missing_stages:
+        problems.append(f"missing stages: {sorted(missing_stages)}")
+    for stage, row in stages.items():
+        for field in REPORT_SCHEMA["stages"]:
+            v = row.get(field)
+            if not isinstance(v, (int, float)) or v < 0:
+                problems.append(f"stages.{stage}.{field} must be a "
+                                f"non-negative number, got {v!r}")
+    sources = report.get("sources", {})
+    for field in REPORT_SCHEMA["sources"]:
+        v = sources.get(field)
+        if not isinstance(v, (int, float)) or v < 0:
+            problems.append(f"sources.{field} must be a non-negative "
+                            f"number, got {v!r}")
+    if problems:
+        raise ValueError("BENCH_streaming.json schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def _stages(x, gmm, assignments, chunk):
     """{stage: (full_fn, chunked_fn, full_peak_bytes, chunked_peak_bytes)}.
     Data is a traced jit argument everywhere — a closed-over array would be
     constant-folded by XLA and the full-batch timings would be fiction."""
@@ -58,30 +121,68 @@ def _stages(x, gmm, assignments):
     key = jax.random.key(0)
     lbl_full = jax.jit(lambda x, a: label_stats(x, a, K).s1)
     lbl_chunk = jax.jit(lambda x, a: label_stats(x, a, K,
-                                                 chunk_size=CHUNK).s1)
+                                                 chunk_size=chunk).s1)
     es_full = jax.jit(lambda x: e_step_stats(gmm, x).s1)
-    es_chunk = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=CHUNK).s1)
+    es_chunk = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=chunk).s1)
     bic_full = jax.jit(lambda x: gmm.bic(x))
-    bic_chunk = jax.jit(lambda x: bic_streaming(gmm, x, chunk_size=CHUNK))
+    bic_chunk = jax.jit(lambda x: bic_streaming(gmm, x, chunk_size=chunk))
     return {
         "kmeans_lloyd": (
             lambda: kmeans(key, x, K, max_iter=10, tol=0.0).centers,
             lambda: kmeans(key, x, K, max_iter=10, tol=0.0,
-                           chunk_size=CHUNK).centers,
-            nk(n), nk(CHUNK)),
+                           chunk_size=chunk).centers,
+            nk(n), nk(chunk)),
         "init_label_stats": (
             lambda: lbl_full(x, assignments),
             lambda: lbl_chunk(x, assignments),
-            nd(n), nd(CHUNK)),
+            nd(n), nd(chunk)),
         "em_estep": (
-            lambda: es_full(x), lambda: es_chunk(x), nk(n), nk(CHUNK)),
+            lambda: es_full(x), lambda: es_chunk(x), nk(n), nk(chunk)),
         "bic_score": (
-            lambda: bic_full(x), lambda: bic_chunk(x), nk(n), nk(CHUNK)),
+            lambda: bic_full(x), lambda: bic_chunk(x), nk(n), nk(chunk)),
     }
 
 
-def run(quick: bool = True) -> list[str]:
-    n = N_QUICK if quick else N_FULL
+def _source_section(x, gmm, chunk, iters, tmpdir):
+    """Out-of-core E-step rows: the same reduction through each DataSource
+    flavour vs the resident full-batch and lax.scan paths. The host block
+    loop re-dispatches per block but never pays scan's serialized-carry
+    cost — this comparison is what ROADMAP follow-up (b) tracks."""
+    n = x.shape[0]
+    npy = Path(tmpdir) / f"bench_rows_{n}.npy"
+    np.save(npy, np.asarray(x))
+    srcs = {
+        "array": ArraySource(x),
+        "mmap": NpyFileSource(npy),
+        "synthetic": SyntheticGMMSource(gmm, n, jax.random.key(2)),
+    }
+    es_full = jax.jit(lambda x: e_step_stats(gmm, x).s1)
+    es_scan = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=chunk).s1)
+    full_us = _time(lambda: es_full(x), iters=iters)
+    scan_us = _time(lambda: es_scan(x), iters=iters)
+    section = {
+        "chunk_size": chunk,
+        "estep_full_us": round(full_us),
+        "estep_scan_chunked_us": round(scan_us),
+    }
+    rows = []
+    for name, src in srcs.items():
+        us = _time(lambda: e_step_stats(gmm, src, chunk_size=chunk).s1,
+                   iters=iters)
+        section[f"estep_{name}_source_us"] = round(us)
+        rows.append(f"streaming/estep_source_{name}_c{chunk}/N{n}d{D}K{K},"
+                    f"{us:.0f},{chunk * K * 4 / 2**20:.2f}")
+    section["source_vs_scan"] = round(
+        section["estep_array_source_us"] / max(scan_us, 1e-9), 3)
+    section["source_vs_full"] = round(
+        section["estep_array_source_us"] / max(full_us, 1e-9), 3)
+    return section, rows
+
+
+def run(quick: bool = True, dry_run: bool = False) -> list[str]:
+    n = N_DRY if dry_run else (N_QUICK if quick else N_FULL)
+    chunk = CHUNK_DRY if dry_run else CHUNK
+    iters = 1 if dry_run else 20
     rng = np.random.default_rng(0)
     mus = rng.normal(0, 5, (K, D)).astype(np.float32)
     comp = rng.integers(0, K, n)
@@ -93,13 +194,13 @@ def run(quick: bool = True) -> list[str]:
     report = {
         "backend": jax.default_backend(),
         "shape": {"n": n, "d": D, "k": K},
-        "chunk_size": CHUNK,
+        "chunk_size": chunk,
         "stages": {},
     }
     rows = []
     for stage, (full_fn, chunked_fn, full_b, chunk_b) in _stages(
-            x, gmm, assignments).items():
-        full_us, chunked_us = _time_pair(full_fn, chunked_fn, iters=20)
+            x, gmm, assignments, chunk).items():
+        full_us, chunked_us = _time_pair(full_fn, chunked_fn, iters=iters)
         report["stages"][stage] = {
             "full_us": round(full_us),
             "chunked_us": round(chunked_us),
@@ -109,18 +210,33 @@ def run(quick: bool = True) -> list[str]:
         }
         rows.append(f"streaming/{stage}_full/N{n}d{D}K{K},{full_us:.0f},"
                     f"{full_b / 2**20:.2f}")
-        rows.append(f"streaming/{stage}_chunked_c{CHUNK}/N{n}d{D}K{K},"
+        rows.append(f"streaming/{stage}_chunked_c{chunk}/N{n}d{D}K{K},"
                     f"{chunked_us:.0f},{chunk_b / 2**20:.2f}")
+    with tempfile.TemporaryDirectory() as tmpdir:
+        report["sources"], src_rows = _source_section(x, gmm, chunk, iters,
+                                                      tmpdir)
+    rows.extend(src_rows)
+    validate_report(report)
+    if dry_run:
+        rows.append("# dry-run: report schema OK, timings are placeholders")
+        return rows
     if not quick:
         # end-to-end streaming init (4-restart k-means + label stats)
         us = _time(lambda: init_from_kmeans(jax.random.key(1), x, K,
-                                            chunk_size=CHUNK).means, iters=1)
+                                            chunk_size=chunk).means, iters=1)
         report["init_from_kmeans_chunked_us"] = round(us)
         JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
     return rows
 
 
 if __name__ == "__main__":
-    for r in run(quick=False):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--dry-run", action="store_true",
+                        help="tiny-N schema-validation mode (CI bench-smoke "
+                             "lane): exercises every code path, validates "
+                             "the report schema, writes nothing")
+    cli = parser.parse_args()
+    for r in run(quick=cli.dry_run, dry_run=cli.dry_run):
         print(r)
-    print(f"# wrote {JSON_PATH}")
+    if not cli.dry_run:
+        print(f"# wrote {JSON_PATH}")

@@ -12,17 +12,18 @@ Three initializations of the global component centers are reproduced:
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
-                           init_from_means, m_step)
+                           host_em_loop, init_from_means, m_step)
 from repro.core.fedgen import CommStats, payload_floats
 from repro.core.gmm import GMM
-from repro.core.kmeans import federated_kmeans
+from repro.core.kmeans import federated_kmeans, federated_kmeans_from_sources
 from repro.core.partition import ClientSplit
+from repro.data.sources import ConcatSource, DataSource
 
 
 class DEMResult(NamedTuple):
@@ -155,6 +156,60 @@ def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,
     c = data.shape[0]
     stats_floats = k + 2 * k * d + 2  # s0, s1, s2 (diag), loglik, wsum
     n_rounds = int(rounds)
+    comm = CommStats(
+        rounds=n_rounds,
+        uplink_floats=n_rounds * c * stats_floats,
+        downlink_floats=n_rounds * c * payload_floats(gmm))
+    return DEMResult(gmm, ll, rounds, converged, comm)
+
+
+def dem_from_sources(key: jax.Array, sources: Sequence[DataSource], k: int,
+                     init: int = 1, max_rounds: int = 200, tol: float = 1e-3,
+                     reg_covar: float = 1e-6, estep_backend: str = "auto",
+                     chunk_size: int | None = None) -> DEMResult:
+    """DEM with per-client :class:`DataSource` data (DESIGN.md §7).
+
+    Each round, every client streams its own E-step through the engine and
+    ships only ``SufficientStats`` — exactly the payload of :func:`dem` —
+    so the communication pattern is unchanged while no client (nor the
+    server) ever holds O(N) rows. Ragged client sizes need no padding.
+
+    Supports init 1 (maximally separated centers; needs only ``d``) and
+    init 3 (one-shot federated k-means, itself streamed per client).
+    Init 2 uploads a raw pilot subset and therefore requires resident
+    client arrays — use :func:`dem` for it.
+    """
+    d = sources[0].dim
+    k_init, _ = jax.random.split(key)
+    if init == 1:
+        centers = max_separated_centers(k_init, k, d)
+    elif init == 3:
+        centers = federated_kmeans_from_sources(k_init, sources, k,
+                                                chunk_size=chunk_size)
+    elif init == 2:
+        raise ValueError(
+            "DEM init 2 (pilot subset) uploads raw rows and needs resident "
+            "client data; use dem() with a ClientSplit")
+    else:
+        raise ValueError(f"unknown DEM init scheme {init}")
+
+    union = ConcatSource(sources)
+    gmm0 = init_from_means(centers, union, reg_covar=reg_covar,
+                           chunk_size=chunk_size)
+
+    def step(gmm: GMM):
+        """One DEM round: per-client streamed stats -> sum -> M-step."""
+        per = [e_step_stats(gmm, src, None, estep_backend, chunk_size)
+               for src in sources]
+        stats: SufficientStats = jax.tree.map(lambda *s: sum(s), *per)
+        avg_ll = float(stats.loglik / jnp.maximum(stats.wsum, 1e-12))
+        return m_step(stats, reg_covar), avg_ll
+
+    gmm, ll, rounds, converged = host_em_loop(step, gmm0, tol, max_rounds)
+
+    c = len(sources)
+    n_rounds = int(rounds)
+    stats_floats = k + 2 * k * d + 2  # s0, s1, s2 (diag), loglik, wsum
     comm = CommStats(
         rounds=n_rounds,
         uplink_floats=n_rounds * c * stats_floats,

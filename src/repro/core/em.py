@@ -11,6 +11,15 @@ the log-likelihood/BIC scoring reductions below all run through it, so the
 whole TrainGMM pipeline — init, EM, model selection — has an O(chunk·K)
 constant-memory mode.
 
+Every engine entry point also accepts a :class:`repro.data.sources.DataSource`
+in the rows position (DESIGN.md §7): sources drive a **host-side block
+loop** over ``iter_blocks(chunk_size)`` with jitted per-block statistics
+instead of a ``lax.scan`` over a resident reshaped array, so N never has to
+be resident at all — the out-of-core mode. The same additivity argument
+applies; block sums accumulate in the same order with the same per-block
+math, so source-backed fits are bit-reproducible across source types
+holding the same rows.
+
 Sample weights make padded/ragged federated client datasets representable as
 fixed-shape arrays (weight 0 = padding), which is what lets local training
 run under vmap/shard_map — and what lets the engine pad row counts to chunk
@@ -26,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gmm import GMM
+from repro.data.sources import DataSource
 
 
 class EMResult(NamedTuple):
@@ -57,6 +67,35 @@ class SufficientStats(NamedTuple):
 
 ENGINE_BACKENDS = ("auto", "reference", "fused")
 ESTEP_BACKENDS = ENGINE_BACKENDS  # historical alias (PR 1 public name)
+
+# Default block size for DataSource paths when the caller passes
+# chunk_size=None (which on the resident-array paths means "full batch" —
+# a source has no full batch, so it streams at this granularity instead).
+DEFAULT_SOURCE_CHUNK = 65536
+
+
+def resolve_source_chunk(chunk_size: Optional[int]) -> int:
+    """The one ``chunk_size`` rule for source paths: ``None`` means
+    :data:`DEFAULT_SOURCE_CHUNK`; explicit values are validated —
+    ``chunk_size=0`` is a caller bug (e.g. integer division gone wrong),
+    not a request for the default working set."""
+    if chunk_size is None:
+        return DEFAULT_SOURCE_CHUNK
+    chunk_size = int(chunk_size)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    return chunk_size
+
+
+def _require_no_weight(sample_weight, what: str) -> None:
+    """Sources carry no sample weights: weights exist to pad fixed-shape
+    federated arrays, and block streams are never padded (ragged shards go
+    through ConcatSource). Reject early with a pointed message."""
+    if sample_weight is not None:
+        raise ValueError(
+            f"{what}: sample_weight is not supported with a DataSource "
+            f"(every source row has weight 1; represent ragged shards with "
+            f"ConcatSource instead of padding)")
 
 
 def resolve_backend(backend: str, fused_supported: bool = True) -> str:
@@ -106,8 +145,42 @@ def _pad_to_chunks(arrays: Sequence[jax.Array], chunk_size: int):
             (n_chunks, chunk_size) + a.shape[1:]) for a in arrays)
 
 
-def streaming_map_reduce(block_fn: Callable, arrays: Sequence[jax.Array],
-                         chunk_size: int):
+def _source_map_reduce(block_fn: Callable, source: DataSource,
+                       chunk_size: int):
+    """Host-side twin of the ``lax.scan`` path for :class:`DataSource` rows.
+
+    ``block_fn(x_block) -> (stats, per_row)`` with the same additive-stats /
+    per-row contract and the same accumulate-in-f32-then-cast-back dtype
+    semantics as :func:`streaming_map_reduce`. The loop itself stays in
+    Python (the source decides where blocks come from — mmap pages, a
+    seeded generator, another process); callers are responsible for making
+    ``block_fn`` cheap to re-enter, i.e. a module-level jitted function so
+    the trace cache hits on every block after the first (at most two block
+    shapes exist: full chunks and the ragged tail).
+    """
+    acc = rows_dtypes = None
+    rows_parts: list = []
+    n_blocks = 0
+    for xb in source.iter_blocks(chunk_size):
+        stats, rows = block_fn(xb)
+        if n_blocks == 0:
+            rows_dtypes = jax.tree.map(lambda s: s.dtype, stats)
+            acc = jax.tree.map(
+                lambda s: s.astype(jnp.promote_types(s.dtype, jnp.float32)),
+                stats)
+        else:
+            acc = jax.tree.map(lambda a, s: a + s.astype(a.dtype), acc, stats)
+        rows_parts.append(rows)
+        n_blocks += 1
+    if n_blocks == 0:
+        raise ValueError(f"source yielded no blocks: {source!r}")
+    stats = jax.tree.map(lambda a, dt: a.astype(dt), acc, rows_dtypes)
+    rows = jax.tree.map(lambda *parts: jnp.concatenate(parts, axis=0),
+                        *rows_parts)
+    return stats, rows
+
+
+def streaming_map_reduce(block_fn: Callable, arrays, chunk_size: int):
     """Scan ``block_fn`` over fixed-size row chunks of ``arrays``.
 
     ``block_fn(*chunk_arrays) -> (stats, per_row)`` where ``stats`` is an
@@ -119,7 +192,14 @@ def streaming_map_reduce(block_fn: Callable, arrays: Sequence[jax.Array],
     every streaming path shares. Stats accumulate at least in float32
     (f64 stays f64 under x64) and are cast back to ``block_fn``'s output
     dtypes, so callers see the same dtypes as a full-batch call.
+
+    ``arrays`` may instead be a single :class:`DataSource`, in which case
+    ``block_fn`` receives one ``(b, dim)`` block argument per call and the
+    reduction runs as a host-side block loop (:func:`_source_map_reduce`)
+    instead of a ``lax.scan`` — same contract, no resident N.
     """
+    if isinstance(arrays, DataSource):
+        return _source_map_reduce(block_fn, arrays, int(chunk_size))
     n = arrays[0].shape[0]
     chunks = _pad_to_chunks(arrays, chunk_size)
     stats_shape, _ = jax.eval_shape(block_fn, *(c[0] for c in chunks))
@@ -140,20 +220,25 @@ def streaming_map_reduce(block_fn: Callable, arrays: Sequence[jax.Array],
     return stats, rows
 
 
-def streaming_reduce(block_fn: Callable, arrays: Sequence[jax.Array],
-                     chunk_size: int):
+def streaming_reduce(block_fn: Callable, arrays, chunk_size: int):
     """Reduce-only :func:`streaming_map_reduce`: sum ``block_fn``'s additive
-    pytree over all row chunks."""
+    pytree over all row chunks (arrays or a :class:`DataSource`)."""
     stats, _ = streaming_map_reduce(lambda *a: (block_fn(*a), ()),
                                     arrays, chunk_size)
     return stats
 
 
-def reduce_rows(block_fn: Callable, arrays: Sequence[jax.Array],
+def reduce_rows(block_fn: Callable, arrays,
                 chunk_size: Optional[int] = None):
     """THE chunk dispatch (previously copy-pasted across em/dem/fed):
     ``chunk_size is None`` runs one full-batch call, an integer streams
-    fixed-size chunks through :func:`streaming_reduce`."""
+    fixed-size chunks through :func:`streaming_reduce`. A
+    :class:`DataSource` in the ``arrays`` position always streams
+    (``chunk_size=None`` falls back to :data:`DEFAULT_SOURCE_CHUNK` — a
+    source has no full batch to run)."""
+    if isinstance(arrays, DataSource):
+        return streaming_reduce(block_fn, arrays,
+                                resolve_source_chunk(chunk_size))
     if chunk_size is None:
         return block_fn(*arrays)
     return streaming_reduce(block_fn, arrays, chunk_size)
@@ -192,10 +277,17 @@ def e_step_stats(gmm: GMM, x: jax.Array,
     never materializes the (N, K) responsibility matrix; ``chunk_size``
     streams either backend through the engine in O(chunk·K) memory, so
     this one function is the whole dispatch table for federated callers.
+    ``x`` may be a :class:`DataSource` (host-side block loop, §7); sources
+    carry no sample weights.
     """
+    backend = resolve_estep_backend(estep_backend, gmm.is_diagonal)
+    if isinstance(x, DataSource):
+        _require_no_weight(sample_weight, "e_step_stats over a DataSource")
+        block_fn = (_estep_block_fused if backend == "fused"
+                    else _estep_block_reference)
+        return reduce_rows(lambda xb: block_fn(gmm, xb), x, chunk_size)
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
-    backend = resolve_estep_backend(estep_backend, gmm.is_diagonal)
     if backend == "fused":
         block = lambda xb, wb: e_step_stats_fused(gmm, xb, wb)
     else:
@@ -218,6 +310,21 @@ def e_step_stats_fused(gmm: GMM, x: jax.Array,
                                      jnp.log(gmm.weights), w,
                                      interpret=interpret)
     return SufficientStats(s0, s1, s2, ll, jnp.sum(w))
+
+
+# Per-block statistics for the DataSource host loop. Module-level jitted so
+# every pass over a source hits the trace cache (at most two block shapes
+# exist: full chunks and the ragged tail); parameters (gmm) are traced
+# arguments, never closure constants.
+
+@jax.jit
+def _estep_block_reference(gmm: GMM, xb: jax.Array) -> SufficientStats:
+    return _e_step_stats_reference(gmm, xb, jnp.ones(xb.shape[0], xb.dtype))
+
+
+@jax.jit
+def _estep_block_fused(gmm: GMM, xb: jax.Array) -> SufficientStats:
+    return e_step_stats_fused(gmm, xb)
 
 
 def e_step_stats_chunked(gmm: GMM, x: jax.Array,
@@ -292,6 +399,17 @@ def _log_prob_block(gmm: GMM, xb: jax.Array, backend: str) -> jax.Array:
     return gmm.log_prob(xb)
 
 
+@partial(jax.jit, static_argnames=("backend",))
+def _log_prob_block_jit(gmm: GMM, xb: jax.Array, backend: str) -> jax.Array:
+    return _log_prob_block(gmm, xb, backend)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _score_block(gmm: GMM, xb: jax.Array, backend: str):
+    lp = _log_prob_block(gmm, xb, backend)
+    return jnp.sum(lp), jnp.asarray(xb.shape[0], lp.dtype)
+
+
 def log_prob_chunked(gmm: GMM, x: jax.Array,
                      chunk_size: Optional[int] = 4096,
                      backend: str = "auto") -> jax.Array:
@@ -301,9 +419,16 @@ def log_prob_chunked(gmm: GMM, x: jax.Array,
     full (N, K) matrix — what the anomaly-detection scorer needs to run
     over datasets that don't fit the full-batch path. ``chunk_size=None``
     runs one full-batch block (same backend resolution), so callers can
-    delegate unconditionally like every other engine entry point.
+    delegate unconditionally like every other engine entry point. Accepts a
+    :class:`DataSource` (the per-row *output* is still O(N), but only 4
+    bytes a row — the (N, K) block never exists).
     """
     backend = resolve_backend(backend, fused_supported=gmm.is_diagonal)
+    if isinstance(x, DataSource):
+        _, lp = streaming_map_reduce(
+            lambda xb: ((), _log_prob_block_jit(gmm, xb, backend)), x,
+            resolve_source_chunk(chunk_size))
+        return lp
     if chunk_size is None:
         return _log_prob_block(gmm, x, backend)
     _, lp = streaming_map_reduce(
@@ -314,9 +439,13 @@ def log_prob_chunked(gmm: GMM, x: jax.Array,
 def _score_sums(gmm: GMM, x: jax.Array, sample_weight: Optional[jax.Array],
                 chunk_size: Optional[int], backend: str):
     """(sum_n w_n log p(x_n), sum_n w_n) through the engine."""
+    backend = resolve_backend(backend, fused_supported=gmm.is_diagonal)
+    if isinstance(x, DataSource):
+        _require_no_weight(sample_weight, "scoring over a DataSource")
+        return reduce_rows(lambda xb: _score_block(gmm, xb, backend), x,
+                           chunk_size)
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
-    backend = resolve_backend(backend, fused_supported=gmm.is_diagonal)
 
     def block(xb, wb):
         lp = _log_prob_block(gmm, xb, backend)
@@ -357,6 +486,11 @@ def label_stats(x: jax.Array, assignments: jax.Array, k: int,
     """Hard-assignment sufficient statistics via segment sums — the one-hot
     (N, K) responsibility matrix of the classic k-means init never exists,
     even full-batch; ``chunk_size`` additionally bounds the row working set.
+
+    Resident arrays only (``assignments`` is row-aligned with ``x``); the
+    out-of-core init fuses labelling into the final assignment sweep
+    instead (``repro.core.kmeans.kmeans_label_block``), so no (N,) label
+    vector is ever needed on the source path.
     """
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
@@ -387,10 +521,23 @@ def init_from_kmeans(key: jax.Array, x: jax.Array, k: int,
     With ``chunk_size`` set, both the Lloyd iterations (chunked k-means,
     see ``repro.core.kmeans``) and the label statistics stream in
     O(chunk·K) memory, closing the init leg of the constant-memory
-    pipeline.
+    pipeline. A :class:`DataSource` runs fully out-of-core: streamed
+    k-means++ seeding, host-loop Lloyd sweeps, and label statistics fused
+    into a final assignment pass (no (N,) assignment vector ever exists).
     """
     # Local import: this module hosts the engine that kmeans.py builds on.
-    from repro.core.kmeans import kmeans_multi
+    from repro.core.kmeans import (kmeans_label_block, kmeans_multi,
+                                   kmeans_multi_source)
+    if isinstance(x, DataSource):
+        _require_no_weight(sample_weight, "init_from_kmeans over a DataSource")
+        cs = resolve_source_chunk(chunk_size)
+        res = kmeans_multi_source(key, x, k, max_iter=50, chunk_size=cs,
+                                  assign_backend=assign_backend)
+        backend = resolve_backend(assign_backend)
+        stats = streaming_reduce(
+            lambda xb: kmeans_label_block(res.centers, xb, covariance_type,
+                                          backend), x, cs)
+        return m_step(stats, reg_covar)
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
     res = kmeans_multi(key, x, k, sample_weight=w, max_iter=50,
@@ -402,13 +549,29 @@ def init_from_kmeans(key: jax.Array, x: jax.Array, k: int,
 def init_from_means(means: jax.Array, x: jax.Array,
                     sample_weight: Optional[jax.Array] = None,
                     covariance_type: str = "diag",
-                    reg_covar: float = 1e-6) -> GMM:
+                    reg_covar: float = 1e-6,
+                    chunk_size: Optional[int] = None) -> GMM:
     """Init with given centers, uniform weights, data-variance covariances.
 
     Used by the DEM baselines, where the server proposes centers without
-    seeing client data.
+    seeing client data. Accepts a :class:`DataSource` (streamed one-pass
+    moments at ``chunk_size`` granularity; the variance uses E[x²]−E[x]²,
+    clamped at zero, instead of the resident two-pass form). On resident
+    arrays ``chunk_size`` is ignored — the moments are already O(d).
     """
     k, d = means.shape
+    if isinstance(x, DataSource):
+        _require_no_weight(sample_weight, "init_from_means over a DataSource")
+        s, ss, cnt = reduce_rows(_moments_block, x, chunk_size)
+        wsum = jnp.maximum(cnt, 1e-12)
+        mean = s / wsum
+        var = jnp.maximum(ss / wsum - mean * mean, 0.0) + reg_covar
+        weights = jnp.full((k,), 1.0 / k, means.dtype)
+        if covariance_type == "diag":
+            covs = jnp.broadcast_to(var, (k, d))
+        else:
+            covs = jnp.broadcast_to(jnp.diag(var), (k, d, d))
+        return GMM(weights, means, covs)
     n = x.shape[0]
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
@@ -420,6 +583,13 @@ def init_from_means(means: jax.Array, x: jax.Array,
     else:
         covs = jnp.broadcast_to(jnp.diag(var), (k, d, d))
     return GMM(weights, means, covs)
+
+
+@jax.jit
+def _moments_block(xb: jax.Array):
+    """(Σ x, Σ x², row count) of one block — streamed data moments."""
+    return (jnp.sum(xb, axis=0), jnp.sum(xb * xb, axis=0),
+            jnp.asarray(xb.shape[0], xb.dtype))
 
 
 # ----------------------------------------------------------------------
@@ -449,6 +619,48 @@ def _em_loop(gmm0: GMM, x: jax.Array, w: jax.Array, tol: float,
     return gmm, ll, it, converged
 
 
+_m_step_jit = jax.jit(m_step)
+
+
+def host_em_loop(step: Callable, gmm0: GMM, tol: float, max_iter: int):
+    """The host-side EM convergence loop shared by every out-of-core
+    trainer (:func:`fit_gmm` over a source, ``dem_from_sources``): run a
+    bootstrap ``step(gmm) -> (new_gmm, avg_ll)``, then iterate while the
+    avg-loglik delta exceeds ``tol``. State transitions, the bootstrap
+    round and the tolerance test mirror the jitted resident loops
+    (:func:`_em_loop`, ``_dem_loop``) exactly, so resident and source
+    paths converge on the same iteration sequence — keep all three in
+    lock-step. Returns ``(gmm, avg_ll, n_iter, converged)``."""
+    tol = float(tol)
+    gmm, ll = step(gmm0)
+    prev_ll, it = float("-inf"), 1
+    while it < max_iter and abs(ll - prev_ll) > tol:
+        new_gmm, avg_ll = step(gmm)
+        gmm, prev_ll, ll, it = new_gmm, ll, avg_ll, it + 1
+    converged = abs(ll - prev_ll) <= tol
+    dt = gmm.means.dtype
+    return gmm, jnp.asarray(ll, dt), jnp.asarray(it), jnp.asarray(converged)
+
+
+def _em_loop_source(gmm0: GMM, source: DataSource, tol: float,
+                    reg_covar: float, max_iter: int, estep_backend: str,
+                    chunk_size: int):
+    """Out-of-core twin of :func:`_em_loop`: the convergence loop runs on
+    the host (a source cannot live inside jit) while every per-block E-step
+    and the M-step stay jitted."""
+    backend = resolve_estep_backend(estep_backend, gmm0.is_diagonal)
+    block_fn = (_estep_block_fused if backend == "fused"
+                else _estep_block_reference)
+
+    def step(gmm):
+        stats = streaming_reduce(lambda xb: block_fn(gmm, xb), source,
+                                 chunk_size)
+        avg_ll = float(stats.loglik / jnp.maximum(stats.wsum, 1e-12))
+        return _m_step_jit(stats, reg_covar), avg_ll
+
+    return host_em_loop(step, gmm0, tol, max_iter)
+
+
 def fit_gmm(key: jax.Array, x: jax.Array, k: int,
             sample_weight: Optional[jax.Array] = None,
             covariance_type: str = "diag",
@@ -467,13 +679,28 @@ def fit_gmm(key: jax.Array, x: jax.Array, k: int,
     ``estep_backend``: an explicitly requested fused E-step off-TPU is a
     parity-testing configuration, and interpret-mode Lloyd sweeps would
     make it unusably slow.
+
+    ``x`` may be a :class:`DataSource` (DESIGN.md §7): init, every E-step
+    and convergence then run as host-driven block loops with an
+    O(chunk_size·K) working set independent of N — true out-of-core
+    training. ``chunk_size=None`` streams at :data:`DEFAULT_SOURCE_CHUNK`.
     """
-    n = x.shape[0]
-    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
     # Validate eagerly: _em_loop sees the knob as a static jit arg and a
     # typo'd value would otherwise surface as an opaque trace-time error.
     resolve_estep_backend(estep_backend, covariance_type == "diag"
                           if init_gmm is None else init_gmm.is_diagonal)
+    if isinstance(x, DataSource):
+        _require_no_weight(sample_weight, "fit_gmm over a DataSource")
+        cs = resolve_source_chunk(chunk_size)
+        if init_gmm is None:
+            init_gmm = init_from_kmeans(key, x, k,
+                                        covariance_type=covariance_type,
+                                        reg_covar=reg_covar, chunk_size=cs)
+        gmm, ll, it, converged = _em_loop_source(
+            init_gmm, x, tol, reg_covar, max_iter, estep_backend, cs)
+        return EMResult(gmm, ll, it, converged)
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
     if init_gmm is None:
         init_gmm = init_from_kmeans(key, x, k, w, covariance_type, reg_covar,
                                     chunk_size=chunk_size)
@@ -516,7 +743,9 @@ def fit_gmm_bic(key: jax.Array, x: jax.Array, k_candidates: Sequence[int],
 
     With ``chunk_size`` set the per-candidate scoring runs through
     :func:`bic_streaming`, so model selection never materializes the
-    (N, K) log-prob matrix the full-batch ``GMM.bic`` builds.
+    (N, K) log-prob matrix the full-batch ``GMM.bic`` builds. With a
+    :class:`DataSource` the whole selection — every candidate's init, EM
+    and BIC score — runs out-of-core.
     """
     best, best_bic, bics = None, jnp.inf, {}
     for i, k in enumerate(k_candidates):

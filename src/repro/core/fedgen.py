@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.em import EMResult, fit_gmm, fit_gmm_bic
 from repro.core.gmm import GMM, merge_gmms
 from repro.core.partition import ClientSplit
+from repro.data.sources import DataSource, SyntheticGMMSource
 
 
 class CommStats(NamedTuple):
@@ -34,7 +35,9 @@ class CommStats(NamedTuple):
 class FedGenResult(NamedTuple):
     global_gmm: GMM
     local_gmms: list[GMM]
-    synthetic: jax.Array       # the server-side dataset S
+    synthetic: jax.Array       # the server-side dataset S: an (|S|, d)
+    #                            array, or a SyntheticGMMSource when the
+    #                            refit ran out-of-core (synthetic="source")
     comm: CommStats
     local_results: list[EMResult]
 
@@ -110,7 +113,8 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
               reg_covar: float = 1e-6,
               covariance_type: str = "diag",
               estep_backend: str = "auto",
-              chunk_size: Optional[int] = None) -> tuple[EMResult, jax.Array]:
+              chunk_size: Optional[int] = None,
+              synthetic: str = "resident") -> tuple[EMResult, jax.Array]:
     """Algorithm 4.1 lines 21-31: merge, sample S, train global model.
 
     The synthetic set S = H * sum_c K_c points is the largest dataset in
@@ -118,11 +122,24 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
     refit — the k-means init's Lloyd sweeps and label statistics, every
     E-step, and (on the ``k_candidates`` path) the per-candidate BIC
     scoring — at an O(chunk_size·K) working set (DESIGN.md §6).
+
+    ``synthetic="source"`` goes one step further: S is never materialized
+    at all. The refit consumes a :class:`SyntheticGMMSource` that
+    regenerates seeded blocks on every pass (DESIGN.md §7), so the server's
+    peak memory is independent of H and of the number of clients — the
+    replay set can be arbitrarily large. Returned ``synthetic`` is then the
+    source object instead of an array.
     """
+    if synthetic not in ("resident", "source"):
+        raise ValueError(f"synthetic must be 'resident' or 'source', "
+                         f"got {synthetic!r}")
     merged = merge_gmms(local_gmms, jnp.asarray(sizes))
     n_synth = h * sum(g.n_components for g in local_gmms)
     k_sample, k_fit = jax.random.split(key)
-    synthetic = merged.sample(k_sample, n_synth)
+    if synthetic == "source":
+        synthetic = SyntheticGMMSource(merged, n_synth, k_sample)
+    else:
+        synthetic = merged.sample(k_sample, n_synth)
     if k_global is not None:
         res = fit_gmm(k_fit, synthetic, k_global,
                       covariance_type=covariance_type, max_iter=max_iter,
@@ -152,13 +169,16 @@ def fedgengmm(key: jax.Array, split: ClientSplit,
               reg_covar: float = 1e-6,
               covariance_type: str = "diag",
               estep_backend: str = "auto",
-              chunk_size: Optional[int] = None) -> FedGenResult:
+              chunk_size: Optional[int] = None,
+              synthetic: str = "resident") -> FedGenResult:
     """Run the full one-shot pipeline on a partitioned dataset.
 
     Either fix ``k_clients`` (paper's main experiments, K_c = K) or pass
     ``k_candidates`` for per-client BIC selection (heterogeneous models).
     ``estep_backend``/``chunk_size`` select the E-step engine for both the
-    local fits and the server refit (DESIGN.md §6).
+    local fits and the server refit (DESIGN.md §6);
+    ``synthetic="source"`` runs the server refit out-of-core (see
+    :func:`aggregate`).
     """
     k_local_train, k_agg = jax.random.split(key)
     if k_clients is not None:
@@ -181,13 +201,94 @@ def fedgengmm(key: jax.Array, split: ClientSplit,
             estep_backend=estep_backend, chunk_size=chunk_size)
         local_gmms = [r.gmm for r in local_results]
 
-    res, synthetic = aggregate(
+    res, synth = aggregate(
         k_agg, local_gmms, split.sizes, h=h, k_global=k_global,
         k_candidates=k_candidates, max_iter=max_iter, tol=tol,
         reg_covar=reg_covar, covariance_type=covariance_type,
-        estep_backend=estep_backend, chunk_size=chunk_size)
+        estep_backend=estep_backend, chunk_size=chunk_size,
+        synthetic=synthetic)
 
     uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
     down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
     comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
-    return FedGenResult(res.gmm, local_gmms, synthetic, comm, local_results)
+    return FedGenResult(res.gmm, local_gmms, synth, comm, local_results)
+
+
+# ----------------------------------------------------------------------
+# Out-of-core clients: per-client DataSource training (DESIGN.md §7)
+# ----------------------------------------------------------------------
+
+def train_locals_from_sources(key: jax.Array,
+                              sources: Sequence[DataSource],
+                              k: Optional[int] = None,
+                              k_candidates: Optional[Sequence[int]] = None,
+                              max_iter: int = 200, tol: float = 1e-3,
+                              reg_covar: float = 1e-6,
+                              covariance_type: str = "diag",
+                              estep_backend: str = "auto",
+                              chunk_size: Optional[int] = None
+                              ) -> list[EMResult]:
+    """Local TrainGMM per client, each over its own :class:`DataSource` —
+    the edge-device regime the paper targets: a client's dataset never has
+    to fit in memory, only one block at a time. Fixed ``k`` or per-client
+    BIC selection over ``k_candidates``. Sources are ragged by nature, so
+    no padding, masks or sample weights appear anywhere on this path.
+    """
+    results = []
+    for i, src in enumerate(sources):
+        sub = jax.random.fold_in(key, i)
+        if k is not None:
+            res = fit_gmm(sub, src, k, covariance_type=covariance_type,
+                          max_iter=max_iter, tol=tol, reg_covar=reg_covar,
+                          estep_backend=estep_backend, chunk_size=chunk_size)
+        else:
+            assert k_candidates is not None, "need k or k_candidates"
+            res, _ = fit_gmm_bic(sub, src, k_candidates,
+                                 covariance_type=covariance_type,
+                                 max_iter=max_iter, tol=tol,
+                                 reg_covar=reg_covar,
+                                 estep_backend=estep_backend,
+                                 chunk_size=chunk_size)
+        results.append(res)
+    return results
+
+
+def fedgengmm_from_sources(key: jax.Array,
+                           sources: Sequence[DataSource],
+                           k_clients: Optional[int] = None,
+                           k_global: Optional[int] = None,
+                           k_candidates: Optional[Sequence[int]] = None,
+                           h: int = 100,
+                           max_iter: int = 200, tol: float = 1e-3,
+                           reg_covar: float = 1e-6,
+                           covariance_type: str = "diag",
+                           estep_backend: str = "auto",
+                           chunk_size: Optional[int] = None,
+                           synthetic: str = "source") -> FedGenResult:
+    """The full one-shot pipeline with every dataset out-of-core: each
+    client streams its local fit from its own :class:`DataSource`, the
+    single communication round ships only (K, 2d+1) parameter blocks, and
+    the server refit (``synthetic="source"`` by default) replays the merged
+    mixture block-by-block — end to end, no stage holds O(N) rows.
+    Mirrors :func:`fedgengmm` semantics otherwise.
+    """
+    k_local_train, k_agg = jax.random.split(key)
+    local_results = train_locals_from_sources(
+        k_local_train, sources, k=k_clients, k_candidates=k_candidates,
+        max_iter=max_iter, tol=tol, reg_covar=reg_covar,
+        covariance_type=covariance_type, estep_backend=estep_backend,
+        chunk_size=chunk_size)
+    local_gmms = [r.gmm for r in local_results]
+    sizes = [src.num_rows for src in sources]
+
+    res, synth = aggregate(
+        k_agg, local_gmms, sizes, h=h, k_global=k_global,
+        k_candidates=k_candidates, max_iter=max_iter, tol=tol,
+        reg_covar=reg_covar, covariance_type=covariance_type,
+        estep_backend=estep_backend, chunk_size=chunk_size,
+        synthetic=synthetic)
+
+    uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
+    down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
+    comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
+    return FedGenResult(res.gmm, local_gmms, synth, comm, local_results)

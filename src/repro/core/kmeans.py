@@ -9,22 +9,30 @@ statistics over row blocks — never an (N, K) one-hot — and with
 Per-block assignment dispatches through the ``kmeans_assign`` Pallas kernel
 on TPU (``assign_backend="auto"``) and the matmul-identity reference
 elsewhere.
+
+Out-of-core data runs through the source twins (DESIGN.md §7):
+``kmeans_plusplus_streaming`` (Gumbel-max seeding over blocks),
+``kmeans_source``/``kmeans_multi_source`` (host-driven Lloyd loops) and
+``federated_kmeans_from_sources`` — none of which ever hold an (N, ·)
+array.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.em import (reduce_rows, resolve_backend,
-                           streaming_map_reduce)
+from repro.core.em import (SufficientStats, reduce_rows, resolve_backend,
+                           resolve_source_chunk, streaming_map_reduce,
+                           streaming_reduce)
+from repro.data.sources import DataSource
 
 
 class KMeansResult(NamedTuple):
     centers: jax.Array        # (K, d)
-    assignments: jax.Array    # (N,)
+    assignments: jax.Array    # (N,); None on out-of-core (DataSource) runs
     inertia: jax.Array        # ()
     n_iter: jax.Array         # ()
     cluster_sizes: jax.Array  # (K,) sum of sample weights per cluster
@@ -185,6 +193,174 @@ def federated_kmeans(key: jax.Array, client_data: jax.Array, k_global: int,
     centers, sizes = jax.vmap(local)(keys[:c], client_data, client_weights)  # (C,k,d),(C,k)
     flat_centers = centers.reshape(-1, client_data.shape[-1])
     flat_sizes = sizes.reshape(-1)
+    res = kmeans(keys[-1], flat_centers, k_global,
+                 sample_weight=flat_sizes, max_iter=max_iter)
+    return res.centers
+
+
+# ----------------------------------------------------------------------
+# Out-of-core k-means: host-driven loops over DataSource blocks (§7)
+# ----------------------------------------------------------------------
+# Per-block functions are module-level jitted with parameters (centers,
+# keys) as traced arguments, so every pass over a source hits the trace
+# cache after the first block of each shape.
+
+@jax.jit
+def _seed_block(centers: jax.Array, valid: jax.Array, round_key: jax.Array,
+                start: jax.Array, xb: jax.Array):
+    """One k-means++ sampling round over one block via the Gumbel-max
+    trick: sampling a row with probability ∝ min-distance² equals taking
+    the argmax of ``log(min_d²) + Gumbel``. Per-row Gumbel noise is keyed
+    by the global row index, so the draw is chunking-invariant, and block
+    maxima compose into the global argmax on the host — a streamed
+    categorical sample without an (N,) probability vector. With no valid
+    centers yet (round 0) the score degenerates to pure Gumbel noise,
+    i.e. a uniform first-center draw."""
+    b = xb.shape[0]
+    idx = jnp.arange(b, dtype=jnp.uint32) + start
+    row_keys = jax.vmap(jax.random.fold_in, (None, 0))(round_key, idx)
+    g = jax.vmap(lambda kk: jax.random.gumbel(kk, (), xb.dtype))(row_keys)
+    d2 = jnp.where(valid[None, :], _sq_dists(xb, centers), jnp.inf)
+    d2min = jnp.min(d2, axis=1)
+    base = jnp.where(jnp.isfinite(d2min),
+                     jnp.log(jnp.maximum(d2min, 1e-30)), 0.0)
+    score = base + g
+    i = jnp.argmax(score)
+    return score[i], xb[i]
+
+
+def kmeans_plusplus_streaming(key: jax.Array, source: DataSource, k: int,
+                              chunk_size: Optional[int] = None) -> jax.Array:
+    """k-means++ seeding over a :class:`DataSource` -> (k, d).
+
+    The ROADMAP's last resident-array scan: each of the k rounds streams
+    the blocks once, recomputing min distances against the centers chosen
+    so far (O(k²·N·d) total instead of the cached-min-d O(k·N·d) of the
+    resident pass — the price of holding no (N,) state)."""
+    chunk_size = resolve_source_chunk(chunk_size)
+    d = source.dim
+    centers = jnp.zeros((k, d), source.dtype)
+    valid = jnp.zeros((k,), bool)
+    for r in range(k):
+        round_key = jax.random.fold_in(key, r)
+        best_score, best_row = -float("inf"), None
+        start = 0
+        for xb in source.iter_blocks(chunk_size):
+            score, row = _seed_block(centers, valid, round_key,
+                                     jnp.uint32(start), xb)
+            score = float(score)
+            if score > best_score:
+                best_score, best_row = score, row
+            start += xb.shape[0]
+        centers = centers.at[r].set(best_row)
+        valid = valid.at[r].set(True)
+    return centers
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _lloyd_block(centers: jax.Array, xb: jax.Array, backend: str):
+    """(counts, sums, inertia) of one unweighted block — the Lloyd-sweep
+    sufficient statistics the host loop accumulates."""
+    k = centers.shape[0]
+    idx, d2 = _assign_block(xb, centers, backend)
+    counts = jax.ops.segment_sum(jnp.ones(xb.shape[0], xb.dtype), idx,
+                                 num_segments=k)
+    sums = jax.ops.segment_sum(xb, idx, num_segments=k)
+    return counts, sums, jnp.sum(d2)
+
+
+@partial(jax.jit, static_argnames=("covariance_type", "backend"))
+def kmeans_label_block(centers: jax.Array, xb: jax.Array,
+                       covariance_type: str, backend: str) -> SufficientStats:
+    """Hard-assignment label statistics of one block against fixed centers
+    — the out-of-core replacement for ``label_stats``: assignment and
+    labelling fuse into one pass, so the (N,) label vector of the resident
+    init never exists."""
+    k = centers.shape[0]
+    idx, _ = _assign_block(xb, centers, backend)
+    s0 = jax.ops.segment_sum(jnp.ones(xb.shape[0], xb.dtype), idx,
+                             num_segments=k)
+    s1 = jax.ops.segment_sum(xb, idx, num_segments=k)
+    if covariance_type == "diag":
+        s2 = jax.ops.segment_sum(xb * xb, idx, num_segments=k)
+    else:
+        s2 = jax.ops.segment_sum(xb[:, :, None] * xb[:, None, :], idx,
+                                 num_segments=k)
+    return SufficientStats(s0, s1, s2, jnp.zeros((), xb.dtype),
+                           jnp.asarray(xb.shape[0], xb.dtype))
+
+
+def kmeans_source(key: jax.Array, source: DataSource, k: int,
+                  max_iter: int = 100, tol: float = 1e-4,
+                  chunk_size: Optional[int] = None,
+                  assign_backend: str = "auto") -> KMeansResult:
+    """Lloyd's algorithm over a :class:`DataSource`: streamed k-means++
+    seeding, then host-driven sweeps accumulating (counts, sums, inertia)
+    per block. Mirrors :func:`kmeans` (same update, same stopping rule,
+    final re-score against the returned centers) except that assignments
+    are not collected — they would be the only O(N) output."""
+    chunk_size = resolve_source_chunk(chunk_size)
+    backend = resolve_backend(assign_backend)
+    centers = kmeans_plusplus_streaming(key, source, k, chunk_size)
+
+    def sweep(c):
+        return streaming_reduce(lambda xb: _lloyd_block(xb=xb, centers=c,
+                                                        backend=backend),
+                                source, chunk_size)
+
+    it, shift, tol = 0, float("inf"), float(tol)
+    while it < max_iter and shift > tol:
+        counts, sums, _ = sweep(centers)
+        new_centers = jnp.where(
+            counts[:, None] > 0,
+            sums / jnp.maximum(counts[:, None], 1e-12), centers)
+        shift = float(jnp.sum((new_centers - centers) ** 2))
+        centers, it = new_centers, it + 1
+    counts, _, inertia = sweep(centers)
+    return KMeansResult(centers, None, inertia, jnp.asarray(it), counts)
+
+
+def kmeans_multi_source(key: jax.Array, source: DataSource, k: int,
+                        max_iter: int = 100, tol: float = 1e-4,
+                        n_init: int = 4,
+                        chunk_size: Optional[int] = None,
+                        assign_backend: str = "auto") -> KMeansResult:
+    """Best of ``n_init`` out-of-core restarts by final-center inertia —
+    the source twin of :func:`kmeans_multi` (restarts run sequentially on
+    the host; each is a separate streamed run)."""
+    best = None
+    for sub in jax.random.split(key, n_init):
+        res = kmeans_source(sub, source, k, max_iter=max_iter, tol=tol,
+                            chunk_size=chunk_size,
+                            assign_backend=assign_backend)
+        if best is None or float(res.inertia) < float(best.inertia):
+            best = res
+    return best
+
+
+def federated_kmeans_from_sources(key: jax.Array,
+                                  sources: Sequence[DataSource],
+                                  k_global: int,
+                                  k_local: Optional[int] = None,
+                                  max_iter: int = 100,
+                                  chunk_size: Optional[int] = None,
+                                  assign_backend: str = "auto") -> jax.Array:
+    """One-shot federated k-means with per-client :class:`DataSource` data:
+    each client streams its own local k-means; the server clusters the
+    size-weighted local centers (C·K_local rows — always resident-tiny).
+    Ragged client sizes need no padding or masks on this path."""
+    c = len(sources)
+    k_local = k_local or k_global
+    keys = jax.random.split(key, c + 1)
+    centers, sizes = [], []
+    for kk, src in zip(keys[:c], sources):
+        res = kmeans_source(kk, src, k_local, max_iter=max_iter,
+                            chunk_size=chunk_size,
+                            assign_backend=assign_backend)
+        centers.append(res.centers)
+        sizes.append(res.cluster_sizes)
+    flat_centers = jnp.concatenate(centers, axis=0)
+    flat_sizes = jnp.concatenate(sizes, axis=0)
     res = kmeans(keys[-1], flat_centers, k_global,
                  sample_weight=flat_sizes, max_iter=max_iter)
     return res.centers

@@ -1,10 +1,14 @@
 """Data substrate: synthetic dataset analogues, PCA, normalization, token
-pipeline."""
+pipeline, and out-of-core data sources (DESIGN.md §7)."""
 from repro.data.datasets import REGISTRY, Dataset, load
 from repro.data.pca import PCAModel, fit_pca, transform_pca
 from repro.data.preprocess import MinMaxScaler, fit_minmax
+from repro.data.sources import (ArraySource, ConcatSource, DataSource,
+                                NpyFileSource, SyntheticGMMSource, as_source)
 from repro.data.tokens import Batch, batches, synthetic_stream
 
 __all__ = ["REGISTRY", "Dataset", "load", "PCAModel", "fit_pca",
            "transform_pca", "MinMaxScaler", "fit_minmax", "Batch",
-           "batches", "synthetic_stream"]
+           "batches", "synthetic_stream",
+           "ArraySource", "ConcatSource", "DataSource", "NpyFileSource",
+           "SyntheticGMMSource", "as_source"]

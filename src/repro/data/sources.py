@@ -1,0 +1,281 @@
+"""Out-of-core data sources: row streams the training engine can consume
+without ever materializing the dataset (DESIGN.md §7).
+
+A :class:`DataSource` is the host-side seam between storage (a file, a
+generator, another process) and the device-side streaming-statistics engine
+(``repro.core.em``): it knows its row count and feature dimension and can
+iterate fixed-size `(chunk_size, dim)` blocks. Every statistic the training
+pipeline reduces (``SufficientStats``, Lloyd-sweep stats, score sums) is
+additive in N, so a host loop over blocks with a jitted per-block function
+computes exactly the same numbers as the resident-array paths — with an
+O(chunk · K) peak working set that is independent of N.
+
+Block iteration is **restartable**: ``iter_blocks`` may be called any number
+of times (EM takes one pass per iteration) and must yield the same rows in
+the same order each time. Blocks are full ``chunk_size`` rows except the
+final ragged remainder, and for a fixed dataset the row content must not
+depend on ``chunk_size`` (only the block boundaries may) — that is what
+makes fits reproducible across chunk sizes and bit-identical across source
+types backed by the same rows.
+
+Sources carry no sample weights: weights exist to make padded fixed-shape
+federated arrays representable, and block streams are never padded. Ragged
+client shards are expressed directly (:class:`ConcatSource`), so every row
+a source yields has weight 1.
+
+This module deliberately imports nothing from ``repro`` (it is below the
+whole stack); :class:`SyntheticGMMSource` duck-types the ``GMM`` pytree
+(``weights`` / ``means`` / ``covs`` attributes) instead of importing it.
+"""
+from __future__ import annotations
+
+import abc
+from functools import partial
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _check_chunk(chunk_size: int) -> int:
+    chunk_size = int(chunk_size)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    return chunk_size
+
+
+class DataSource(abc.ABC):
+    """Protocol for out-of-core row streams: ``num_rows``, ``dim``,
+    ``iter_blocks(chunk_size)`` (restartable, see module docstring)."""
+
+    @property
+    @abc.abstractmethod
+    def num_rows(self) -> int:
+        """Total number of rows the source yields per pass."""
+
+    @property
+    @abc.abstractmethod
+    def dim(self) -> int:
+        """Feature dimension of every yielded block."""
+
+    @property
+    def dtype(self):
+        """Dtype of yielded blocks (canonicalized, i.e. what ``jnp`` will
+        actually hand the engine)."""
+        return jax.dtypes.canonicalize_dtype(jnp.float32)
+
+    @abc.abstractmethod
+    def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
+        """Yield ``(b, dim)`` blocks with ``b == chunk_size`` everywhere but
+        the final ragged block. Must be restartable and deterministic."""
+
+    # ------------------------------------------------------------------
+    def num_blocks(self, chunk_size: int) -> int:
+        return -(-self.num_rows // _check_chunk(chunk_size))
+
+    def materialize(self, chunk_size: int = 65536) -> jax.Array:
+        """Concatenate all blocks into one resident ``(num_rows, dim)``
+        array — O(N) memory by definition; for tests and small sources."""
+        return jnp.concatenate(list(self.iter_blocks(chunk_size)), axis=0)
+
+    def __len__(self) -> int:
+        return self.num_rows
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(num_rows={self.num_rows}, "
+                f"dim={self.dim}, dtype={jnp.dtype(self.dtype).name})")
+
+
+class ArraySource(DataSource):
+    """A resident array viewed as a source — the bridge that lets one code
+    path serve both worlds, and the parity oracle for every other source."""
+
+    def __init__(self, x):
+        if x.ndim != 2:
+            raise ValueError(f"ArraySource expects (N, d) rows, got {x.shape}")
+        if x.shape[0] == 0:
+            raise ValueError("ArraySource needs at least one row")
+        self._x = x
+
+    @property
+    def num_rows(self) -> int:
+        return int(self._x.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self._x.shape[1])
+
+    @property
+    def dtype(self):
+        return jax.dtypes.canonicalize_dtype(self._x.dtype)
+
+    def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
+        chunk_size = _check_chunk(chunk_size)
+        for start in range(0, self.num_rows, chunk_size):
+            yield jnp.asarray(self._x[start:start + chunk_size])
+
+
+class NpyFileSource(DataSource):
+    """Memory-mapped ``.npy`` rows: only the active block is ever copied
+    into (device) memory; the OS page cache owns the rest."""
+
+    def __init__(self, path):
+        self._path = str(path)
+        self._mm = np.load(self._path, mmap_mode="r")
+        if self._mm.ndim != 2:
+            raise ValueError(
+                f"NpyFileSource expects a 2-D (N, d) array file, "
+                f"got shape {self._mm.shape} in {self._path}")
+        if self._mm.shape[0] == 0:
+            raise ValueError(f"empty .npy source: {self._path}")
+
+    @property
+    def num_rows(self) -> int:
+        return int(self._mm.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self._mm.shape[1])
+
+    @property
+    def dtype(self):
+        return jax.dtypes.canonicalize_dtype(self._mm.dtype)
+
+    def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
+        chunk_size = _check_chunk(chunk_size)
+        for start in range(0, self.num_rows, chunk_size):
+            # np.asarray slices exactly one block out of the mmap; the
+            # device transfer is the only copy.
+            yield jnp.asarray(np.asarray(self._mm[start:start + chunk_size]))
+
+
+class ConcatSource(DataSource):
+    """Row-wise concatenation of sources (ragged federated shards).
+
+    Blocks are re-chunked across child boundaries, so the emitted block
+    partition — and therefore every engine reduction, bit for bit — is
+    identical to an :class:`ArraySource` over the concatenated rows, no
+    matter how unevenly the children split them.
+    """
+
+    def __init__(self, sources: Sequence[DataSource]):
+        sources = list(sources)
+        if not sources:
+            raise ValueError("ConcatSource needs at least one child source")
+        dims = {s.dim for s in sources}
+        if len(dims) != 1:
+            raise ValueError(f"child sources disagree on dim: {sorted(dims)}")
+        dtypes = {jnp.dtype(s.dtype) for s in sources}
+        if len(dtypes) != 1:
+            # Mixed dtypes would make a block's dtype depend on which
+            # children it straddles — i.e. on the chunk partition — and
+            # silently break the bit-parity contract above.
+            raise ValueError("child sources disagree on dtype: "
+                             f"{sorted(d.name for d in dtypes)}")
+        self._sources = sources
+        self._num_rows = sum(s.num_rows for s in sources)
+        self._dim = sources[0].dim
+
+    @property
+    def num_rows(self) -> int:
+        return self._num_rows
+
+    @property
+    def dim(self) -> int:
+        return self._dim
+
+    @property
+    def dtype(self):
+        return self._sources[0].dtype
+
+    def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
+        chunk_size = _check_chunk(chunk_size)
+        pending: list[jax.Array] = []
+        have = 0
+        for src in self._sources:
+            for block in src.iter_blocks(chunk_size):
+                pending.append(block)
+                have += block.shape[0]
+                while have >= chunk_size:
+                    buf = (pending[0] if len(pending) == 1
+                           else jnp.concatenate(pending, axis=0))
+                    yield buf[:chunk_size]
+                    rest = buf[chunk_size:]
+                    pending = [rest] if rest.shape[0] else []
+                    have = rest.shape[0]
+        if have:
+            yield (pending[0] if len(pending) == 1
+                   else jnp.concatenate(pending, axis=0))
+
+
+@partial(jax.jit, static_argnames=("size",))
+def _synth_block(log_weights, means, scale, key, start, size):
+    """Rows [start, start+size) of the mixture stream. Each row's draw is
+    keyed by its global row index (``fold_in``), never by block position, so
+    the stream is invariant to ``chunk_size`` and restartable by design."""
+    d = means.shape[1]
+    idx = jnp.arange(size, dtype=jnp.uint32) + start
+    row_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, idx)
+    pair = jax.vmap(jax.random.split)(row_keys)            # (size, 2) keys
+    comp = jax.vmap(
+        lambda kk: jax.random.categorical(kk, log_weights))(pair[:, 0])
+    eps = jax.vmap(
+        lambda kk: jax.random.normal(kk, (d,), means.dtype))(pair[:, 1])
+    mu = means[comp]
+    if scale.ndim == 2:                                     # diagonal: std
+        return mu + scale[comp] * eps
+    return mu + jnp.einsum("nij,nj->ni", scale[comp], eps)  # full: Cholesky
+
+
+class SyntheticGMMSource(DataSource):
+    """Samples from a GMM generated block-by-block from a seeded key — the
+    server-side synthetic-replay set of FedGenGMM (|S| = H · Σ K_c) without
+    ever materializing it. Re-iteration regenerates identical rows, so a
+    multi-pass EM fit sees one fixed virtual dataset.
+
+    ``gmm`` is any object with ``weights (K,)``, ``means (K, d)`` and
+    ``covs`` (``(K, d)`` diagonal variances or ``(K, d, d)`` full)
+    attributes — i.e. a ``repro.core.gmm.GMM``, duck-typed to keep this
+    module import-free below the stack.
+    """
+
+    def __init__(self, gmm, num_rows: int, key):
+        num_rows = int(num_rows)
+        if num_rows <= 0:
+            raise ValueError(f"num_rows must be positive, got {num_rows}")
+        means = jnp.asarray(gmm.means)
+        covs = jnp.asarray(gmm.covs)
+        self._log_weights = jnp.log(jnp.asarray(gmm.weights))
+        self._means = means
+        self._scale = (jnp.sqrt(covs) if covs.ndim == 2
+                       else jnp.linalg.cholesky(covs))
+        self._key = key
+        self._num_rows = num_rows
+
+    @property
+    def num_rows(self) -> int:
+        return self._num_rows
+
+    @property
+    def dim(self) -> int:
+        return int(self._means.shape[1])
+
+    @property
+    def dtype(self):
+        return self._means.dtype
+
+    def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
+        chunk_size = _check_chunk(chunk_size)
+        for start in range(0, self._num_rows, chunk_size):
+            size = min(chunk_size, self._num_rows - start)
+            yield _synth_block(self._log_weights, self._means, self._scale,
+                               self._key, jnp.uint32(start), size)
+
+
+def as_source(x) -> DataSource:
+    """Coerce an `(N, d)` array to :class:`ArraySource`; pass sources
+    through unchanged."""
+    if isinstance(x, DataSource):
+        return x
+    return ArraySource(x)

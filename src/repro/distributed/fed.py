@@ -29,6 +29,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
                            init_from_means, m_step)
 from repro.core.gmm import GMM, merge_gmms_stacked
+from repro.data.sources import SyntheticGMMSource
 
 
 class ShardedFedResult(NamedTuple):
@@ -41,14 +42,25 @@ class ShardedFedResult(NamedTuple):
 def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
                    h: int = 100, max_iter: int = 200, tol: float = 1e-3,
                    estep_backend: str = "auto",
-                   chunk_size: int | None = None):
+                   chunk_size: int | None = None,
+                   synthetic: str = "resident"):
     """One-shot FedGenGMM over a device mesh.
 
     data: (C, N, d), mask: (C, N) with C divisible by the data-axis size.
     Returns ShardedFedResult (global model replicated).
     ``estep_backend``/``chunk_size`` select the E-step engine for both the
     per-shard local fits and the replicated server refit.
+
+    ``synthetic="source"`` makes the replicated server refit out-of-core:
+    the synthetic replay set |S| = H·K·C — the one dataset in this runtime
+    that *grows with the client count* — is consumed as a seeded
+    :class:`SyntheticGMMSource` block stream instead of being materialized
+    (DESIGN.md §7). The collective pattern is untouched: the all_gather
+    payload is parameters either way.
     """
+    if synthetic not in ("resident", "source"):
+        raise ValueError(f"synthetic must be 'resident' or 'source', "
+                         f"got {synthetic!r}")
     axis = "data"
     n_shards = mesh.shape[axis]
     c = data.shape[0]
@@ -85,7 +97,10 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
     merged = merge_gmms_stacked(w_all, mu_all, cov_all, sz_all)
     n_synth = h * k * c
     k_sample, k_fit = jax.random.split(jax.random.fold_in(key, 1))
-    synth = merged.sample(k_sample, n_synth)
+    if synthetic == "source":
+        synth = SyntheticGMMSource(merged, n_synth, k_sample)
+    else:
+        synth = merged.sample(k_sample, n_synth)
     res = fit_gmm(k_fit, synth, k_global, max_iter=max_iter, tol=tol,
                   estep_backend=estep_backend, chunk_size=chunk_size)
     return ShardedFedResult(res.gmm, w_all, mu_all, cov_all)

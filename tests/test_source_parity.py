@@ -1,0 +1,244 @@
+"""Out-of-core training parity (DESIGN.md §7): source-backed fits must be
+bit-identical across source types holding the same rows, agree with the
+resident-array engine to f32 rounding, and hold an O(chunk) working set
+independent of N — asserted live against jax's buffer registry at 1M rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dem, dem_from_sources, fedgengmm_from_sources
+from repro.core.em import (bic_streaming, e_step_stats, fit_gmm, fit_gmm_bic,
+                           init_from_kmeans, init_from_means,
+                           log_prob_chunked, score_streaming)
+from repro.core.gmm import GMM
+from repro.core.kmeans import kmeans_source
+from repro.data.sources import (ArraySource, ConcatSource, DataSource,
+                                NpyFileSource, SyntheticGMMSource)
+from conftest import planted_gmm_data
+
+# end-to-end fits: multi-second EM training loops on CPU
+pytestmark = pytest.mark.slow
+
+CHUNK = 512  # deliberately not dividing the 3000-row fixture
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(17)
+    x, y, mus = planted_gmm_data(rng, n=3000, d=4, k=3, spread=5.0, std=0.5,
+                                 min_sep_sigma=8.0)
+    return x, mus
+
+
+def params(res):
+    g = res.gmm if hasattr(res, "gmm") else res
+    return [np.asarray(g.weights), np.asarray(g.means), np.asarray(g.covs)]
+
+
+class TestSourceVsSourceBitwise:
+    """Same rows + same chunk partition -> identical block loop -> the fits
+    must match bit for bit, whatever storage backs the stream."""
+
+    def test_npy_and_concat_match_array_source(self, setup, tmp_path):
+        x, _ = setup
+        path = tmp_path / "x.npy"
+        np.save(path, x)
+        ragged = ConcatSource([ArraySource(x[:700]), ArraySource(x[700:701]),
+                               ArraySource(x[701:2050]), ArraySource(x[2050:])])
+        base = fit_gmm(jax.random.key(0), ArraySource(x), 3, chunk_size=CHUNK)
+        for src in (NpyFileSource(path), ragged):
+            res = fit_gmm(jax.random.key(0), src, 3, chunk_size=CHUNK)
+            for a, b in zip(params(base), params(res)):
+                np.testing.assert_array_equal(a, b)
+            assert int(res.n_iter) == int(base.n_iter)
+
+    def test_synthetic_matches_materialized(self, setup):
+        _, mus = setup
+        truth = GMM(jnp.full((3,), 1 / 3), jnp.asarray(mus),
+                    jnp.full((3, 4), 0.25))
+        src = SyntheticGMMSource(truth, 3000, jax.random.key(9))
+        res_stream = fit_gmm(jax.random.key(1), src, 3, chunk_size=CHUNK)
+        res_resident = fit_gmm(jax.random.key(1),
+                               ArraySource(src.materialize(CHUNK)), 3,
+                               chunk_size=CHUNK)
+        for a, b in zip(params(res_stream), params(res_resident)):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestSourceVsResidentEngine:
+    """The host block loop vs the lax.scan/full-batch resident paths: same
+    math, possibly different XLA fusions — f32-rounding agreement."""
+
+    def test_estep_stats_match(self, setup):
+        x, _ = setup
+        g = init_from_kmeans(jax.random.key(2), jnp.asarray(x), 3)
+        src_stats = e_step_stats(g, ArraySource(x), chunk_size=CHUNK)
+        for resident in (e_step_stats(g, jnp.asarray(x), chunk_size=CHUNK),
+                         e_step_stats(g, jnp.asarray(x))):
+            np.testing.assert_allclose(np.asarray(src_stats.s0),
+                                       np.asarray(resident.s0), rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(src_stats.s1),
+                                       np.asarray(resident.s1),
+                                       rtol=1e-5, atol=1e-3)
+            np.testing.assert_allclose(float(src_stats.loglik),
+                                       float(resident.loglik), rtol=1e-5)
+        assert float(src_stats.wsum) == float(len(x))
+
+    def test_fit_same_init_tracks_resident(self, setup):
+        x, _ = setup
+        init = init_from_kmeans(jax.random.key(3), jnp.asarray(x), 3)
+        res_src = fit_gmm(jax.random.key(0), ArraySource(x), 3,
+                          init_gmm=init, chunk_size=CHUNK)
+        res_arr = fit_gmm(jax.random.key(0), jnp.asarray(x), 3,
+                          init_gmm=init, chunk_size=CHUNK)
+        np.testing.assert_allclose(float(res_src.log_likelihood),
+                                   float(res_arr.log_likelihood), atol=1e-4)
+        for a, b in zip(params(res_src), params(res_arr)):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+    def test_scoring_matches_gmm_methods(self, setup):
+        x, _ = setup
+        res = fit_gmm(jax.random.key(4), jnp.asarray(x), 3)
+        xs, xj = ArraySource(x), jnp.asarray(x)
+        np.testing.assert_allclose(
+            float(score_streaming(res.gmm, xs, chunk_size=CHUNK)),
+            float(res.gmm.score(xj)), rtol=1e-5)
+        np.testing.assert_allclose(
+            float(bic_streaming(res.gmm, xs, chunk_size=CHUNK)),
+            float(res.gmm.bic(xj)), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(log_prob_chunked(res.gmm, xs, chunk_size=CHUNK)),
+            np.asarray(res.gmm.log_prob(xj)), rtol=1e-4, atol=1e-4)
+
+    def test_init_from_means_streams_moments(self, setup):
+        x, _ = setup
+        centers = jnp.asarray(x[:3])
+        g_src = init_from_means(centers, ArraySource(x))
+        g_arr = init_from_means(centers, jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(g_src.covs),
+                                   np.asarray(g_arr.covs), rtol=1e-3)
+
+    def test_bic_selection_agrees(self, setup):
+        x, _ = setup
+        best_src, bics_src = fit_gmm_bic(jax.random.key(5), ArraySource(x),
+                                         [2, 3, 4], chunk_size=CHUNK)
+        _, bics_arr = fit_gmm_bic(jax.random.key(5), jnp.asarray(x),
+                                  [2, 3, 4], chunk_size=CHUNK)
+        assert min(bics_src, key=bics_src.get) == \
+            min(bics_arr, key=bics_arr.get) == 3
+        assert best_src.gmm.n_components == 3
+
+    def test_kmeans_source_recovers_planted_centers(self, setup):
+        x, mus = setup
+        res = kmeans_source(jax.random.key(6), ArraySource(x), 3,
+                            chunk_size=CHUNK)
+        assert res.assignments is None  # the one O(N) output, not collected
+        got = np.asarray(res.centers)
+        dists = np.linalg.norm(got[:, None] - mus[None], axis=-1)
+        assert dists.min(axis=0).max() < 0.5
+        assert float(jnp.sum(res.cluster_sizes)) == float(len(x))
+
+
+class TestFederatedSources:
+    def test_fedgen_from_ragged_sources(self, setup):
+        x, _ = setup
+        cuts = [0, 450, 1300, 1999, 3000]
+        sources = [ArraySource(x[a:b]) for a, b in zip(cuts, cuts[1:])]
+        fr = fedgengmm_from_sources(jax.random.key(0), sources, k_clients=3,
+                                    k_global=3, h=40, chunk_size=CHUNK)
+        bench = fit_gmm(jax.random.key(1), jnp.asarray(x), 3)
+        ll_fed = float(fr.global_gmm.score(jnp.asarray(x)))
+        ll_cen = float(bench.gmm.score(jnp.asarray(x)))
+        assert ll_fed > ll_cen - 0.35, (ll_fed, ll_cen)
+        assert isinstance(fr.synthetic, DataSource)  # replay never resident
+        assert fr.synthetic.num_rows == 40 * 3 * 4
+        assert fr.comm.rounds == 1
+
+    def test_dem_from_sources_matches_resident_dem(self, setup):
+        from repro.core.partition import ClientSplit
+        x, _ = setup
+        cuts = [0, 800, 1600, 2400, 3000]
+        shards = [x[a:b] for a, b in zip(cuts, cuts[1:])]
+        sources = [ArraySource(s) for s in shards]
+        # equal-size resident split so dem() needs no padding weights
+        n_max = max(len(s) for s in shards)
+        data = np.zeros((4, n_max, 4), np.float32)
+        mask = np.zeros((4, n_max), np.float32)
+        for i, s in enumerate(shards):
+            data[i, :len(s)], mask[i, :len(s)] = s, 1.0
+        split = ClientSplit(data, mask,
+                            np.array([len(s) for s in shards]),
+                            np.zeros((4, 1), np.int64))
+        dr_src = dem_from_sources(jax.random.key(0), sources, 3, init=1,
+                                  chunk_size=CHUNK)
+        dr_res = dem(jax.random.key(0), split, 3, init=1)
+        assert bool(dr_src.converged)
+        np.testing.assert_allclose(float(dr_src.log_likelihood),
+                                   float(dr_res.log_likelihood), atol=5e-3)
+        assert dr_src.comm.rounds == int(dr_src.n_rounds)
+
+    def test_dem_from_sources_rejects_pilot_init(self, setup):
+        x, _ = setup
+        with pytest.raises(ValueError, match="init 2"):
+            dem_from_sources(jax.random.key(0), [ArraySource(x)], 3, init=2)
+
+
+class _WorkingSetSpy(DataSource):
+    """Wraps a source; at every block boundary asserts that no live jax
+    buffer has grown an O(N) leading axis. Block boundaries are exactly
+    where a leaked materialization would be resident."""
+
+    def __init__(self, inner: DataSource, max_rows: int):
+        self._inner = inner
+        self._max_rows = max_rows
+        self.blocks_seen = 0
+
+    @property
+    def num_rows(self):
+        return self._inner.num_rows
+
+    @property
+    def dim(self):
+        return self._inner.dim
+
+    @property
+    def dtype(self):
+        return self._inner.dtype
+
+    def iter_blocks(self, chunk_size):
+        for block in self._inner.iter_blocks(chunk_size):
+            assert block.shape[0] <= chunk_size
+            big = [a.shape for a in jax.live_arrays()
+                   if a.ndim and a.shape[0] > self._max_rows]
+            assert not big, f"O(N)-sized live buffers: {big}"
+            self.blocks_seen += 1
+            yield block
+
+
+class TestMillionRowWorkingSet:
+    def test_million_row_synthetic_fit_constant_memory(self):
+        """Acceptance: fitting N=1M rows via SyntheticGMMSource completes
+        with a peak working set independent of N (no live array ever holds
+        more than a few chunks of rows) and recovers the planted mixture."""
+        n, chunk = 1_000_000, 65536
+        truth = GMM(jnp.array([0.4, 0.6]),
+                    jnp.array([[-4.0, 0.0, 2.0, 1.0], [4.0, 1.0, -2.0, 0.0]]),
+                    jnp.full((2, 4), 0.3))
+        src = SyntheticGMMSource(truth, n, jax.random.key(11))
+        spy = _WorkingSetSpy(src, max_rows=4 * chunk)
+        res = fit_gmm(jax.random.key(0), spy, 2, chunk_size=chunk,
+                      max_iter=5, tol=1e-3)
+        assert spy.blocks_seen >= 2 * src.num_blocks(chunk)  # multi-pass
+        assert bool(jnp.all(jnp.isfinite(res.gmm.means)))
+        got = np.sort(np.asarray(res.gmm.means)[:, 0])
+        np.testing.assert_allclose(got, [-4.0, 4.0], atol=0.1)
+        got_w = np.sort(np.asarray(res.gmm.weights))
+        np.testing.assert_allclose(got_w, [0.4, 0.6], atol=0.02)
+
+    def test_materialize_is_the_opt_in_exception(self):
+        """materialize() is the only O(N) affordance and it is explicit."""
+        truth = GMM(jnp.array([1.0]), jnp.zeros((1, 2)), jnp.ones((1, 2)))
+        src = SyntheticGMMSource(truth, 1024, jax.random.key(0))
+        assert src.materialize(256).shape == (1024, 2)

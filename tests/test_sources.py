@@ -1,0 +1,197 @@
+"""DataSource layer unit tests (DESIGN.md §7): block contracts, re-chunking,
+chunk-invariance of the synthetic stream, mmap round-trips, validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gmm import GMM
+from repro.data.sources import (ArraySource, ConcatSource, DataSource,
+                                NpyFileSource, SyntheticGMMSource, as_source)
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return np.random.default_rng(0).normal(size=(1000, 5)).astype(np.float32)
+
+
+def blocks_of(source, chunk):
+    return [np.asarray(b) for b in source.iter_blocks(chunk)]
+
+
+class TestArraySource:
+    def test_protocol(self, rows):
+        s = ArraySource(rows)
+        assert (s.num_rows, s.dim, len(s)) == (1000, 5, 1000)
+        assert s.dtype == jnp.float32
+
+    def test_block_shapes_ragged_tail(self, rows):
+        shapes = [b.shape for b in blocks_of(ArraySource(rows), 256)]
+        assert shapes == [(256, 5)] * 3 + [(232, 5)]
+
+    def test_materialize_round_trip(self, rows):
+        np.testing.assert_array_equal(
+            np.asarray(ArraySource(rows).materialize(256)), rows)
+
+    def test_restartable(self, rows):
+        s = ArraySource(rows)
+        first, second = blocks_of(s, 300), blocks_of(s, 300)
+        for a, b in zip(first, second):
+            np.testing.assert_array_equal(a, b)
+
+    def test_num_blocks(self, rows):
+        s = ArraySource(rows)
+        assert s.num_blocks(256) == 4
+        assert s.num_blocks(1000) == 1
+        assert s.num_blocks(7000) == 1
+
+    def test_rejects_bad_shapes(self, rows):
+        with pytest.raises(ValueError):
+            ArraySource(rows[:, 0])
+        with pytest.raises(ValueError):
+            ArraySource(rows[:0])
+        with pytest.raises(ValueError):
+            list(ArraySource(rows).iter_blocks(0))
+
+    def test_as_source(self, rows):
+        assert isinstance(as_source(rows), ArraySource)
+        s = ArraySource(rows)
+        assert as_source(s) is s
+
+
+class TestNpyFileSource:
+    def test_mmap_round_trip(self, rows, tmp_path):
+        path = tmp_path / "rows.npy"
+        np.save(path, rows)
+        s = NpyFileSource(path)
+        assert (s.num_rows, s.dim) == rows.shape
+        np.testing.assert_array_equal(np.asarray(s.materialize(300)), rows)
+
+    def test_blocks_match_array_source(self, rows, tmp_path):
+        path = tmp_path / "rows.npy"
+        np.save(path, rows)
+        for a, b in zip(blocks_of(NpyFileSource(path), 256),
+                        blocks_of(ArraySource(rows), 256)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_rejects_non_2d(self, tmp_path):
+        path = tmp_path / "bad.npy"
+        np.save(path, np.zeros((4, 3, 2), np.float32))
+        with pytest.raises(ValueError):
+            NpyFileSource(path)
+
+
+class TestConcatSource:
+    def test_ragged_shards_rechunk_to_array_partition(self, rows):
+        """Blocks must be bit-identical to an ArraySource over the
+        concatenated rows regardless of shard boundaries — that is what
+        makes ConcatSource fits match single-source fits exactly."""
+        shards = [rows[:311], rows[311:312], rows[312:700], rows[700:]]
+        c = ConcatSource([ArraySource(s) for s in shards])
+        assert c.num_rows == 1000
+        got = blocks_of(c, 256)
+        want = blocks_of(ArraySource(rows), 256)
+        assert [g.shape for g in got] == [w.shape for w in want]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+    def test_nested_and_mixed_children(self, rows, tmp_path):
+        path = tmp_path / "tail.npy"
+        np.save(path, rows[600:])
+        c = ConcatSource([
+            ConcatSource([ArraySource(rows[:100]), ArraySource(rows[100:600])]),
+            NpyFileSource(path)])
+        np.testing.assert_array_equal(np.asarray(c.materialize(128)), rows)
+
+    def test_rejects_dim_mismatch_and_empty(self, rows):
+        with pytest.raises(ValueError):
+            ConcatSource([ArraySource(rows), ArraySource(rows[:, :3])])
+        with pytest.raises(ValueError):
+            ConcatSource([])
+
+    def test_rejects_dtype_mismatch(self, rows):
+        """Mixed dtypes would make a straddling block's dtype depend on the
+        chunk partition — rejected up front like a dim mismatch."""
+        ints = np.ones((10, 5), np.int32)
+        with pytest.raises(ValueError, match="dtype"):
+            ConcatSource([ArraySource(rows), ArraySource(ints)])
+
+
+class TestSyntheticGMMSource:
+    @pytest.fixture(scope="class")
+    def gmm(self):
+        return GMM(jnp.array([0.25, 0.75]),
+                   jnp.array([[-4.0, 0.0, 1.0], [4.0, 2.0, -1.0]]),
+                   jnp.array([[0.5, 1.0, 0.25], [1.5, 0.5, 1.0]]))
+
+    def test_chunk_invariance(self, gmm):
+        """Row i's draw is keyed by i, never by block position: the stream
+        is one fixed virtual dataset whatever the chunking."""
+        s = SyntheticGMMSource(gmm, 1000, jax.random.key(7))
+        m64 = np.asarray(s.materialize(64))
+        np.testing.assert_array_equal(m64, np.asarray(s.materialize(97)))
+        np.testing.assert_array_equal(m64, np.asarray(s.materialize(1000)))
+
+    def test_deterministic_per_key(self, gmm):
+        a = SyntheticGMMSource(gmm, 200, jax.random.key(1)).materialize(64)
+        b = SyntheticGMMSource(gmm, 200, jax.random.key(1)).materialize(64)
+        c = SyntheticGMMSource(gmm, 200, jax.random.key(2)).materialize(64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_moments_match_mixture(self, gmm):
+        x = np.asarray(SyntheticGMMSource(gmm, 20000,
+                                          jax.random.key(3)).materialize(4096))
+        want_mean = np.asarray(gmm.weights @ gmm.means)
+        np.testing.assert_allclose(x.mean(0), want_mean, atol=0.1)
+        # law of total variance, diagonal case
+        mu, w = np.asarray(gmm.means), np.asarray(gmm.weights)
+        want_var = (w @ np.asarray(gmm.covs)
+                    + w @ (mu - want_mean) ** 2)
+        np.testing.assert_allclose(x.var(0), want_var, rtol=0.1)
+
+    def test_full_covariance(self):
+        cov = jnp.array([[[1.0, 0.8], [0.8, 1.0]]])
+        g = GMM(jnp.array([1.0]), jnp.zeros((1, 2)), cov)
+        x = np.asarray(SyntheticGMMSource(g, 20000,
+                                          jax.random.key(5)).materialize(4096))
+        got = np.cov(x.T)
+        np.testing.assert_allclose(got, np.asarray(cov[0]), atol=0.08)
+
+    def test_rejects_zero_rows(self, gmm):
+        with pytest.raises(ValueError):
+            SyntheticGMMSource(gmm, 0, jax.random.key(0))
+
+
+class TestEngineValidation:
+    def test_sample_weight_rejected_with_source(self, rows):
+        from repro.core.em import e_step_stats, fit_gmm
+        g = GMM(jnp.full((2,), 0.5), jnp.zeros((2, 5)), jnp.ones((2, 5)))
+        s = ArraySource(rows)
+        w = jnp.ones(1000)
+        with pytest.raises(ValueError, match="sample_weight"):
+            e_step_stats(g, s, w)
+        with pytest.raises(ValueError, match="sample_weight"):
+            fit_gmm(jax.random.key(0), s, 2, sample_weight=w)
+
+    def test_zero_chunk_rejected_not_defaulted(self, rows):
+        """chunk_size=0 is a caller bug (integer division gone wrong), not
+        a request for DEFAULT_SOURCE_CHUNK's working set."""
+        from repro.core.em import fit_gmm, resolve_source_chunk
+        with pytest.raises(ValueError, match="positive"):
+            resolve_source_chunk(0)
+        with pytest.raises(ValueError, match="positive"):
+            fit_gmm(jax.random.key(0), ArraySource(rows), 2, chunk_size=0)
+
+    def test_empty_iteration_guard(self):
+        from repro.core.em import streaming_reduce
+
+        class Hollow(DataSource):
+            num_rows = 4
+            dim = 2
+
+            def iter_blocks(self, chunk_size):
+                return iter(())
+
+        with pytest.raises(ValueError, match="no blocks"):
+            streaming_reduce(lambda xb: jnp.sum(xb), Hollow(), 2)

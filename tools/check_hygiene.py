@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Repo-hygiene gate (CI `hygiene` lane; run locally with
+``python tools/check_hygiene.py``).
+
+Fails on committed Python bytecode — ``__pycache__`` directories or
+``.pyc``/``.pyo`` files in the git index. This is a regression class this
+repo has actually shipped (22 ``.pyc`` files rode along in the PR 1→2
+window), so it is enforced rather than trusted to ``.gitignore``, which
+only guards *untracked* files: ``git add -f``, IDE auto-stage, or bytecode
+committed before the ignore rule all slip straight past it.
+
+Pure stdlib and no test collection here — the companion
+``pytest --collect-only`` gate needs the real dependency stack and runs as
+its own CI step (see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+BYTECODE_SUFFIXES = (".pyc", ".pyo")
+
+
+def tracked_files(repo_root: Path) -> list[str]:
+    out = subprocess.run(["git", "ls-files"], cwd=repo_root,
+                         capture_output=True, text=True, check=True)
+    return out.stdout.splitlines()
+
+
+def bytecode_violations(paths: list[str]) -> list[str]:
+    return sorted(
+        p for p in paths
+        if "__pycache__" in Path(p).parts or p.endswith(BYTECODE_SUFFIXES))
+
+
+def main() -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    bad = bytecode_violations(tracked_files(repo_root))
+    if bad:
+        print("committed Python bytecode (delete and add to .gitignore):")
+        for p in bad:
+            print(f"  {p}")
+        return 1
+    print(f"hygiene OK: no bytecode among {len(tracked_files(repo_root))} "
+          f"tracked files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
