@@ -6,12 +6,12 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import load_quick
-from repro.core import fedgengmm, fit_gmm, partition
+from repro.api import FedGenGMM, GMMEstimator
+from repro.core import partition
 
 
 def run(quick: bool = True, seeds=(0,)) -> list[str]:
@@ -23,14 +23,13 @@ def run(quick: bool = True, seeds=(0,)) -> list[str]:
         split = partition(rng, ds.x_train, ds.y_train, ds.n_clients,
                           ds.scheme, 1)
         xj = jnp.asarray(ds.x_train)
-        bench = fit_gmm(jax.random.key(99), xj, ds.k_global)
+        bench = GMMEstimator(ds.k_global, seed=99).fit(xj)
         rows.append(f"ablation_h/vehicle/central,0,"
-                    f"{float(bench.gmm.score(xj)):.4f}")
+                    f"{float(bench.gmm_.score(xj)):.4f}")
         for h in hs:
             t0 = time.time()
-            fr = fedgengmm(jax.random.key(seed), split,
-                           k_clients=ds.k_global, k_global=ds.k_global,
-                           h=h)
+            fr = FedGenGMM(k_clients=ds.k_global, k_global=ds.k_global,
+                           h=h, seed=seed).run(split)
             ll = float(fr.global_gmm.score(xj))
             rows.append(f"ablation_h/vehicle/H={h},"
                         f"{(time.time() - t0) * 1e6:.0f},{ll:.4f}")

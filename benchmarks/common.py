@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dem, fedgengmm, fit_gmm, partition
+from repro.api import DEM, FedGenGMM, FitConfig, GMMEstimator
+from repro.core import partition
+from repro.core.dem import INIT_SCHEME_NAMES
 from repro.core.metrics import (anomaly_scores, auc_pr, auc_pr_for_model,
                                 average_log_likelihood)
 from repro.data import load
@@ -72,6 +74,7 @@ def run_methods(ds, alpha: float, seed: int, *,
                       alpha)
     xj = jnp.asarray(ds.x_train)
     key = jax.random.key(seed)
+    cfg = FitConfig.from_legacy(chunk_size=chunk_size)
     out = {}
 
     def score(gmm):
@@ -80,9 +83,9 @@ def run_methods(ds, alpha: float, seed: int, *,
     local_gmms = None
     if "fedgen" in methods or "local" in methods:
         t0 = time.time()
-        fr = fedgengmm(jax.random.fold_in(key, 0), split,
-                       k_clients=k_clients, k_global=k, h=h,
-                       chunk_size=chunk_size)
+        fr = FedGenGMM(k_clients=k_clients, k_global=k, h=h,
+                       synthetic="resident", config=cfg).run(
+            split, key=jax.random.fold_in(key, 0))
         if "fedgen" in methods:
             out["fedgen"] = {
                 "loglik": score(fr.global_gmm),
@@ -106,8 +109,8 @@ def run_methods(ds, alpha: float, seed: int, *,
         if nm not in methods:
             continue
         t0 = time.time()
-        dr = dem(jax.random.fold_in(key, 10 + init), split, k, init=init,
-                 chunk_size=chunk_size)
+        dr = DEM(k, config=cfg.replace(init=INIT_SCHEME_NAMES[init])).run(
+            split, key=jax.random.fold_in(key, 10 + init))
         out[nm] = {
             "loglik": score(dr.global_gmm),
             "auc_pr": eval_auc(dr.global_gmm, ds, chunk_size),
@@ -117,8 +120,8 @@ def run_methods(ds, alpha: float, seed: int, *,
         }
     if "central" in methods:
         t0 = time.time()
-        res = fit_gmm(jax.random.fold_in(key, 99), xj, k,
-                      chunk_size=chunk_size)
+        res = GMMEstimator(k, config=cfg).fit(
+            xj, key=jax.random.fold_in(key, 99)).result_
         out["central"] = {
             "loglik": score(res.gmm),
             "auc_pr": eval_auc(res.gmm, ds, chunk_size),

@@ -6,7 +6,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import eval_auc, load_quick
-from repro.core import dem, fedgengmm, fit_gmm, partition
+from repro.api import DEM, FedGenGMM, GMMEstimator
+from repro.core import partition
 
 DATASETS_Q = ["vehicle"]
 DATASETS_FULL = ["mnist", "covertype", "rwhar", "vehicle", "smd"]
@@ -27,21 +28,22 @@ def run(quick: bool = True, seeds=(0,)) -> list[str]:
             key = jax.random.key(seed)
             # non-federated benchmark at full K
             t0 = time.time()
-            bench = fit_gmm(jax.random.fold_in(key, 99),
-                            np.asarray(ds.x_train), K_GLOBAL)
+            bench = GMMEstimator(K_GLOBAL).fit(
+                np.asarray(ds.x_train),
+                key=jax.random.fold_in(key, 99))
             rows.append(f"fig5_constrained/{name}/benchK20,"
                         f"{(time.time() - t0) * 1e6:.0f},"
-                        f"{eval_auc(bench.gmm, ds):.4f}")
+                        f"{eval_auc(bench.gmm_, ds):.4f}")
             for kc in kcs:
                 t0 = time.time()
-                fr = fedgengmm(jax.random.fold_in(key, kc), split,
-                               k_clients=kc, k_global=K_GLOBAL, h=50)
+                fr = FedGenGMM(k_clients=kc, k_global=K_GLOBAL, h=50).run(
+                    split, key=jax.random.fold_in(key, kc))
                 rows.append(f"fig5_constrained/{name}/Kc={kc}/fedgen,"
                             f"{(time.time() - t0) * 1e6:.0f},"
                             f"{eval_auc(fr.global_gmm, ds):.4f}")
                 t0 = time.time()
-                dr = dem(jax.random.fold_in(key, 100 + kc), split, kc,
-                         init=3)
+                dr = DEM(kc, init="fed-kmeans").run(
+                    split, key=jax.random.fold_in(key, 100 + kc))
                 rows.append(f"fig5_constrained/{name}/Kc={kc}/dem3,"
                             f"{(time.time() - t0) * 1e6:.0f},"
                             f"{eval_auc(dr.global_gmm, ds):.4f}")

@@ -28,7 +28,9 @@ try:  # package import (benchmarks/run.py)
 except ImportError:  # documented standalone: python benchmarks/kernel_bench.py
     from _timing import time_one as _time
     from _timing import time_pair as _time_pair
-from repro.core.em import bic_streaming, e_step_stats, e_step_stats_chunked
+from repro.api import FitConfig
+from repro.api import bic as api_bic
+from repro.core.em import e_step_stats, e_step_stats_chunked
 from repro.core.gmm import GMM
 from repro.core.kmeans import kmeans
 from repro.kernels import ops, ref
@@ -162,8 +164,8 @@ def _scoring_rows(x, mu, var, lw, n, d, k, iters=10) -> list[str]:
     gmm = GMM(jnp.exp(lw), mu, var)
     mib = lambda rows_resident: rows_resident * k * 4 / 2**20
     bic_full = jax.jit(lambda x: gmm.bic(x))
-    bic_chunk = jax.jit(lambda x: bic_streaming(
-        gmm, x, chunk_size=ENGINE_CHUNK, backend="reference"))
+    bic_cfg = FitConfig(chunk_size=ENGINE_CHUNK, backend="reference")
+    bic_chunk = jax.jit(lambda x: api_bic(gmm, x, config=bic_cfg))
     us_full, us_chunk = _time_pair(lambda: bic_full(x),
                                    lambda: bic_chunk(x), iters=iters)
     return [f"engine/bic_full/N{n}d{d}K{k},{us_full:.0f},{mib(n):.2f}",

@@ -52,8 +52,9 @@ try:  # package import (benchmarks/run.py)
 except ImportError:  # standalone: python benchmarks/streaming_bench.py
     from _timing import time_one as _time
     from _timing import time_pair as _time_pair
-from repro.core.em import (bic_streaming, e_step_stats, init_from_kmeans,
-                           label_stats)
+from repro.api import FitConfig
+from repro.api import bic as api_bic
+from repro.core.em import e_step_stats, init_from_kmeans, label_stats
 from repro.core.gmm import GMM
 from repro.core.kmeans import kmeans
 from repro.data.sources import ArraySource, NpyFileSource, SyntheticGMMSource
@@ -125,7 +126,8 @@ def _stages(x, gmm, assignments, chunk):
     es_full = jax.jit(lambda x: e_step_stats(gmm, x).s1)
     es_chunk = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=chunk).s1)
     bic_full = jax.jit(lambda x: gmm.bic(x))
-    bic_chunk = jax.jit(lambda x: bic_streaming(gmm, x, chunk_size=chunk))
+    bic_cfg = FitConfig(chunk_size=chunk)
+    bic_chunk = jax.jit(lambda x: api_bic(gmm, x, config=bic_cfg))
     return {
         "kmeans_lloyd": (
             lambda: kmeans(key, x, K, max_iter=10, tol=0.0).centers,

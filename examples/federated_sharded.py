@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fit_gmm, partition
+from repro.api import FitConfig, GMMEstimator
+from repro.core import partition
 from repro.core.dem import fed_kmeans_centers
 from repro.distributed import dem_sharded, fedgen_sharded
 
@@ -30,13 +31,16 @@ split = partition(rng, x, y, 16, "dirichlet", 0.3)
 data, mask = jnp.asarray(split.data), jnp.asarray(split.mask)
 xj = jnp.asarray(x)
 
+# the sharded runtime consumes the same FitConfig as the facades
+cfg = FitConfig()
 res = fedgen_sharded(mesh, jax.random.key(0), data, mask, k=4, k_global=4,
-                     h=80)
+                     h=80, config=cfg)
 print(f"FedGenGMM (1 all-gather):   ll={float(res.global_gmm.score(xj)):.4f}")
 
 centers = fed_kmeans_centers(jax.random.key(1), split, 4)
-gmm, rounds = dem_sharded(mesh, jax.random.key(2), data, mask, 4, centers)
+gmm, rounds = dem_sharded(mesh, jax.random.key(2), data, mask, 4, centers,
+                          config=cfg.replace(max_iter=100))
 print(f"DEM ({int(rounds)} psum rounds):       ll={float(gmm.score(xj)):.4f}")
 
-bench = fit_gmm(jax.random.key(3), xj, 4)
-print(f"non-federated benchmark:    ll={float(bench.gmm.score(xj)):.4f}")
+bench = GMMEstimator(4, seed=3).fit(xj)
+print(f"non-federated benchmark:    ll={float(bench.score(xj)):.4f}")

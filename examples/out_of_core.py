@@ -1,9 +1,10 @@
-"""Out-of-core training end to end (DESIGN.md §7).
-
-Fits GMMs on data that is never resident: a memory-mapped ``.npy`` file,
-ragged client shards via ConcatSource, and the full one-shot FedGenGMM
-pipeline where every client streams its own source and the server refit
-replays the merged mixture as a seeded synthetic block stream.
+"""Out-of-core training end to end (DESIGN.md §7) through the public
+estimator API: the same `GMMEstimator` / `FedGenGMM` facades dispatch on
+the input type, so handing them a DataSource (or a list of per-client
+sources) is all it takes to train on data that is never resident — a
+memory-mapped ``.npy`` file, ragged client shards via ConcatSource, and
+the full one-shot FedGenGMM pipeline where the server refit replays the
+merged mixture as a seeded synthetic block stream.
 
 Run: PYTHONPATH=src python examples/out_of_core.py
 """
@@ -11,14 +12,13 @@ import tempfile
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fedgengmm_from_sources, fit_gmm, score_streaming
+from repro.api import FedGenGMM, FitConfig, GMMEstimator, score
 from repro.data import (ArraySource, ConcatSource, NpyFileSource,
                         SyntheticGMMSource)
 
-CHUNK = 8192
+CFG = FitConfig(chunk_size=8192)  # one config, every stage streams
 
 rng = np.random.default_rng(0)
 mus = np.array([[-5, 0, 0, 0], [5, 0, 0, 0], [0, 7, 0, 0]], np.float32)
@@ -26,11 +26,11 @@ comp = rng.integers(0, 3, 60_000)
 x = (mus[comp] + rng.normal(0, 0.7, (60_000, 4))).astype(np.float32)
 
 with tempfile.TemporaryDirectory() as tmp:
-    # 1. mmap'd file: only one (CHUNK, d) block is in memory at a time.
+    # 1. mmap'd file: only one (chunk_size, d) block is in memory at a time.
     path = Path(tmp) / "rows.npy"
     np.save(path, x)
     src = NpyFileSource(path)
-    res = fit_gmm(jax.random.key(0), src, k=3, chunk_size=CHUNK)
+    res = GMMEstimator(3, config=CFG).fit(src).result_
     print(f"mmap fit:      avg loglik {float(res.log_likelihood):+.3f} "
           f"in {int(res.n_iter)} EM iters over {src.num_rows} rows")
 
@@ -38,17 +38,17 @@ with tempfile.TemporaryDirectory() as tmp:
     #    boundaries, so this fit is bit-identical to fitting the union.
     shards = [ArraySource(x[:11_000]), ArraySource(x[11_000:37_500]),
               ArraySource(x[37_500:])]
-    res_cat = fit_gmm(jax.random.key(0), ConcatSource(shards), k=3,
-                      chunk_size=CHUNK)
+    res_cat = GMMEstimator(3, config=CFG).fit(ConcatSource(shards)).result_
     same = np.array_equal(np.asarray(res_cat.gmm.means),
                           np.asarray(res.gmm.means))
     print(f"concat fit:    bit-identical to mmap fit: {same}")
 
-    # 3. one-shot federated pipeline, everything streamed: local fits from
-    #    per-client sources, server refit from a synthetic replay source.
-    fr = fedgengmm_from_sources(jax.random.key(1), shards, k_clients=3,
-                                k_global=3, h=200, chunk_size=CHUNK)
-    ll = float(score_streaming(fr.global_gmm, src, chunk_size=CHUNK))
+    # 3. one-shot federated pipeline, everything streamed: run() sees a
+    #    list of sources, so local fits stream per client and the server
+    #    refit replays a synthetic source (synthetic="auto" -> "source").
+    fr = FedGenGMM(k_clients=3, k_global=3, h=200, seed=1,
+                   config=CFG).run(shards)
+    ll = float(score(fr.global_gmm, src, config=CFG))
     print(f"fedgen (src):  global avg loglik {ll:+.3f}; replay set "
           f"|S|={fr.synthetic.num_rows} rows, never materialized "
           f"({type(fr.synthetic).__name__})")
@@ -56,6 +56,7 @@ with tempfile.TemporaryDirectory() as tmp:
     # 4. the replay trick standalone: a 10M-row virtual dataset from the
     #    fitted model — regenerated block-by-block from one seeded key.
     replay = SyntheticGMMSource(fr.global_gmm, 10_000_000, jax.random.key(2))
-    ll10m = float(score_streaming(fr.global_gmm, replay, chunk_size=65536))
+    ll10m = float(score(fr.global_gmm, replay,
+                        config=FitConfig(chunk_size=65536)))
     print(f"replay score:  avg loglik {ll10m:+.3f} over {replay.num_rows:,} "
           f"virtual rows, O(chunk) memory")

@@ -1,12 +1,13 @@
-"""Quickstart: one-shot federated GMM learning (FedGenGMM) in ~30 lines.
+"""Quickstart: one-shot federated GMM learning (FedGenGMM) in ~30 lines,
+through the public estimator API (`repro.api`, DESIGN.md §8).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fedgengmm, fit_gmm, partition
+from repro.api import FedGenGMM, GMMEstimator
+from repro.core import partition
 
 # 1. a planted 4-component mixture, 3000 points
 rng = np.random.default_rng(0)
@@ -19,15 +20,16 @@ split = partition(rng, x, y, n_clients=10, scheme="dirichlet", alpha=0.2)
 print("client sizes:", split.sizes)
 
 # 3. the one-shot federated pipeline: local EM -> 1 round -> merge ->
-#    synthetic sample -> global EM
-result = fedgengmm(jax.random.key(0), split, k_clients=4, k_global=4, h=100)
+#    synthetic sample -> global EM. The same runner accepts a list of
+#    per-client DataSources for the out-of-core regime (out_of_core.py).
+result = FedGenGMM(k_clients=4, k_global=4, h=100, seed=0).run(split)
 print(f"communication rounds: {result.comm.rounds}")
 print(f"uplink floats:        {result.comm.uplink_floats} "
       f"(raw data would be {x.size})")
 
 # 4. compare against the non-federated benchmark
-bench = fit_gmm(jax.random.key(1), jnp.asarray(x), 4)
+bench = GMMEstimator(4, seed=1).fit(x)
 print(f"federated  avg log-likelihood: "
       f"{float(result.global_gmm.score(jnp.asarray(x))):.4f}")
 print(f"central    avg log-likelihood: "
-      f"{float(bench.gmm.score(jnp.asarray(x))):.4f}")
+      f"{float(bench.score(x)):.4f}")

@@ -1,8 +1,11 @@
 """repro — FedGenGMM (one-shot federated Gaussian Mixture Models) in JAX.
 
 Subpackages:
+  api          THE public surface: FitConfig + estimator facades
+               (GMMEstimator/KMeansEstimator/FedGenGMM/DEM) dispatching
+               on input type (array | DataSource | ClientSplit | sources)
   core         the paper's contribution: GMM/EM/FedGenGMM/DEM (+ DP,
-               continual, split-merge extensions)
+               continual, split-merge extensions) — internal entry points
   data         dataset analogues, PCA, scaling, token pipeline
   kernels      Pallas TPU kernels for the EM hot path
   models       multi-architecture transformer substrate

@@ -1,0 +1,34 @@
+"""repro.api — THE public estimator surface (DESIGN.md §8).
+
+One frozen, validated :class:`FitConfig` carries every training knob
+(backend, chunk_size, covariance_type, reg_covar, tol, max_iter, init
+strategy, seed policy); four facades dispatch on the input type (resident
+array · DataSource · ClientSplit · list of sources), so the parallel
+``*_streaming`` / ``*_source`` / ``*_from_sources`` entry-point families
+are internal details:
+
+    from repro.api import FitConfig, GMMEstimator, FedGenGMM
+
+    est = GMMEstimator(k=8, chunk_size=65536).fit(NpyFileSource("x.npy"))
+    fed = FedGenGMM(k_clients=4, k_global=4).run(split)
+
+``score`` / ``log_prob`` / ``bic`` are the matching model-level scorers.
+Everything below this package (``repro.core.*`` entry points included) is
+internal; ``tests/test_api_surface.py`` snapshots this surface so drift
+fails CI.
+"""
+from repro.core.config import DEFAULT_SOURCE_CHUNK, FitConfig
+from repro.api.estimators import (DEM, FedGenGMM, GMMEstimator,
+                                  KMeansEstimator, bic, log_prob, score)
+
+__all__ = [
+    "FitConfig",
+    "GMMEstimator",
+    "KMeansEstimator",
+    "FedGenGMM",
+    "DEM",
+    "score",
+    "log_prob",
+    "bic",
+    "DEFAULT_SOURCE_CHUNK",
+]

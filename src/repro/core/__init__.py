@@ -1,9 +1,15 @@
 """FedGenGMM core: GMM primitives, EM, federated one-shot aggregation and
-distributed-EM baselines."""
+distributed-EM baselines.
+
+The supported public surface is ``repro.api`` (FitConfig + estimator
+facades); the entry points exported here are the internal/legacy keyword
+spellings the facade runs on."""
+from repro.core.config import FitConfig
 from repro.core.gmm import GMM, merge_gmms, merge_gmms_stacked
 from repro.core.em import (DEFAULT_SOURCE_CHUNK, EMResult, SufficientStats,
                            bic_streaming, e_step_stats, e_step_stats_chunked,
-                           em_step, fit_gmm, fit_gmm_bic, fit_gmm_streaming,
+                           em_step, fit_gmm, fit_gmm_bic, fit_gmm_bic_cfg,
+                           fit_gmm_cfg, fit_gmm_streaming,
                            init_from_kmeans, init_from_means, label_stats,
                            log_prob_chunked, m_step, reduce_rows,
                            resolve_backend, resolve_estep_backend,
@@ -11,37 +17,43 @@ from repro.core.em import (DEFAULT_SOURCE_CHUNK, EMResult, SufficientStats,
                            streaming_map_reduce, streaming_reduce)
 from repro.core.kmeans import (KMeansResult, federated_kmeans,
                                federated_kmeans_from_sources, kmeans,
-                               kmeans_multi, kmeans_multi_source,
+                               kmeans_fit_cfg, kmeans_multi,
+                               kmeans_multi_source,
                                kmeans_plusplus_streaming, kmeans_source)
 from repro.core.partition import (ClientSplit, partition, partition_dirichlet,
                                   partition_quantity)
-from repro.core.fedgen import (CommStats, FedGenResult, aggregate, fedgengmm,
+from repro.core.fedgen import (CommStats, FedGenResult, aggregate,
+                               aggregate_cfg, fedgengmm, fedgengmm_cfg,
                                fedgengmm_from_sources, payload_floats,
                                train_locals, train_locals_bic,
-                               train_locals_from_sources)
-from repro.core.dem import DEMResult, dem, dem_from_sources
+                               train_locals_from_sources,
+                               train_locals_sources_cfg)
+from repro.core.dem import DEMResult, dem, dem_cfg, dem_from_sources
 from repro.core.privacy import DPConfig, privatize_clients, privatize_gmm
 from repro.core.continual import ContinualState, continual_round, init_state
 from repro.core.splitmerge import split_merge_fit
 from repro.core import metrics
 
 __all__ = [
+    "FitConfig",
     "GMM", "merge_gmms", "merge_gmms_stacked",
     "DEFAULT_SOURCE_CHUNK",
     "EMResult", "SufficientStats", "e_step_stats", "e_step_stats_chunked",
-    "em_step", "fit_gmm", "fit_gmm_bic", "fit_gmm_streaming",
+    "em_step", "fit_gmm", "fit_gmm_bic", "fit_gmm_bic_cfg", "fit_gmm_cfg",
+    "fit_gmm_streaming",
     "init_from_kmeans", "init_from_means", "label_stats", "m_step",
     "bic_streaming", "score_streaming", "log_prob_chunked",
     "reduce_rows", "streaming_reduce", "streaming_map_reduce",
     "resolve_backend", "resolve_estep_backend", "resolve_source_chunk",
     "KMeansResult", "federated_kmeans", "federated_kmeans_from_sources",
-    "kmeans", "kmeans_multi", "kmeans_multi_source",
+    "kmeans", "kmeans_fit_cfg", "kmeans_multi", "kmeans_multi_source",
     "kmeans_plusplus_streaming", "kmeans_source",
     "ClientSplit", "partition", "partition_dirichlet", "partition_quantity",
-    "CommStats", "FedGenResult", "aggregate", "fedgengmm",
-    "fedgengmm_from_sources", "payload_floats",
+    "CommStats", "FedGenResult", "aggregate", "aggregate_cfg", "fedgengmm",
+    "fedgengmm_cfg", "fedgengmm_from_sources", "payload_floats",
     "train_locals", "train_locals_bic", "train_locals_from_sources",
-    "DEMResult", "dem", "dem_from_sources", "metrics",
+    "train_locals_sources_cfg",
+    "DEMResult", "dem", "dem_cfg", "dem_from_sources", "metrics",
     "DPConfig", "privatize_clients", "privatize_gmm",
     "ContinualState", "continual_round", "init_state", "split_merge_fit",
 ]

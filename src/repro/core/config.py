@@ -1,0 +1,253 @@
+"""`FitConfig` — the one training configuration every estimator consumes
+(DESIGN.md §8).
+
+PRs 1–3 grew three parallel entry-point families (`fit_gmm` /
+`fit_gmm_streaming` / source paths, resident vs out-of-core k-means,
+`*_from_sources` federated twins), each re-threading the same
+backend / chunk_size / covariance / tolerance knobs by hand.  This module
+collapses that plumbing into a single frozen dataclass, validated once at
+construction, plus the backend/chunk resolvers the engine shares.  The
+public facade (`repro.api`) builds a `FitConfig` and hands it to the
+cfg-core functions (`fit_gmm_cfg`, `kmeans_fit_cfg`, `fedgengmm_cfg`,
+`dem_cfg`); the legacy keyword entry points construct the same config
+internally, so both surfaces run literally the same code.
+
+This module sits below the whole core (it imports only `jax` and
+`repro.data.sources`, which itself imports nothing from `repro`), so
+`em.py`, `kmeans.py`, `fedgen.py`, `dem.py` and `distributed/fed.py` can
+all import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+
+from repro.data.sources import DataSource
+
+ENGINE_BACKENDS = ("auto", "reference", "fused")
+COVARIANCE_TYPES = ("diag", "full")
+INIT_STRATEGIES = ("auto", "kmeans", "separated", "pilot", "fed-kmeans")
+
+# Default block size for DataSource paths when the config says
+# chunk_size="auto" (a source has no full batch to fall back to, so it
+# streams at this granularity instead).
+DEFAULT_SOURCE_CHUNK = 65536
+
+
+def resolve_backend(backend: str, fused_supported: bool = True) -> str:
+    """Resolve the user-facing engine knob to a concrete implementation.
+
+    ``auto`` picks the fused Pallas kernel when it can win (the op has a
+    kernel and we are on a TPU backend); interpret mode on CPU is
+    bit-compatible but much slower than XLA, so ``auto`` keeps the
+    reference path there. Ops whose kernel does not support the requested
+    configuration (``fused_supported=False``, e.g. full covariance) always
+    fall back to reference semantics.
+    """
+    if backend not in ENGINE_BACKENDS:
+        raise ValueError(
+            f"engine backend must be one of {ENGINE_BACKENDS}, "
+            f"got {backend!r}")
+    if not fused_supported:
+        return "reference"
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "reference"
+    return backend
+
+
+def resolve_estep_backend(estep_backend: str, is_diagonal: bool) -> str:
+    """E-step flavour of :func:`resolve_backend`: the fused kernel only
+    implements diagonal covariance (DESIGN.md §6)."""
+    try:
+        return resolve_backend(estep_backend, fused_supported=is_diagonal)
+    except ValueError:
+        raise ValueError(
+            f"estep_backend must be one of {ENGINE_BACKENDS}, "
+            f"got {estep_backend!r}") from None
+
+
+def resolve_source_chunk(chunk_size: Optional[int]) -> int:
+    """The one ``chunk_size`` rule for source paths: ``None`` means
+    :data:`DEFAULT_SOURCE_CHUNK`; explicit values are validated —
+    ``chunk_size=0`` is a caller bug (e.g. integer division gone wrong),
+    not a request for the default working set."""
+    if chunk_size is None:
+        return DEFAULT_SOURCE_CHUNK
+    chunk_size = int(chunk_size)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    return chunk_size
+
+
+def require_array_weights(sample_weight, what: str) -> None:
+    """THE sample-weight rule, stated once: weights exist to mask padded
+    fixed-shape client arrays (weight 0 = padding) and are therefore
+    array-path-only by design; a :class:`DataSource` block stream is never
+    padded, so every source row has weight 1."""
+    if sample_weight is not None:
+        raise ValueError(
+            f"{what}: sample_weight is only supported on resident-array "
+            f"inputs. Weights exist to mask padded fixed-shape client "
+            f"arrays; DataSource block streams are never padded, so every "
+            f"source row has weight 1 by design. Represent ragged client "
+            f"shards directly with repro.data.sources.ConcatSource and "
+            f"drop the weights.")
+
+
+def is_source(data) -> bool:
+    """True if ``data`` is a single out-of-core :class:`DataSource`."""
+    return isinstance(data, DataSource)
+
+
+def is_source_list(data) -> bool:
+    """True if ``data`` is a non-empty list/tuple of per-client
+    :class:`DataSource` objects (the federated out-of-core input shape)."""
+    return (isinstance(data, (list, tuple)) and len(data) > 0
+            and all(isinstance(s, DataSource) for s in data))
+
+
+_CHUNK_NONE_ERROR = (
+    "chunk_size=None is ambiguous and no longer accepted: the legacy entry "
+    "points made it mean 'full batch' for resident arrays but "
+    f"{DEFAULT_SOURCE_CHUNK}-row blocks for DataSources, silently diverging "
+    "by input type. Pass chunk_size='auto' to keep exactly those defaults "
+    "explicitly, or an integer block size to stream both paths in "
+    "O(chunk_size*K) memory.")
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Frozen, validated-at-construction training configuration (§8).
+
+    backend : engine implementation knob ("auto" | "reference" | "fused");
+        the E-step, k-means assignment and scoring paths all resolve it via
+        :func:`resolve_backend` ("auto" = fused Pallas kernel on TPU,
+        reference elsewhere; unsupported configs fall back to reference).
+    chunk_size : "auto" or a positive int. "auto" keeps the historical
+        defaults — full batch for resident arrays, DEFAULT_SOURCE_CHUNK
+        blocks for DataSources; an int streams both input types in
+        O(chunk_size*K) memory. ``None`` is rejected with an explanation
+        (it used to silently mean different things per input type).
+    covariance_type : "diag" | "full", threaded through init, EM and BIC.
+    reg_covar : covariance floor added at every M-step.
+    tol : convergence threshold on the avg-loglik delta (EM/DEM) or the
+        squared center shift (k-means).
+    max_iter : EM iteration / DEM round / Lloyd sweep budget.
+    init : init strategy. "auto" resolves per estimator (k-means init for
+        GMM fits; DEM picks fed-kmeans for resident splits and separated
+        centers for source clients). DEM also accepts the explicit
+        schemes "separated" | "pilot" | "fed-kmeans" (paper inits 1/2/3).
+    seed : seed policy — estimators derive their jax PRNG key as
+        ``jax.random.key(seed)`` unless an explicit key is passed to
+        ``fit``/``run``.
+
+    Instances are hashable (frozen dataclass), so a config can ride
+    through ``functools.partial``/static jit arguments unchanged.
+    """
+
+    backend: str = "auto"
+    chunk_size: Union[int, str] = "auto"
+    covariance_type: str = "diag"
+    reg_covar: float = 1e-6
+    tol: float = 1e-3
+    max_iter: int = 200
+    init: str = "auto"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.backend not in ENGINE_BACKENDS:
+            raise ValueError(
+                f"engine backend must be one of {ENGINE_BACKENDS}, got "
+                f"{self.backend!r} (legacy knob name: estep_backend)")
+        cs = self.chunk_size
+        if cs is None:
+            raise ValueError(_CHUNK_NONE_ERROR)
+        if isinstance(cs, str):
+            if cs != "auto":
+                raise ValueError(
+                    f"chunk_size must be 'auto' or a positive int, "
+                    f"got {cs!r}")
+        else:
+            # integral values only (int, np.int64, 8192.0 all fine) —
+            # silently truncating 8192.5 would mask exactly the
+            # division-gone-wrong caller bugs this validation exists for
+            if isinstance(cs, bool) or int(cs) != cs:
+                raise ValueError(
+                    f"chunk_size must be 'auto' or a positive int, "
+                    f"got {cs!r}")
+            cs = int(cs)
+            if cs <= 0:
+                raise ValueError(
+                    f"chunk_size must be positive, got {cs}")
+            object.__setattr__(self, "chunk_size", cs)
+        if self.covariance_type not in COVARIANCE_TYPES:
+            raise ValueError(
+                f"covariance_type must be one of {COVARIANCE_TYPES}, "
+                f"got {self.covariance_type!r}")
+        if not float(self.reg_covar) >= 0.0:
+            raise ValueError(f"reg_covar must be >= 0, got {self.reg_covar}")
+        if not float(self.tol) >= 0.0:
+            raise ValueError(f"tol must be >= 0, got {self.tol}")
+        object.__setattr__(self, "reg_covar", float(self.reg_covar))
+        object.__setattr__(self, "tol", float(self.tol))
+        # same integral strictness as chunk_size: truncating 2.5
+        # iterations would mask division-gone-wrong caller bugs
+        mi = self.max_iter
+        if isinstance(mi, bool) or int(mi) != mi:
+            raise ValueError(f"max_iter must be an integer, got {mi!r}")
+        if int(mi) < 1:
+            raise ValueError(f"max_iter must be >= 1, got {mi}")
+        object.__setattr__(self, "max_iter", int(mi))
+        if self.init not in INIT_STRATEGIES:
+            raise ValueError(
+                f"init must be one of {INIT_STRATEGIES}, got {self.init!r}")
+        sd = self.seed
+        if isinstance(sd, bool) or int(sd) != sd:
+            raise ValueError(f"seed must be an integer, got {sd!r}")
+        object.__setattr__(self, "seed", int(sd))
+
+    # -- the one resolve step (replaces five copies of knob threading) ----
+
+    @classmethod
+    def from_legacy(cls, *, backend: str = "auto",
+                    chunk_size: Optional[int] = None,
+                    covariance_type: str = "diag", reg_covar: float = 1e-6,
+                    tol: float = 1e-3, max_iter: int = 200,
+                    init: str = "auto", seed: int = 0) -> "FitConfig":
+        """Build a config from the legacy keyword surface, where
+        ``chunk_size=None`` meant what ``"auto"`` now spells out."""
+        return cls(backend=backend,
+                   chunk_size="auto" if chunk_size is None else chunk_size,
+                   covariance_type=covariance_type, reg_covar=reg_covar,
+                   tol=float(tol), max_iter=max_iter, init=init, seed=seed)
+
+    def resolve_chunk(self, source: bool) -> Optional[int]:
+        """Concrete engine chunk for one input type: ``None`` (full batch)
+        on resident arrays under "auto", :data:`DEFAULT_SOURCE_CHUNK` on
+        sources; explicit ints pass through unchanged."""
+        if self.chunk_size == "auto":
+            return DEFAULT_SOURCE_CHUNK if source else None
+        return self.chunk_size
+
+    def resolved_backend(self, fused_supported: bool = True) -> str:
+        return resolve_backend(self.backend, fused_supported)
+
+    def resolved_estep(self, is_diagonal: Optional[bool] = None) -> str:
+        if is_diagonal is None:
+            is_diagonal = self.is_diagonal
+        return resolve_estep_backend(self.backend, is_diagonal)
+
+    @property
+    def is_diagonal(self) -> bool:
+        return self.covariance_type == "diag"
+
+    def key(self) -> jax.Array:
+        """The seed policy: the PRNG key estimators use when the caller
+        does not pass one explicitly."""
+        return jax.random.key(self.seed)
+
+    def replace(self, **changes) -> "FitConfig":
+        """A new validated config with the given fields replaced."""
+        return dataclasses.replace(self, **changes)

@@ -4,24 +4,34 @@ Every client runs the E-step locally and ships sufficient statistics; the
 server aggregates (a psum in the sharded runtime), runs the M-step, and
 broadcasts the new parameters. One EM iteration = one communication round.
 
-Three initializations of the global component centers are reproduced:
-  init 1 — maximally separated centers in the (normalized) feature range,
-  init 2 — pilot GMM on a small (100-point) subset uploaded to the server,
-  init 3 — one-shot federated k-means (Dennis et al. '21).
+Three initializations of the global component centers are reproduced,
+named in :class:`repro.core.config.FitConfig` init-strategy terms:
+  "separated"  (init 1) — maximally separated centers in the (normalized)
+               feature range,
+  "pilot"      (init 2) — pilot GMM on a small (100-point) subset uploaded
+               to the server,
+  "fed-kmeans" (init 3) — one-shot federated k-means (Dennis et al. '21).
+
+Clients arrive either as a padded :class:`ClientSplit` or as a list of
+per-client :class:`DataSource` streams; :func:`dem_cfg` dispatches on the
+input type with one validated :class:`FitConfig` and is what
+``repro.api.DEM`` runs.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import FitConfig, is_source_list
 from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
                            host_em_loop, init_from_means, m_step)
 from repro.core.fedgen import CommStats, payload_floats
 from repro.core.gmm import GMM
-from repro.core.kmeans import federated_kmeans, federated_kmeans_from_sources
+from repro.core.kmeans import federated_kmeans
 from repro.core.partition import ClientSplit
 from repro.data.sources import ConcatSource, DataSource
 
@@ -32,6 +42,42 @@ class DEMResult(NamedTuple):
     n_rounds: jax.Array
     converged: jax.Array
     comm: CommStats
+
+
+# DEM init schemes: paper numbering <-> FitConfig init-strategy names.
+INIT_SCHEME_NAMES = {1: "separated", 2: "pilot", 3: "fed-kmeans"}
+INIT_SCHEMES = {v: k for k, v in INIT_SCHEME_NAMES.items()}
+
+
+def _legacy_init_name(init) -> str:
+    """The one legacy-knob rule: paper scheme numbers (1/2/3) and
+    FitConfig strategy names are both accepted, anything else is the
+    historical error."""
+    name = INIT_SCHEME_NAMES.get(init, init)
+    if name not in INIT_SCHEMES:
+        raise ValueError(f"unknown DEM init scheme {init}")
+    return name
+
+
+def _resolve_init(init: str, sources: bool) -> str:
+    """``auto`` keeps the historical per-input defaults: fed-kmeans
+    (init 3) for resident splits, separated centers (init 1) for source
+    clients (the pilot subset would upload raw rows)."""
+    if init == "auto":
+        return "separated" if sources else "fed-kmeans"
+    if init == "kmeans":
+        raise ValueError(
+            "init='kmeans' is the single-model GMM init; DEM init "
+            "strategies are 'separated' | 'pilot' | 'fed-kmeans' (paper "
+            "schemes 1/2/3) or 'auto'")
+    return init
+
+
+def _stats_floats(k: int, d: int, diagonal: bool) -> int:
+    """Per-round uplink floats of one client's SufficientStats:
+    s0 (k) + s1 (k·d) + s2 (k·d diag / k·d² full) + loglik + wsum."""
+    cov = k * d if diagonal else k * d * d
+    return k + k * d + cov + 2
 
 
 # ----------------------------------------------------------------------
@@ -123,95 +169,134 @@ def _dem_loop(gmm0: GMM, data: jax.Array, mask: jax.Array, tol: jax.Array,
     return gmm, ll, rounds, converged
 
 
-def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,
-        max_rounds: int = 200, tol: float = 1e-3,
-        reg_covar: float = 1e-6, estep_backend: str = "auto",
-        chunk_size: int | None = None) -> DEMResult:
-    """Run DEM with the requested initialization scheme (1, 2 or 3).
-
-    ``estep_backend``/``chunk_size`` select the per-client E-step engine
-    (DESIGN.md §6), matching ``dem_sharded`` so baseline comparisons run
-    the same engine as FedGenGMM.
-    """
+def _dem_split_cfg(key: jax.Array, split: ClientSplit, config: FitConfig,
+                   k: int, init: str) -> DEMResult:
+    """Resident-array DEM round loop (jitted while_loop, tree-sum
+    aggregation)."""
     data = jnp.asarray(split.data)
     mask = jnp.asarray(split.mask)
     d = data.shape[-1]
+    cs = config.resolve_chunk(source=False)
     k_init, _ = jax.random.split(key)
-    if init == 1:
+    if init == "separated":
         centers = max_separated_centers(k_init, k, d)
-    elif init == 2:
+    elif init == "pilot":
         centers = pilot_subset_centers(k_init, split, k)
-    elif init == 3:
-        centers = fed_kmeans_centers(k_init, split, k, chunk_size=chunk_size)
-    else:
-        raise ValueError(f"unknown DEM init scheme {init}")
+    else:  # "fed-kmeans" (validated upstream)
+        centers = fed_kmeans_centers(k_init, split, k, chunk_size=cs)
 
     flat = data.reshape(-1, d)
     flat_w = mask.reshape(-1)
-    gmm0 = init_from_means(centers, flat, flat_w, reg_covar=reg_covar)
+    gmm0 = init_from_means(centers, flat, flat_w,
+                           covariance_type=config.covariance_type,
+                           reg_covar=config.reg_covar)
     gmm, ll, rounds, converged = _dem_loop(
-        gmm0, data, mask, jnp.asarray(tol, data.dtype), reg_covar, max_rounds,
-        estep_backend, chunk_size)
+        gmm0, data, mask, jnp.asarray(config.tol, data.dtype),
+        config.reg_covar, config.max_iter, config.backend, cs)
 
     c = data.shape[0]
-    stats_floats = k + 2 * k * d + 2  # s0, s1, s2 (diag), loglik, wsum
     n_rounds = int(rounds)
     comm = CommStats(
         rounds=n_rounds,
-        uplink_floats=n_rounds * c * stats_floats,
+        uplink_floats=n_rounds * c * _stats_floats(k, d, config.is_diagonal),
         downlink_floats=n_rounds * c * payload_floats(gmm))
     return DEMResult(gmm, ll, rounds, converged, comm)
+
+
+def _dem_sources_cfg(key: jax.Array, sources: Sequence[DataSource],
+                     config: FitConfig, k: int, init: str) -> DEMResult:
+    """DEM with per-client :class:`DataSource` data (DESIGN.md §7).
+
+    Each round, every client streams its own E-step through the engine and
+    ships only ``SufficientStats`` — exactly the resident payload — so the
+    communication pattern is unchanged while no client (nor the server)
+    ever holds O(N) rows. Ragged client sizes need no padding.
+    """
+    d = sources[0].dim
+    cs = config.resolve_chunk(source=True)
+    k_init, _ = jax.random.split(key)
+    if init == "separated":
+        centers = max_separated_centers(k_init, k, d)
+    elif init == "fed-kmeans":
+        centers = federated_kmeans(k_init, list(sources), k, chunk_size=cs)
+    else:  # "pilot" (validated upstream)
+        raise ValueError(
+            "DEM init 'pilot' uploads raw rows and needs resident client "
+            "data; use a ClientSplit for it")
+
+    union = ConcatSource(sources)
+    gmm0 = init_from_means(centers, union,
+                           covariance_type=config.covariance_type,
+                           reg_covar=config.reg_covar, chunk_size=cs)
+
+    def step(gmm: GMM):
+        """One DEM round: per-client streamed stats -> sum -> M-step."""
+        per = [e_step_stats(gmm, src, None, config.backend, cs)
+               for src in sources]
+        stats: SufficientStats = jax.tree.map(lambda *s: sum(s), *per)
+        avg_ll = float(stats.loglik / jnp.maximum(stats.wsum, 1e-12))
+        return m_step(stats, config.reg_covar), avg_ll
+
+    gmm, ll, rounds, converged = host_em_loop(step, gmm0, config.tol,
+                                              config.max_iter)
+
+    c = len(sources)
+    n_rounds = int(rounds)
+    comm = CommStats(
+        rounds=n_rounds,
+        uplink_floats=n_rounds * c * _stats_floats(k, d, config.is_diagonal),
+        downlink_floats=n_rounds * c * payload_floats(gmm))
+    return DEMResult(gmm, ll, rounds, converged, comm)
+
+
+def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int) -> DEMResult:
+    """Run DEM — the cfg-core behind ``repro.api.DEM``, dispatching on the
+    client input type (:class:`ClientSplit` vs list of
+    :class:`DataSource`). The init strategy comes from ``config.init``
+    ("auto" resolves to fed-kmeans for splits, separated centers for
+    sources; "pilot" requires resident data — it uploads raw rows)."""
+    sources = is_source_list(clients)
+    init = _resolve_init(config.init, sources)
+    if sources:
+        return _dem_sources_cfg(key, clients, config, k, init)
+    if isinstance(clients, ClientSplit):
+        return _dem_split_cfg(key, clients, config, k, init)
+    raise TypeError(
+        f"dem clients must be a ClientSplit or a list of DataSources, "
+        f"got {type(clients).__name__}")
+
+
+def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,
+        max_rounds: int = 200, tol: float = 1e-3,
+        reg_covar: float = 1e-6, estep_backend: str = "auto",
+        chunk_size: int | None = None,
+        covariance_type: str = "diag") -> DEMResult:
+    """Legacy keyword surface of :func:`dem_cfg` (internal; prefer
+    ``repro.api.DEM``). ``init`` takes the paper's scheme numbers 1/2/3
+    (or their FitConfig names)."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_rounds, init=_legacy_init_name(init))
+    return dem_cfg(key, split, cfg, k)
 
 
 def dem_from_sources(key: jax.Array, sources: Sequence[DataSource], k: int,
                      init: int = 1, max_rounds: int = 200, tol: float = 1e-3,
                      reg_covar: float = 1e-6, estep_backend: str = "auto",
-                     chunk_size: int | None = None) -> DEMResult:
-    """DEM with per-client :class:`DataSource` data (DESIGN.md §7).
-
-    Each round, every client streams its own E-step through the engine and
-    ships only ``SufficientStats`` — exactly the payload of :func:`dem` —
-    so the communication pattern is unchanged while no client (nor the
-    server) ever holds O(N) rows. Ragged client sizes need no padding.
-
-    Supports init 1 (maximally separated centers; needs only ``d``) and
-    init 3 (one-shot federated k-means, itself streamed per client).
-    Init 2 uploads a raw pilot subset and therefore requires resident
-    client arrays — use :func:`dem` for it.
-    """
-    d = sources[0].dim
-    k_init, _ = jax.random.split(key)
-    if init == 1:
-        centers = max_separated_centers(k_init, k, d)
-    elif init == 3:
-        centers = federated_kmeans_from_sources(k_init, sources, k,
-                                                chunk_size=chunk_size)
-    elif init == 2:
-        raise ValueError(
-            "DEM init 2 (pilot subset) uploads raw rows and needs resident "
-            "client data; use dem() with a ClientSplit")
-    else:
-        raise ValueError(f"unknown DEM init scheme {init}")
-
-    union = ConcatSource(sources)
-    gmm0 = init_from_means(centers, union, reg_covar=reg_covar,
-                           chunk_size=chunk_size)
-
-    def step(gmm: GMM):
-        """One DEM round: per-client streamed stats -> sum -> M-step."""
-        per = [e_step_stats(gmm, src, None, estep_backend, chunk_size)
-               for src in sources]
-        stats: SufficientStats = jax.tree.map(lambda *s: sum(s), *per)
-        avg_ll = float(stats.loglik / jnp.maximum(stats.wsum, 1e-12))
-        return m_step(stats, reg_covar), avg_ll
-
-    gmm, ll, rounds, converged = host_em_loop(step, gmm0, tol, max_rounds)
-
-    c = len(sources)
-    n_rounds = int(rounds)
-    stats_floats = k + 2 * k * d + 2  # s0, s1, s2 (diag), loglik, wsum
-    comm = CommStats(
-        rounds=n_rounds,
-        uplink_floats=n_rounds * c * stats_floats,
-        downlink_floats=n_rounds * c * payload_floats(gmm))
-    return DEMResult(gmm, ll, rounds, converged, comm)
+                     chunk_size: int | None = None,
+                     covariance_type: str = "diag") -> DEMResult:
+    """Deprecated: ``repro.api.DEM(k).run(sources)`` dispatches on the
+    input type, so the separate ``_from_sources`` spelling is obsolete.
+    This shim forwards to the facade (bit-identical result) and will be
+    removed."""
+    warnings.warn(
+        "dem_from_sources is deprecated; use repro.api.DEM(k).run(sources) "
+        "— same engine, same bits",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import DEM  # facade sits above core; lazy
+    runner = DEM(k, config=FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_rounds, init=_legacy_init_name(init)))
+    return runner.run(list(sources), key=key)

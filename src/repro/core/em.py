@@ -28,12 +28,17 @@ statistic).
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import (DEFAULT_SOURCE_CHUNK, ENGINE_BACKENDS,
+                               FitConfig, require_array_weights,
+                               resolve_backend, resolve_estep_backend,
+                               resolve_source_chunk)
 from repro.core.gmm import GMM
 from repro.data.sources import DataSource
 
@@ -64,70 +69,13 @@ class SufficientStats(NamedTuple):
 # ----------------------------------------------------------------------
 # Streaming-statistics engine (DESIGN.md §6)
 # ----------------------------------------------------------------------
+# The backend/chunk resolvers and the FitConfig they fold into live in
+# ``repro.core.config`` (below this module); re-exported here because this
+# module has been their historical public home since PR 1.
 
-ENGINE_BACKENDS = ("auto", "reference", "fused")
 ESTEP_BACKENDS = ENGINE_BACKENDS  # historical alias (PR 1 public name)
 
-# Default block size for DataSource paths when the caller passes
-# chunk_size=None (which on the resident-array paths means "full batch" —
-# a source has no full batch, so it streams at this granularity instead).
-DEFAULT_SOURCE_CHUNK = 65536
-
-
-def resolve_source_chunk(chunk_size: Optional[int]) -> int:
-    """The one ``chunk_size`` rule for source paths: ``None`` means
-    :data:`DEFAULT_SOURCE_CHUNK`; explicit values are validated —
-    ``chunk_size=0`` is a caller bug (e.g. integer division gone wrong),
-    not a request for the default working set."""
-    if chunk_size is None:
-        return DEFAULT_SOURCE_CHUNK
-    chunk_size = int(chunk_size)
-    if chunk_size <= 0:
-        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-    return chunk_size
-
-
-def _require_no_weight(sample_weight, what: str) -> None:
-    """Sources carry no sample weights: weights exist to pad fixed-shape
-    federated arrays, and block streams are never padded (ragged shards go
-    through ConcatSource). Reject early with a pointed message."""
-    if sample_weight is not None:
-        raise ValueError(
-            f"{what}: sample_weight is not supported with a DataSource "
-            f"(every source row has weight 1; represent ragged shards with "
-            f"ConcatSource instead of padding)")
-
-
-def resolve_backend(backend: str, fused_supported: bool = True) -> str:
-    """Resolve the user-facing engine knob to a concrete implementation.
-
-    ``auto`` picks the fused Pallas kernel when it can win (the op has a
-    kernel and we are on a TPU backend); interpret mode on CPU is
-    bit-compatible but much slower than XLA, so ``auto`` keeps the
-    reference path there. Ops whose kernel does not support the requested
-    configuration (``fused_supported=False``, e.g. full covariance) always
-    fall back to reference semantics.
-    """
-    if backend not in ENGINE_BACKENDS:
-        raise ValueError(
-            f"engine backend must be one of {ENGINE_BACKENDS}, "
-            f"got {backend!r}")
-    if not fused_supported:
-        return "reference"
-    if backend == "auto":
-        return "fused" if jax.default_backend() == "tpu" else "reference"
-    return backend
-
-
-def resolve_estep_backend(estep_backend: str, is_diagonal: bool) -> str:
-    """E-step flavour of :func:`resolve_backend`: the fused kernel only
-    implements diagonal covariance (DESIGN.md §6)."""
-    try:
-        return resolve_backend(estep_backend, fused_supported=is_diagonal)
-    except ValueError:
-        raise ValueError(
-            f"estep_backend must be one of {ESTEP_BACKENDS}, "
-            f"got {estep_backend!r}") from None
+_require_no_weight = require_array_weights  # historical internal name
 
 
 def _pad_to_chunks(arrays: Sequence[jax.Array], chunk_size: int):
@@ -661,6 +609,55 @@ def _em_loop_source(gmm0: GMM, source: DataSource, tol: float,
     return host_em_loop(step, gmm0, tol, max_iter)
 
 
+def fit_gmm_cfg(key: jax.Array, x, k: int, config: FitConfig,
+                sample_weight: Optional[jax.Array] = None,
+                init_gmm: Optional[GMM] = None) -> EMResult:
+    """Train a GMM with EM until the avg-loglik delta drops below the
+    config's ``tol`` (the paper's convergence criterion, 1e-3).
+
+    The cfg-core trainer behind both :func:`fit_gmm` and
+    ``repro.api.GMMEstimator``: every knob arrives pre-validated in one
+    :class:`FitConfig`, resolved exactly once here. ``config.backend``
+    selects the E-step implementation (DESIGN.md §6); an integer
+    ``config.chunk_size`` streams the init (k-means + label stats) *and*
+    every E-step in bounded memory. The k-means assignment backend stays
+    "auto" (kernel on TPU, reference elsewhere) rather than following the
+    E-step backend: an explicitly requested fused E-step off-TPU is a
+    parity-testing configuration, and interpret-mode Lloyd sweeps would
+    make it unusably slow.
+
+    ``x`` may be a :class:`DataSource` (DESIGN.md §7): init, every E-step
+    and convergence then run as host-driven block loops with an
+    O(chunk·K) working set independent of N — true out-of-core training
+    (``chunk_size="auto"`` streams at :data:`DEFAULT_SOURCE_CHUNK`).
+    """
+    # Validate eagerly: _em_loop sees the knob as a static jit arg and a
+    # typo'd value would otherwise surface as an opaque trace-time error.
+    config.resolved_estep(config.is_diagonal if init_gmm is None
+                          else init_gmm.is_diagonal)
+    if isinstance(x, DataSource):
+        require_array_weights(sample_weight, "fit_gmm over a DataSource")
+        cs = config.resolve_chunk(source=True)
+        if init_gmm is None:
+            init_gmm = init_from_kmeans(
+                key, x, k, covariance_type=config.covariance_type,
+                reg_covar=config.reg_covar, chunk_size=cs)
+        gmm, ll, it, converged = _em_loop_source(
+            init_gmm, x, config.tol, config.reg_covar, config.max_iter,
+            config.backend, cs)
+        return EMResult(gmm, ll, it, converged)
+    cs = config.resolve_chunk(source=False)
+    n = x.shape[0]
+    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
+    if init_gmm is None:
+        init_gmm = init_from_kmeans(key, x, k, w, config.covariance_type,
+                                    config.reg_covar, chunk_size=cs)
+    gmm, ll, it, converged = _em_loop(
+        init_gmm, x, w, jnp.asarray(config.tol, x.dtype), config.reg_covar,
+        config.max_iter, config.backend, cs)
+    return EMResult(gmm, ll, it, converged)
+
+
 def fit_gmm(key: jax.Array, x: jax.Array, k: int,
             sample_weight: Optional[jax.Array] = None,
             covariance_type: str = "diag",
@@ -669,45 +666,16 @@ def fit_gmm(key: jax.Array, x: jax.Array, k: int,
             init_gmm: Optional[GMM] = None,
             estep_backend: str = "auto",
             chunk_size: Optional[int] = None) -> EMResult:
-    """Train a GMM with EM until the avg-loglik delta drops below ``tol``
-    (the paper's convergence criterion, 1e-3).
-
-    ``estep_backend`` selects the E-step implementation (DESIGN.md §6);
-    ``chunk_size`` streams the init (k-means + label stats) *and* every
-    E-step in bounded memory. The k-means assignment backend stays "auto"
-    (kernel on TPU, reference elsewhere) rather than following
-    ``estep_backend``: an explicitly requested fused E-step off-TPU is a
-    parity-testing configuration, and interpret-mode Lloyd sweeps would
-    make it unusably slow.
-
-    ``x`` may be a :class:`DataSource` (DESIGN.md §7): init, every E-step
-    and convergence then run as host-driven block loops with an
-    O(chunk_size·K) working set independent of N — true out-of-core
-    training. ``chunk_size=None`` streams at :data:`DEFAULT_SOURCE_CHUNK`.
-    """
-    # Validate eagerly: _em_loop sees the knob as a static jit arg and a
-    # typo'd value would otherwise surface as an opaque trace-time error.
-    resolve_estep_backend(estep_backend, covariance_type == "diag"
-                          if init_gmm is None else init_gmm.is_diagonal)
-    if isinstance(x, DataSource):
-        _require_no_weight(sample_weight, "fit_gmm over a DataSource")
-        cs = resolve_source_chunk(chunk_size)
-        if init_gmm is None:
-            init_gmm = init_from_kmeans(key, x, k,
-                                        covariance_type=covariance_type,
-                                        reg_covar=reg_covar, chunk_size=cs)
-        gmm, ll, it, converged = _em_loop_source(
-            init_gmm, x, tol, reg_covar, max_iter, estep_backend, cs)
-        return EMResult(gmm, ll, it, converged)
-    n = x.shape[0]
-    w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
-    if init_gmm is None:
-        init_gmm = init_from_kmeans(key, x, k, w, covariance_type, reg_covar,
-                                    chunk_size=chunk_size)
-    gmm, ll, it, converged = _em_loop(init_gmm, x, w, jnp.asarray(tol, x.dtype),
-                                      reg_covar, max_iter, estep_backend,
-                                      chunk_size)
-    return EMResult(gmm, ll, it, converged)
+    """Legacy keyword surface of :func:`fit_gmm_cfg` (internal; prefer
+    ``repro.api.GMMEstimator``): folds the loose knobs into one validated
+    :class:`FitConfig` — ``chunk_size=None`` keeps its historical meaning
+    (full batch resident / :data:`DEFAULT_SOURCE_CHUNK` out-of-core) by
+    mapping to ``chunk_size="auto"``."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return fit_gmm_cfg(key, x, k, cfg, sample_weight, init_gmm)
 
 
 def fit_gmm_streaming(key: jax.Array, x: jax.Array, k: int,
@@ -718,16 +686,51 @@ def fit_gmm_streaming(key: jax.Array, x: jax.Array, k: int,
                       init_gmm: Optional[GMM] = None,
                       estep_backend: str = "auto",
                       chunk_size: int = 4096) -> EMResult:
-    """Streaming EM: the k-means init, the label statistics and every
-    E-step scan (chunk_size, d) slices, so the peak working set is
-    O(chunk_size * K) instead of O(N * K) from init through convergence —
-    N is no longer bounded by any resident (N, K) array. Mathematically
-    identical to :func:`fit_gmm` (chunk sums reorder float additions only).
+    """Deprecated: ``repro.api.GMMEstimator`` with an integer
+    ``FitConfig.chunk_size`` is the same all-streaming fit. This shim
+    forwards to the facade (bit-identical result) and will be removed."""
+    warnings.warn(
+        "fit_gmm_streaming is deprecated; use repro.api.GMMEstimator(k, "
+        "chunk_size=<int>).fit(x) — same engine, same bits",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import GMMEstimator  # facade sits above core; lazy
+    est = GMMEstimator(k, config=FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=int(chunk_size),
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter))
+    est.fit(x, sample_weight=sample_weight, init_gmm=init_gmm, key=key)
+    return est.result_
+
+
+def fit_gmm_bic_cfg(key: jax.Array, x, k_candidates: Sequence[int],
+                    config: FitConfig,
+                    sample_weight: Optional[jax.Array] = None
+                    ) -> tuple[EMResult, dict[int, float]]:
+    """TrainGMM of Algorithm 4.1: fit every K in the candidate range, return
+    the fit minimizing BIC (plus all BIC scores).
+
+    With an integer ``config.chunk_size`` the per-candidate scoring runs
+    through :func:`bic_streaming`, so model selection never materializes
+    the (N, K) log-prob matrix the full-batch ``GMM.bic`` builds. With a
+    :class:`DataSource` the whole selection — every candidate's init, EM
+    and BIC score — runs out-of-core.
     """
-    return fit_gmm(key, x, k, sample_weight=sample_weight,
-                   covariance_type=covariance_type, max_iter=max_iter,
-                   tol=tol, reg_covar=reg_covar, init_gmm=init_gmm,
-                   estep_backend=estep_backend, chunk_size=int(chunk_size))
+    score_chunk = config.resolve_chunk(isinstance(x, DataSource))
+    best, best_bic, bics = None, jnp.inf, {}
+    for i, k in enumerate(k_candidates):
+        res = fit_gmm_cfg(jax.random.fold_in(key, i), x, k, config,
+                          sample_weight)
+        # scoring backend stays "auto" (kernel on TPU, reference elsewhere)
+        # rather than following config.backend, for the same reason the
+        # fit pins the k-means assign backend: an explicit fused E-step
+        # off-TPU is a parity-testing configuration, and interpret-mode
+        # scoring of every candidate K would crawl.
+        b = float(bic_streaming(res.gmm, x, sample_weight,
+                                chunk_size=score_chunk))
+        bics[k] = b
+        if b < best_bic:
+            best, best_bic = res, b
+    return best, bics
 
 
 def fit_gmm_bic(key: jax.Array, x: jax.Array, k_candidates: Sequence[int],
@@ -738,28 +741,10 @@ def fit_gmm_bic(key: jax.Array, x: jax.Array, k_candidates: Sequence[int],
                 estep_backend: str = "auto",
                 chunk_size: Optional[int] = None) -> tuple[EMResult,
                                                            dict[int, float]]:
-    """TrainGMM of Algorithm 4.1: fit every K in the candidate range, return
-    the fit minimizing BIC (plus all BIC scores).
-
-    With ``chunk_size`` set the per-candidate scoring runs through
-    :func:`bic_streaming`, so model selection never materializes the
-    (N, K) log-prob matrix the full-batch ``GMM.bic`` builds. With a
-    :class:`DataSource` the whole selection — every candidate's init, EM
-    and BIC score — runs out-of-core.
-    """
-    best, best_bic, bics = None, jnp.inf, {}
-    for i, k in enumerate(k_candidates):
-        res = fit_gmm(jax.random.fold_in(key, i), x, k, sample_weight,
-                      covariance_type, max_iter, tol, reg_covar,
-                      estep_backend=estep_backend, chunk_size=chunk_size)
-        # scoring backend stays "auto" (kernel on TPU, reference elsewhere)
-        # rather than following estep_backend, for the same reason fit_gmm
-        # pins the k-means assign backend: an explicit fused E-step off-TPU
-        # is a parity-testing configuration, and interpret-mode scoring of
-        # every candidate K would crawl.
-        b = float(bic_streaming(res.gmm, x, sample_weight,
-                                chunk_size=chunk_size))
-        bics[k] = b
-        if b < best_bic:
-            best, best_bic = res, b
-    return best, bics
+    """Legacy keyword surface of :func:`fit_gmm_bic_cfg` (internal; prefer
+    ``repro.api.GMMEstimator`` with ``k_candidates``)."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return fit_gmm_bic_cfg(key, x, k_candidates, cfg, sample_weight)

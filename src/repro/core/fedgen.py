@@ -8,18 +8,25 @@ Pipeline:
   4. server samples |S| = H * sum_c K_c synthetic points from the merged
      mixture and trains the global GMM on S.
 
+Clients arrive either as a padded :class:`ClientSplit` (resident arrays +
+masks) or as a list of per-client :class:`DataSource` streams (out-of-core,
+DESIGN.md §7); :func:`fedgengmm_cfg` dispatches on that input type with one
+validated :class:`FitConfig`, and is what ``repro.api.FedGenGMM`` runs.
+
 The sharded (shard_map) variant lives in ``repro.distributed.fed``; this
 module is its single-process semantics and is what the paper benchmarks use.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.em import EMResult, fit_gmm, fit_gmm_bic
+from repro.core.config import FitConfig, is_source_list
+from repro.core.em import (EMResult, fit_gmm_bic_cfg, fit_gmm_cfg)
 from repro.core.gmm import GMM, merge_gmms
 from repro.core.partition import ClientSplit
 from repro.data.sources import DataSource, SyntheticGMMSource
@@ -53,8 +60,38 @@ def payload_floats(gmm: GMM) -> int:
 # Local training
 # ----------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("k", "max_iter", "covariance_type",
-                                   "estep_backend", "chunk_size"))
+@partial(jax.jit, static_argnames=("k", "config"))
+def _train_locals_jit(key: jax.Array, data: jax.Array, mask: jax.Array,
+                      k: int, config: FitConfig):
+    c = data.shape[0]
+    keys = jax.random.split(key, c)
+
+    def one(key, x, w):
+        res = fit_gmm_cfg(key, x, k, config, sample_weight=w)
+        return res.gmm, res.log_likelihood, res.n_iter
+
+    return jax.vmap(one)(keys, data, mask)
+
+
+def train_locals_cfg(key: jax.Array, data: jax.Array, mask: jax.Array,
+                     k: int, config: FitConfig) -> tuple[GMM, jax.Array,
+                                                         jax.Array]:
+    """vmap'd local EM, fixed K_c = k for all clients — the cfg-core behind
+    :func:`train_locals` (the frozen :class:`FitConfig` rides through jit
+    as a static argument, so the whole knob set is one hashable value).
+    ``config.seed`` and ``config.init`` only feed the facade's key
+    derivation / init-strategy naming and never the traced computation
+    (local fits always use the k-means init), so both are normalized out
+    of the static cache key — sweeping them must not recompile identical
+    graphs.
+
+    data: (C, N, d) padded, mask: (C, N). Returns stacked GMM with leaves
+    of leading dim C, plus (C,) final logliks and iteration counts.
+    """
+    return _train_locals_jit(key, data, mask, k,
+                             config.replace(seed=0, init="auto"))
+
+
 def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
                  max_iter: int = 200, tol: float = 1e-3,
                  reg_covar: float = 1e-6,
@@ -62,22 +99,26 @@ def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
                  estep_backend: str = "auto",
                  chunk_size: Optional[int] = None) -> tuple[GMM, jax.Array,
                                                             jax.Array]:
-    """vmap'd local EM, fixed K_c = k for all clients.
+    """Legacy keyword surface of :func:`train_locals_cfg` (internal)."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return train_locals_cfg(key, data, mask, k, cfg)
 
-    data: (C, N, d) padded, mask: (C, N). Returns stacked GMM with leaves
-    of leading dim C, plus (C,) final logliks and iteration counts.
-    """
-    c = data.shape[0]
-    keys = jax.random.split(key, c)
 
-    def one(key, x, w):
-        res = fit_gmm(key, x, k, sample_weight=w,
-                      covariance_type=covariance_type, max_iter=max_iter,
-                      tol=tol, reg_covar=reg_covar,
-                      estep_backend=estep_backend, chunk_size=chunk_size)
-        return res.gmm, res.log_likelihood, res.n_iter
-
-    return jax.vmap(one)(keys, data, mask)
+def train_locals_bic_cfg(key: jax.Array, split: ClientSplit,
+                         k_candidates: Sequence[int],
+                         config: FitConfig) -> list[EMResult]:
+    """Per-client TrainGMM with BIC selection — heterogeneous K_c."""
+    results = []
+    for i in range(split.data.shape[0]):
+        n = int(split.sizes[i])
+        x = jnp.asarray(split.data[i, :n])
+        res, _ = fit_gmm_bic_cfg(jax.random.fold_in(key, i), x, k_candidates,
+                                 config)
+        results.append(res)
+    return results
 
 
 def train_locals_bic(key: jax.Array, split: ClientSplit,
@@ -87,41 +128,82 @@ def train_locals_bic(key: jax.Array, split: ClientSplit,
                      covariance_type: str = "diag",
                      estep_backend: str = "auto",
                      chunk_size: Optional[int] = None) -> list[EMResult]:
-    """Per-client TrainGMM with BIC selection — heterogeneous K_c."""
+    """Legacy keyword surface of :func:`train_locals_bic_cfg` (internal)."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return train_locals_bic_cfg(key, split, k_candidates, cfg)
+
+
+def train_locals_sources_cfg(key: jax.Array,
+                             sources: Sequence[DataSource],
+                             config: FitConfig,
+                             k: Optional[int] = None,
+                             k_candidates: Optional[Sequence[int]] = None
+                             ) -> list[EMResult]:
+    """Local TrainGMM per client, each over its own :class:`DataSource` —
+    the edge-device regime the paper targets: a client's dataset never has
+    to fit in memory, only one block at a time. Fixed ``k`` or per-client
+    BIC selection over ``k_candidates``. Sources are ragged by nature, so
+    no padding, masks or sample weights appear anywhere on this path.
+    """
     results = []
-    for i in range(split.data.shape[0]):
-        n = int(split.sizes[i])
-        x = jnp.asarray(split.data[i, :n])
-        res, _ = fit_gmm_bic(jax.random.fold_in(key, i), x, k_candidates,
-                             covariance_type=covariance_type,
-                             max_iter=max_iter, tol=tol, reg_covar=reg_covar,
-                             estep_backend=estep_backend,
-                             chunk_size=chunk_size)
+    for i, src in enumerate(sources):
+        sub = jax.random.fold_in(key, i)
+        if k is not None:
+            res = fit_gmm_cfg(sub, src, k, config)
+        else:
+            assert k_candidates is not None, "need k or k_candidates"
+            res, _ = fit_gmm_bic_cfg(sub, src, k_candidates, config)
         results.append(res)
     return results
+
+
+def train_locals_from_sources(key: jax.Array,
+                              sources: Sequence[DataSource],
+                              k: Optional[int] = None,
+                              k_candidates: Optional[Sequence[int]] = None,
+                              max_iter: int = 200, tol: float = 1e-3,
+                              reg_covar: float = 1e-6,
+                              covariance_type: str = "diag",
+                              estep_backend: str = "auto",
+                              chunk_size: Optional[int] = None
+                              ) -> list[EMResult]:
+    """Deprecated: the per-client out-of-core local fits are the source arm
+    of :func:`train_locals_sources_cfg`, which ``repro.api.FedGenGMM``
+    drives. This shim forwards (bit-identical results) and will be
+    removed."""
+    warnings.warn(
+        "train_locals_from_sources is deprecated; use "
+        "repro.api.FedGenGMM(...).run(sources) for the full pipeline or "
+        "train_locals_sources_cfg with a FitConfig — same engine, same bits",
+        DeprecationWarning, stacklevel=2)
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return train_locals_sources_cfg(key, sources, cfg, k=k,
+                                    k_candidates=k_candidates)
 
 
 # ----------------------------------------------------------------------
 # Server-side aggregation
 # ----------------------------------------------------------------------
 
-def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
-              h: int = 100,
-              k_global: Optional[int] = None,
-              k_candidates: Optional[Sequence[int]] = None,
-              max_iter: int = 200, tol: float = 1e-3,
-              reg_covar: float = 1e-6,
-              covariance_type: str = "diag",
-              estep_backend: str = "auto",
-              chunk_size: Optional[int] = None,
-              synthetic: str = "resident") -> tuple[EMResult, jax.Array]:
+def aggregate_cfg(key: jax.Array, local_gmms: list[GMM], sizes,
+                  config: FitConfig, h: int = 100,
+                  k_global: Optional[int] = None,
+                  k_candidates: Optional[Sequence[int]] = None,
+                  synthetic: str = "resident") -> tuple[EMResult, jax.Array]:
     """Algorithm 4.1 lines 21-31: merge, sample S, train global model.
 
     The synthetic set S = H * sum_c K_c points is the largest dataset in
-    the pipeline, so ``chunk_size`` matters most here: it bounds the whole
-    refit — the k-means init's Lloyd sweeps and label statistics, every
-    E-step, and (on the ``k_candidates`` path) the per-candidate BIC
-    scoring — at an O(chunk_size·K) working set (DESIGN.md §6).
+    the pipeline, so an integer ``config.chunk_size`` matters most here:
+    it bounds the whole refit — the k-means init's Lloyd sweeps and label
+    statistics, every E-step, and (on the ``k_candidates`` path) the
+    per-candidate BIC scoring — at an O(chunk·K) working set (DESIGN.md
+    §6).
 
     ``synthetic="source"`` goes one step further: S is never materialized
     at all. The refit consumes a :class:`SyntheticGMMSource` that
@@ -141,24 +223,106 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
     else:
         synthetic = merged.sample(k_sample, n_synth)
     if k_global is not None:
-        res = fit_gmm(k_fit, synthetic, k_global,
-                      covariance_type=covariance_type, max_iter=max_iter,
-                      tol=tol, reg_covar=reg_covar,
-                      estep_backend=estep_backend, chunk_size=chunk_size)
+        res = fit_gmm_cfg(k_fit, synthetic, k_global, config)
     else:
         assert k_candidates is not None, "need k_global or k_candidates"
-        res, _ = fit_gmm_bic(k_fit, synthetic, k_candidates,
-                             covariance_type=covariance_type,
-                             max_iter=max_iter, tol=tol,
-                             reg_covar=reg_covar,
-                             estep_backend=estep_backend,
-                             chunk_size=chunk_size)
+        res, _ = fit_gmm_bic_cfg(k_fit, synthetic, k_candidates, config)
     return res, synthetic
+
+
+def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
+              h: int = 100,
+              k_global: Optional[int] = None,
+              k_candidates: Optional[Sequence[int]] = None,
+              max_iter: int = 200, tol: float = 1e-3,
+              reg_covar: float = 1e-6,
+              covariance_type: str = "diag",
+              estep_backend: str = "auto",
+              chunk_size: Optional[int] = None,
+              synthetic: str = "resident") -> tuple[EMResult, jax.Array]:
+    """Legacy keyword surface of :func:`aggregate_cfg` (internal)."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return aggregate_cfg(key, local_gmms, sizes, cfg, h=h, k_global=k_global,
+                         k_candidates=k_candidates, synthetic=synthetic)
 
 
 # ----------------------------------------------------------------------
 # End-to-end FedGenGMM
 # ----------------------------------------------------------------------
+
+def _one_shot_result(res: EMResult, synth, local_gmms: list[GMM],
+                     local_results: list[EMResult]) -> FedGenResult:
+    """The single communication round's accounting, shared by every input
+    type: uplink = each client's (K, 2d+1) parameter block + |D_c|,
+    downlink = the global model broadcast."""
+    uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
+    down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
+    comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
+    return FedGenResult(res.gmm, local_gmms, synth, comm, local_results)
+
+
+def fedgengmm_cfg(key: jax.Array, clients, config: FitConfig,
+                  k_clients: Optional[int] = None,
+                  k_global: Optional[int] = None,
+                  k_candidates: Optional[Sequence[int]] = None,
+                  h: int = 100,
+                  synthetic: str = "auto") -> FedGenResult:
+    """Run the full one-shot pipeline — the cfg-core behind
+    ``repro.api.FedGenGMM``, dispatching on the client input type:
+
+    * a padded :class:`ClientSplit`: vmap'd local EM (fixed ``k_clients``)
+      or per-client BIC selection (``k_candidates``), resident arrays;
+    * a list/tuple of :class:`DataSource`: every client streams its local
+      fit out-of-core, the single communication round ships only
+      (K, 2d+1) parameter blocks, and (with ``synthetic="source"``) the
+      server refit replays the merged mixture block-by-block — end to end,
+      no stage holds O(N) rows.
+
+    ``synthetic="auto"`` keeps the historical defaults per input type:
+    a resident S for split clients, the seeded replay source for source
+    clients.
+    """
+    sources = is_source_list(clients)
+    if synthetic == "auto":
+        synthetic = "source" if sources else "resident"
+    k_local_train, k_agg = jax.random.split(key)
+    if sources:
+        local_results = train_locals_sources_cfg(
+            k_local_train, clients, config, k=k_clients,
+            k_candidates=k_candidates)
+        local_gmms = [r.gmm for r in local_results]
+        sizes = [src.num_rows for src in clients]
+    elif isinstance(clients, ClientSplit):
+        split = clients
+        sizes = split.sizes
+        if k_clients is not None:
+            stacked, lls, iters = train_locals_cfg(
+                k_local_train, jnp.asarray(split.data),
+                jnp.asarray(split.mask), k_clients, config)
+            local_gmms = [
+                GMM(stacked.weights[i], stacked.means[i], stacked.covs[i])
+                for i in range(split.data.shape[0])]
+            local_results = [
+                EMResult(g, lls[i], iters[i], jnp.array(True))
+                for i, g in enumerate(local_gmms)]
+        else:
+            assert k_candidates is not None, "need k_clients or k_candidates"
+            local_results = train_locals_bic_cfg(
+                k_local_train, split, k_candidates, config)
+            local_gmms = [r.gmm for r in local_results]
+    else:
+        raise TypeError(
+            f"fedgengmm clients must be a ClientSplit or a list of "
+            f"DataSources, got {type(clients).__name__}")
+
+    res, synth = aggregate_cfg(
+        k_agg, local_gmms, sizes, config, h=h, k_global=k_global,
+        k_candidates=k_candidates, synthetic=synthetic)
+    return _one_shot_result(res, synth, local_gmms, local_results)
+
 
 def fedgengmm(key: jax.Array, split: ClientSplit,
               k_clients: Optional[int] = None,
@@ -171,86 +335,17 @@ def fedgengmm(key: jax.Array, split: ClientSplit,
               estep_backend: str = "auto",
               chunk_size: Optional[int] = None,
               synthetic: str = "resident") -> FedGenResult:
-    """Run the full one-shot pipeline on a partitioned dataset.
-
-    Either fix ``k_clients`` (paper's main experiments, K_c = K) or pass
-    ``k_candidates`` for per-client BIC selection (heterogeneous models).
-    ``estep_backend``/``chunk_size`` select the E-step engine for both the
-    local fits and the server refit (DESIGN.md §6);
-    ``synthetic="source"`` runs the server refit out-of-core (see
-    :func:`aggregate`).
-    """
-    k_local_train, k_agg = jax.random.split(key)
-    if k_clients is not None:
-        stacked, lls, iters = train_locals(
-            k_local_train, jnp.asarray(split.data), jnp.asarray(split.mask),
-            k_clients, max_iter=max_iter, tol=tol, reg_covar=reg_covar,
-            covariance_type=covariance_type, estep_backend=estep_backend,
-            chunk_size=chunk_size)
-        local_gmms = [
-            GMM(stacked.weights[i], stacked.means[i], stacked.covs[i])
-            for i in range(split.data.shape[0])]
-        local_results = [
-            EMResult(g, lls[i], iters[i], jnp.array(True))
-            for i, g in enumerate(local_gmms)]
-    else:
-        assert k_candidates is not None, "need k_clients or k_candidates"
-        local_results = train_locals_bic(
-            k_local_train, split, k_candidates, max_iter=max_iter, tol=tol,
-            reg_covar=reg_covar, covariance_type=covariance_type,
-            estep_backend=estep_backend, chunk_size=chunk_size)
-        local_gmms = [r.gmm for r in local_results]
-
-    res, synth = aggregate(
-        k_agg, local_gmms, split.sizes, h=h, k_global=k_global,
-        k_candidates=k_candidates, max_iter=max_iter, tol=tol,
-        reg_covar=reg_covar, covariance_type=covariance_type,
-        estep_backend=estep_backend, chunk_size=chunk_size,
-        synthetic=synthetic)
-
-    uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
-    down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
-    comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
-    return FedGenResult(res.gmm, local_gmms, synth, comm, local_results)
-
-
-# ----------------------------------------------------------------------
-# Out-of-core clients: per-client DataSource training (DESIGN.md §7)
-# ----------------------------------------------------------------------
-
-def train_locals_from_sources(key: jax.Array,
-                              sources: Sequence[DataSource],
-                              k: Optional[int] = None,
-                              k_candidates: Optional[Sequence[int]] = None,
-                              max_iter: int = 200, tol: float = 1e-3,
-                              reg_covar: float = 1e-6,
-                              covariance_type: str = "diag",
-                              estep_backend: str = "auto",
-                              chunk_size: Optional[int] = None
-                              ) -> list[EMResult]:
-    """Local TrainGMM per client, each over its own :class:`DataSource` —
-    the edge-device regime the paper targets: a client's dataset never has
-    to fit in memory, only one block at a time. Fixed ``k`` or per-client
-    BIC selection over ``k_candidates``. Sources are ragged by nature, so
-    no padding, masks or sample weights appear anywhere on this path.
-    """
-    results = []
-    for i, src in enumerate(sources):
-        sub = jax.random.fold_in(key, i)
-        if k is not None:
-            res = fit_gmm(sub, src, k, covariance_type=covariance_type,
-                          max_iter=max_iter, tol=tol, reg_covar=reg_covar,
-                          estep_backend=estep_backend, chunk_size=chunk_size)
-        else:
-            assert k_candidates is not None, "need k or k_candidates"
-            res, _ = fit_gmm_bic(sub, src, k_candidates,
-                                 covariance_type=covariance_type,
-                                 max_iter=max_iter, tol=tol,
-                                 reg_covar=reg_covar,
-                                 estep_backend=estep_backend,
-                                 chunk_size=chunk_size)
-        results.append(res)
-    return results
+    """Legacy keyword surface of :func:`fedgengmm_cfg` (internal; prefer
+    ``repro.api.FedGenGMM``). Either fix ``k_clients`` (paper's main
+    experiments, K_c = K) or pass ``k_candidates`` for per-client BIC
+    selection (heterogeneous models)."""
+    cfg = FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size,
+        covariance_type=covariance_type, reg_covar=reg_covar, tol=tol,
+        max_iter=max_iter)
+    return fedgengmm_cfg(key, split, cfg, k_clients=k_clients,
+                         k_global=k_global, k_candidates=k_candidates, h=h,
+                         synthetic=synthetic)
 
 
 def fedgengmm_from_sources(key: jax.Array,
@@ -265,30 +360,20 @@ def fedgengmm_from_sources(key: jax.Array,
                            estep_backend: str = "auto",
                            chunk_size: Optional[int] = None,
                            synthetic: str = "source") -> FedGenResult:
-    """The full one-shot pipeline with every dataset out-of-core: each
-    client streams its local fit from its own :class:`DataSource`, the
-    single communication round ships only (K, 2d+1) parameter blocks, and
-    the server refit (``synthetic="source"`` by default) replays the merged
-    mixture block-by-block — end to end, no stage holds O(N) rows.
-    Mirrors :func:`fedgengmm` semantics otherwise.
-    """
-    k_local_train, k_agg = jax.random.split(key)
-    local_results = train_locals_from_sources(
-        k_local_train, sources, k=k_clients, k_candidates=k_candidates,
-        max_iter=max_iter, tol=tol, reg_covar=reg_covar,
-        covariance_type=covariance_type, estep_backend=estep_backend,
-        chunk_size=chunk_size)
-    local_gmms = [r.gmm for r in local_results]
-    sizes = [src.num_rows for src in sources]
-
-    res, synth = aggregate(
-        k_agg, local_gmms, sizes, h=h, k_global=k_global,
-        k_candidates=k_candidates, max_iter=max_iter, tol=tol,
-        reg_covar=reg_covar, covariance_type=covariance_type,
-        estep_backend=estep_backend, chunk_size=chunk_size,
-        synthetic=synthetic)
-
-    uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
-    down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
-    comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
-    return FedGenResult(res.gmm, local_gmms, synth, comm, local_results)
+    """Deprecated: ``repro.api.FedGenGMM(...).run(sources)`` dispatches on
+    the input type, so the separate ``_from_sources`` spelling is obsolete.
+    This shim forwards to the facade (bit-identical result) and will be
+    removed."""
+    warnings.warn(
+        "fedgengmm_from_sources is deprecated; use "
+        "repro.api.FedGenGMM(k_clients=..., k_global=...).run(sources) — "
+        "same engine, same bits",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import FedGenGMM  # facade sits above core; lazy
+    fed = FedGenGMM(k_clients=k_clients, k_global=k_global,
+                    k_candidates=k_candidates, h=h, synthetic=synthetic,
+                    config=FitConfig.from_legacy(
+                        backend=estep_backend, chunk_size=chunk_size,
+                        covariance_type=covariance_type, reg_covar=reg_covar,
+                        tol=tol, max_iter=max_iter))
+    return fed.run(list(sources), key=key)

@@ -18,15 +18,18 @@ array.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.em import (SufficientStats, reduce_rows, resolve_backend,
-                           resolve_source_chunk, streaming_map_reduce,
-                           streaming_reduce)
+from repro.core.config import (FitConfig, is_source_list,
+                               require_array_weights, resolve_backend,
+                               resolve_source_chunk)
+from repro.core.em import (SufficientStats, reduce_rows,
+                           streaming_map_reduce, streaming_reduce)
 from repro.data.sources import DataSource
 
 
@@ -162,7 +165,36 @@ def kmeans_multi(key: jax.Array, x: jax.Array, k: int,
     return jax.tree.map(lambda a: a[best], runs)
 
 
-def federated_kmeans(key: jax.Array, client_data: jax.Array, k_global: int,
+def kmeans_fit_cfg(key: jax.Array, x, k: int, config: FitConfig,
+                   sample_weight: Optional[jax.Array] = None,
+                   n_init: int = 1) -> KMeansResult:
+    """The cfg-core k-means trainer behind ``repro.api.KMeansEstimator``:
+    one validated :class:`FitConfig`, one dispatch — resident arrays run
+    the jitted Lloyd loops (:func:`kmeans` / :func:`kmeans_multi`), a
+    :class:`DataSource` runs the host-driven out-of-core twins. ``n_init``
+    > 1 keeps the best restart by final-center inertia."""
+    backend = config.backend
+    if isinstance(x, DataSource):
+        require_array_weights(sample_weight, "k-means over a DataSource")
+        cs = config.resolve_chunk(source=True)
+        if n_init == 1:
+            return kmeans_source(key, x, k, max_iter=config.max_iter,
+                                 tol=config.tol, chunk_size=cs,
+                                 assign_backend=backend)
+        return kmeans_multi_source(key, x, k, max_iter=config.max_iter,
+                                   tol=config.tol, n_init=n_init,
+                                   chunk_size=cs, assign_backend=backend)
+    cs = config.resolve_chunk(source=False)
+    if n_init == 1:
+        return kmeans(key, x, k, sample_weight=sample_weight,
+                      max_iter=config.max_iter, tol=config.tol,
+                      chunk_size=cs, assign_backend=backend)
+    return kmeans_multi(key, x, k, sample_weight=sample_weight,
+                        max_iter=config.max_iter, tol=config.tol,
+                        n_init=n_init, chunk_size=cs, assign_backend=backend)
+
+
+def federated_kmeans(key: jax.Array, client_data, k_global: int,
                      k_local: Optional[int] = None,
                      client_weights: Optional[jax.Array] = None,
                      max_iter: int = 100,
@@ -175,10 +207,24 @@ def federated_kmeans(key: jax.Array, client_data: jax.Array, k_global: int,
     select the Lloyd-sweep engine for the client-side runs (the server-side
     run is over C·K_local centers — already tiny).
 
-    client_data : (C, N_c, d) padded client datasets
-    client_weights : (C, N_c) 0/1 mask (or general weights) for padding
+    client_data : (C, N_c, d) padded client datasets, or a list/tuple of
+        per-client :class:`DataSource` streams (each client then runs its
+        local k-means out-of-core; ragged sizes need no padding or masks)
+    client_weights : (C, N_c) 0/1 mask (or general weights) for padding;
+        array clients only (source rows all have weight 1)
     Returns (k_global, d) global centers.
     """
+    if is_source_list(client_data):
+        if client_weights is not None:
+            raise ValueError(
+                "federated_kmeans over DataSources: client_weights is "
+                "array-path-only (weights mask padded fixed-shape client "
+                "arrays; source shards are ragged by nature and every "
+                "source row has weight 1)")
+        return _federated_kmeans_sources(key, client_data, k_global,
+                                         k_local=k_local, max_iter=max_iter,
+                                         chunk_size=chunk_size,
+                                         assign_backend=assign_backend)
     c = client_data.shape[0]
     k_local = k_local or k_global
     keys = jax.random.split(key, c + 1)
@@ -345,6 +391,25 @@ def federated_kmeans_from_sources(key: jax.Array,
                                   max_iter: int = 100,
                                   chunk_size: Optional[int] = None,
                                   assign_backend: str = "auto") -> jax.Array:
+    """Deprecated: :func:`federated_kmeans` now dispatches on its input
+    type, so a list of sources goes straight in. This shim forwards
+    (bit-identical result) and will be removed."""
+    warnings.warn(
+        "federated_kmeans_from_sources is deprecated; pass the list of "
+        "DataSources directly to federated_kmeans — same engine, same bits",
+        DeprecationWarning, stacklevel=2)
+    return federated_kmeans(key, list(sources), k_global, k_local=k_local,
+                            max_iter=max_iter, chunk_size=chunk_size,
+                            assign_backend=assign_backend)
+
+
+def _federated_kmeans_sources(key: jax.Array,
+                              sources: Sequence[DataSource],
+                              k_global: int,
+                              k_local: Optional[int] = None,
+                              max_iter: int = 100,
+                              chunk_size: Optional[int] = None,
+                              assign_backend: str = "auto") -> jax.Array:
     """One-shot federated k-means with per-client :class:`DataSource` data:
     each client streams its own local k-means; the server clusters the
     size-weighted local centers (C·K_local rows — always resident-tiny).

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
+from repro.core.config import FitConfig
+from repro.core.em import (SufficientStats, e_step_stats, fit_gmm_cfg,
                            init_from_means, m_step)
 from repro.core.gmm import GMM, merge_gmms_stacked
 from repro.data.sources import SyntheticGMMSource
@@ -43,13 +44,17 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
                    h: int = 100, max_iter: int = 200, tol: float = 1e-3,
                    estep_backend: str = "auto",
                    chunk_size: int | None = None,
-                   synthetic: str = "resident"):
+                   synthetic: str = "resident",
+                   config: FitConfig | None = None):
     """One-shot FedGenGMM over a device mesh.
 
     data: (C, N, d), mask: (C, N) with C divisible by the data-axis size.
     Returns ShardedFedResult (global model replicated).
-    ``estep_backend``/``chunk_size`` select the E-step engine for both the
-    per-shard local fits and the replicated server refit.
+    ``config`` (a :class:`FitConfig`) selects the E-step engine for both
+    the per-shard local fits and the replicated server refit; the loose
+    ``max_iter``/``tol``/``estep_backend``/``chunk_size`` knobs are the
+    legacy spelling and are folded into one config (ignored when
+    ``config`` is given).
 
     ``synthetic="source"`` makes the replicated server refit out-of-core:
     the synthetic replay set |S| = H·K·C — the one dataset in this runtime
@@ -61,6 +66,9 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
     if synthetic not in ("resident", "source"):
         raise ValueError(f"synthetic must be 'resident' or 'source', "
                          f"got {synthetic!r}")
+    cfg = config if config is not None else FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size, tol=tol,
+        max_iter=max_iter)
     axis = "data"
     n_shards = mesh.shape[axis]
     c = data.shape[0]
@@ -72,9 +80,7 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
         keys = jax.random.split(key[0], nc)
 
         def one(kk, x, w):
-            res = fit_gmm(kk, x, k, sample_weight=w, max_iter=max_iter,
-                          tol=tol, estep_backend=estep_backend,
-                          chunk_size=chunk_size)
+            res = fit_gmm_cfg(kk, x, k, cfg, sample_weight=w)
             return res.gmm.weights, res.gmm.means, res.gmm.covs
 
         w, mu, cov = jax.vmap(one)(keys, data_shard, mask_shard)
@@ -101,8 +107,7 @@ def fedgen_sharded(mesh, key, data, mask, k: int, k_global: int,
         synth = SyntheticGMMSource(merged, n_synth, k_sample)
     else:
         synth = merged.sample(k_sample, n_synth)
-    res = fit_gmm(k_fit, synth, k_global, max_iter=max_iter, tol=tol,
-                  estep_backend=estep_backend, chunk_size=chunk_size)
+    res = fit_gmm_cfg(k_fit, synth, k_global, cfg)
     return ShardedFedResult(res.gmm, w_all, mu_all, cov_all)
 
 
@@ -110,23 +115,31 @@ def dem_sharded(mesh, key, data, mask, k: int, init_centers,
                 max_rounds: int = 100, tol: float = 1e-3,
                 reg_covar: float = 1e-6,
                 estep_backend: str = "auto",
-                chunk_size: int | None = None) -> tuple[GMM, jax.Array]:
+                chunk_size: int | None = None,
+                config: FitConfig | None = None) -> tuple[GMM, jax.Array]:
     """Distributed EM over the mesh: one psum of sufficient statistics per
     EM round (the iterative baseline's communication pattern).
 
-    With ``chunk_size`` set, each shard streams its clients' rows through
+    With an integer chunk size (via ``config.chunk_size`` or the legacy
+    ``chunk_size`` knob), each shard streams its clients' rows through
     the engine (``e_step_stats`` owns the full-batch/chunked dispatch) so
     per-round shard memory is bounded by (chunk_size, K) rather than
     (N, K) — the psum payload is unchanged (SufficientStats is already the
     reduced form).
     """
+    cfg = config if config is not None else FitConfig.from_legacy(
+        backend=estep_backend, chunk_size=chunk_size, tol=tol,
+        max_iter=max_rounds, reg_covar=reg_covar)
+    max_rounds, reg_covar = cfg.max_iter, cfg.reg_covar
+    tol, backend = cfg.tol, cfg.backend
+    cs = cfg.resolve_chunk(source=False)
     axis = "data"
     d = data.shape[-1]
 
     def sharded_round(gmm_leaves, data_shard, mask_shard):
         gmm = GMM(*gmm_leaves)
         per = jax.vmap(
-            lambda x, w: e_step_stats(gmm, x, w, estep_backend, chunk_size))(
+            lambda x, w: e_step_stats(gmm, x, w, backend, cs))(
             data_shard, mask_shard)
         local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
         # === one all-reduce per EM round ===

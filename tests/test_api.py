@@ -1,0 +1,413 @@
+"""The `repro.api` facade (DESIGN.md §8): FitConfig validation, input-type
+dispatch, bit-identity against the legacy entry-point families, the
+covariance_type threading regression class, and the deprecation shims.
+
+Bit-identity is the acceptance bar of the PR-4 refactor: the facade and
+the legacy keyword entry points must run literally the same cfg-core code,
+so results are compared with assert_array_equal, never allclose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (DEM, FedGenGMM, FitConfig, GMMEstimator,
+                       KMeansEstimator, bic, log_prob, score)
+from repro.core import dem as dem_legacy
+from repro.core import (fedgengmm, fedgengmm_from_sources, fit_gmm,
+                        fit_gmm_streaming, kmeans, partition)
+from repro.core.dem import dem_from_sources
+from repro.core.em import fit_gmm_bic
+from repro.data.sources import ArraySource, ConcatSource
+from conftest import planted_gmm_data
+
+CHUNK = 512  # deliberately not dividing the fixtures below
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(11)
+    x, y, mus = planted_gmm_data(rng, n=1500, d=4, k=3, spread=5.0, std=0.5,
+                                 min_sep_sigma=8.0)
+    return x, y, mus
+
+
+@pytest.fixture(scope="module")
+def split(data):
+    x, y, _ = data
+    return partition(np.random.default_rng(5), x, y, 4, "dirichlet", 1.0)
+
+
+@pytest.fixture(scope="module")
+def shards(data):
+    x, _, _ = data
+    xj = jnp.asarray(x)
+    return [ArraySource(xj[:500]), ArraySource(xj[500:1100]),
+            ArraySource(xj[1100:])]
+
+
+def assert_same_gmm(g1, g2):
+    for f in ("weights", "means", "covs"):
+        np.testing.assert_array_equal(np.asarray(getattr(g1, f)),
+                                      np.asarray(getattr(g2, f)))
+
+
+# ----------------------------------------------------------------------
+# FitConfig validation (construction-time, once)
+# ----------------------------------------------------------------------
+
+class TestFitConfigValidation:
+    def test_chunk_size_none_is_an_error_with_guidance(self):
+        """The PR-3 footgun: None meant full batch for arrays but 65536
+        for sources. FitConfig refuses it and names the fix."""
+        with pytest.raises(ValueError, match="chunk_size='auto'"):
+            FitConfig(chunk_size=None)
+
+    def test_chunk_size_rejects_nonpositive_and_junk(self):
+        with pytest.raises(ValueError, match="positive"):
+            FitConfig(chunk_size=0)
+        with pytest.raises(ValueError, match="positive"):
+            FitConfig(chunk_size=-4)
+        with pytest.raises(ValueError, match="'auto'"):
+            FitConfig(chunk_size="streaming")
+
+    def test_auto_resolution_matches_legacy_defaults(self):
+        cfg = FitConfig()
+        assert cfg.resolve_chunk(source=False) is None      # full batch
+        assert cfg.resolve_chunk(source=True) == 65536      # source default
+        assert FitConfig(chunk_size=128).resolve_chunk(True) == 128
+        assert FitConfig(chunk_size=128).resolve_chunk(False) == 128
+
+    @pytest.mark.parametrize("bad,match", [
+        (dict(backend="cuda"), "estep_backend"),
+        (dict(covariance_type="spherical"), "covariance_type"),
+        (dict(init="bogus"), "init"),
+        (dict(max_iter=0), "max_iter"),
+        (dict(reg_covar=-1.0), "reg_covar"),
+        (dict(tol=-1e-3), "tol"),
+    ])
+    def test_field_validation(self, bad, match):
+        with pytest.raises(ValueError, match=match):
+            FitConfig(**bad)
+
+    def test_facade_rejects_unknown_override(self):
+        with pytest.raises(TypeError, match="unknown FitConfig field"):
+            GMMEstimator(3, chunksize=128)
+
+    def test_legacy_none_maps_to_auto(self):
+        assert FitConfig.from_legacy(chunk_size=None).chunk_size == "auto"
+        assert FitConfig.from_legacy(chunk_size=256).chunk_size == 256
+
+    def test_chunk_size_rejects_non_integral(self):
+        """Silently truncating 8192.5 would mask the division-gone-wrong
+        caller bugs the validation exists for; integral floats are fine."""
+        with pytest.raises(ValueError, match="positive int"):
+            FitConfig(chunk_size=8192.5)
+        with pytest.raises(ValueError, match="positive int"):
+            FitConfig(chunk_size=True)
+        assert FitConfig(chunk_size=8192.0).chunk_size == 8192
+        with pytest.raises(ValueError, match="integer"):
+            FitConfig(max_iter=2.5)
+        with pytest.raises(ValueError, match="integer"):
+            FitConfig(seed=0.5)
+
+
+# ----------------------------------------------------------------------
+# sample_weight is array-path-only (single actionable error)
+# ----------------------------------------------------------------------
+
+class TestSampleWeightRule:
+    def test_facade_source_weight_error_is_actionable(self, data):
+        x, _, _ = data
+        src = ArraySource(jnp.asarray(x))
+        w = jnp.ones(len(x))
+        for est in (GMMEstimator(3), KMeansEstimator(3)):
+            with pytest.raises(ValueError) as ei:
+                est.fit(src, sample_weight=w)
+            msg = str(ei.value)
+            # the one message: names the rule AND the ragged-shard fix
+            assert "array" in msg and "ConcatSource" in msg
+
+    def test_scorers_enforce_the_same_rule(self, data):
+        x, _, _ = data
+        est = GMMEstimator(3, max_iter=5).fit(jnp.asarray(x))
+        src = ArraySource(jnp.asarray(x))
+        with pytest.raises(ValueError, match="ConcatSource"):
+            score(est.gmm_, src, sample_weight=jnp.ones(len(x)))
+        with pytest.raises(ValueError, match="ConcatSource"):
+            bic(est.gmm_, src, sample_weight=jnp.ones(len(x)))
+
+
+# ----------------------------------------------------------------------
+# Input-type dispatch
+# ----------------------------------------------------------------------
+
+class TestDispatch:
+    def test_single_model_estimators_reject_client_containers(self, split,
+                                                              shards):
+        with pytest.raises(TypeError, match="GMMEstimator.fit accepts"):
+            GMMEstimator(3).fit(split)
+        with pytest.raises(TypeError, match="KMeansEstimator.fit accepts"):
+            KMeansEstimator(3).fit(shards)
+
+    def test_federated_runners_reject_single_inputs(self, data):
+        x, _, _ = data
+        with pytest.raises(TypeError, match="FedGenGMM.run accepts"):
+            FedGenGMM(k_clients=3, k_global=3).run(jnp.asarray(x))
+        with pytest.raises(TypeError, match="DEM.run accepts"):
+            DEM(3).run(ArraySource(jnp.asarray(x)))
+
+    def test_mixed_list_is_rejected_with_guidance(self, data):
+        x, _, _ = data
+        with pytest.raises(TypeError, match="ArraySource"):
+            FedGenGMM(k_clients=3, k_global=3).run([np.asarray(x[:100]),
+                                                    np.asarray(x[100:])])
+
+    def test_empty_client_list_names_the_real_problem(self):
+        with pytest.raises(TypeError, match="least one client"):
+            FedGenGMM(k_clients=3, k_global=3).run([])
+        with pytest.raises(TypeError, match="least one client"):
+            DEM(3).run([])
+        # non-federated facades must not steer toward client lists
+        with pytest.raises(TypeError, match=r"array or a DataSource"):
+            GMMEstimator(3).fit([])
+
+    def test_facade_scalars_reject_non_integral(self):
+        with pytest.raises(ValueError, match="k must be an integer"):
+            KMeansEstimator(3.7)
+        with pytest.raises(ValueError, match="n_init"):
+            KMeansEstimator(3, n_init=2.9)
+        with pytest.raises(ValueError, match="k must be an integer"):
+            GMMEstimator(3.5)
+        with pytest.raises(ValueError, match="h must be an integer"):
+            FedGenGMM(k_clients=3, k_global=3, h=50.5)
+        with pytest.raises(ValueError, match="k must be an integer"):
+            DEM(2.5)
+
+    def test_nonempty_list_error_respects_accept_set(self):
+        with pytest.raises(TypeError, match=r"array or a DataSource"):
+            GMMEstimator(2).fit([[0.0, 1.0], [2.0, 3.0]])
+
+    def test_init_strategy_validated_per_estimator(self):
+        with pytest.raises(ValueError, match="k-means init"):
+            FedGenGMM(k_clients=3, k_global=3, init="pilot")
+        with pytest.raises(ValueError, match="single-model GMM init"):
+            DEM(3, init="kmeans")
+        with pytest.raises(ValueError, match="'auto' or 'kmeans'"):
+            GMMEstimator(3, init="separated")
+
+    def test_seed_stays_out_of_the_jit_cache_key(self, split):
+        """config.seed only feeds key derivation, never the traced graph:
+        sweeping seeds through the facade must not recompile the vmap'd
+        local-EM loop once per seed."""
+        from repro.core.fedgen import _train_locals_jit
+        if not hasattr(_train_locals_jit, "_cache_size"):
+            pytest.skip("jit cache introspection not available")
+        before = _train_locals_jit._cache_size()
+        for seed in (101, 102):
+            FedGenGMM(k_clients=2, k_global=2, h=10, seed=seed,
+                      max_iter=3).run(split)
+        grown = _train_locals_jit._cache_size() - before
+        assert grown <= 1, f"seed sweep added {grown} cache entries"
+
+    def test_seed_policy(self, data):
+        """config.seed drives the PRNG unless an explicit key is passed."""
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        a = GMMEstimator(3, seed=9, max_iter=5).fit(xj)
+        b = GMMEstimator(3, max_iter=5).fit(xj, key=jax.random.key(9))
+        assert_same_gmm(a.gmm_, b.gmm_)
+
+
+# ----------------------------------------------------------------------
+# Bit-identity: facade == legacy entry points (array AND source inputs)
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestFacadeBitIdentity:
+    def test_gmm_array(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        ref = fit_gmm(jax.random.key(0), xj, 3)
+        est = GMMEstimator(3).fit(xj, key=jax.random.key(0))
+        assert_same_gmm(ref.gmm, est.gmm_)
+        assert int(ref.n_iter) == int(est.result_.n_iter)
+
+    def test_gmm_array_chunked(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        ref = fit_gmm(jax.random.key(0), xj, 3, chunk_size=CHUNK)
+        est = GMMEstimator(3, chunk_size=CHUNK).fit(xj, key=jax.random.key(0))
+        assert_same_gmm(ref.gmm, est.gmm_)
+
+    def test_gmm_source(self, data):
+        x, _, _ = data
+        src = ArraySource(jnp.asarray(x))
+        ref = fit_gmm(jax.random.key(0), src, 3, chunk_size=CHUNK)
+        est = GMMEstimator(3, chunk_size=CHUNK).fit(src,
+                                                    key=jax.random.key(0))
+        assert_same_gmm(ref.gmm, est.gmm_)
+
+    def test_gmm_bic_selection(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        ref, bics_ref = fit_gmm_bic(jax.random.key(1), xj, [2, 3])
+        est = GMMEstimator(k_candidates=[2, 3]).fit(xj, key=jax.random.key(1))
+        assert_same_gmm(ref.gmm, est.gmm_)
+        assert est.bics_ == bics_ref
+
+    def test_kmeans_array(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        ref = kmeans(jax.random.key(2), xj, 3, max_iter=100, tol=1e-4)
+        est = KMeansEstimator(3, max_iter=100, tol=1e-4).fit(
+            xj, key=jax.random.key(2))
+        np.testing.assert_array_equal(np.asarray(ref.centers),
+                                      np.asarray(est.centers_))
+        np.testing.assert_array_equal(np.asarray(ref.assignments),
+                                      np.asarray(est.assignments_))
+
+    def test_fedgen_split(self, split):
+        ref = fedgengmm(jax.random.key(3), split, k_clients=3, k_global=3,
+                        h=40)
+        fr = FedGenGMM(k_clients=3, k_global=3, h=40).run(
+            split, key=jax.random.key(3))
+        assert_same_gmm(ref.global_gmm, fr.global_gmm)
+        assert ref.comm == fr.comm
+
+    def test_dem_split(self, split):
+        ref = dem_legacy(jax.random.key(4), split, 3, init=3, max_rounds=30)
+        dr = DEM(3, max_iter=30).run(split, key=jax.random.key(4))
+        assert_same_gmm(ref.global_gmm, dr.global_gmm)
+        assert int(ref.n_rounds) == int(dr.n_rounds)
+
+
+# ----------------------------------------------------------------------
+# covariance_type threading (regression class for the PR-1
+# train_locals_bic covariance drop)
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestCovarianceThreading:
+    """Every facade entry point must carry covariance_type end to end:
+    'full' fits produce (K, d, d) covariances everywhere a model comes
+    back. The PR-1 bug class was a knob silently dropped on one path."""
+
+    @pytest.mark.parametrize("covariance_type,ndim", [("diag", 2),
+                                                      ("full", 3)])
+    def test_gmm_array_and_source(self, data, covariance_type, ndim):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        cfg = FitConfig(covariance_type=covariance_type, max_iter=10,
+                        chunk_size=CHUNK)
+        for inp in (xj, ArraySource(xj)):
+            est = GMMEstimator(2, config=cfg).fit(inp)
+            assert est.gmm_.covs.ndim == ndim
+            assert est.gmm_.is_diagonal == (covariance_type == "diag")
+
+    @pytest.mark.parametrize("covariance_type,ndim", [("diag", 2),
+                                                      ("full", 3)])
+    def test_gmm_bic_path(self, data, covariance_type, ndim):
+        """The original PR-1 regression: train_locals_bic dropped
+        covariance_type on the BIC-selection path."""
+        x, _, _ = data
+        est = GMMEstimator(k_candidates=[2],
+                           covariance_type=covariance_type,
+                           max_iter=10).fit(jnp.asarray(x))
+        assert est.gmm_.covs.ndim == ndim
+
+    @pytest.mark.parametrize("covariance_type,ndim", [("diag", 2),
+                                                      ("full", 3)])
+    def test_fedgen_split_and_sources(self, split, shards, covariance_type,
+                                      ndim):
+        fed = FedGenGMM(k_clients=2, k_global=2, h=20,
+                        covariance_type=covariance_type, max_iter=10,
+                        chunk_size=CHUNK)
+        for clients in (split, shards):
+            fr = fed.run(clients)
+            assert fr.global_gmm.covs.ndim == ndim
+            assert all(g.covs.ndim == ndim for g in fr.local_gmms)
+
+    @pytest.mark.parametrize("covariance_type,ndim", [("diag", 2),
+                                                      ("full", 3)])
+    def test_dem_split_and_sources(self, split, shards, covariance_type,
+                                   ndim):
+        runner = DEM(2, covariance_type=covariance_type, max_iter=8,
+                     chunk_size=CHUNK)
+        for clients in (split, shards):
+            dr = runner.run(clients)
+            assert dr.global_gmm.covs.ndim == ndim
+
+    def test_fedgen_bic_clients_keep_covariance(self, split):
+        """Heterogeneous-K clients (the exact PR-1 bug site) under the
+        facade: per-client BIC selection must not drop 'full'."""
+        fr = FedGenGMM(k_candidates=[2], k_global=2, h=20,
+                       covariance_type="full", max_iter=10).run(split)
+        assert all(not g.is_diagonal for g in fr.local_gmms)
+        assert not fr.global_gmm.is_diagonal
+
+
+# ----------------------------------------------------------------------
+# Deprecation shims: old call sites warn AND stay bit-identical
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestDeprecationShims:
+    def test_fit_gmm_streaming_forwards_bit_identically(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        with pytest.warns(DeprecationWarning, match="GMMEstimator"):
+            old = fit_gmm_streaming(jax.random.key(0), xj, 3,
+                                    chunk_size=CHUNK)
+        new = GMMEstimator(3, chunk_size=CHUNK).fit(xj,
+                                                    key=jax.random.key(0))
+        assert_same_gmm(old.gmm, new.gmm_)
+        assert int(old.n_iter) == int(new.result_.n_iter)
+
+    def test_fedgengmm_from_sources_forwards_bit_identically(self, shards):
+        with pytest.warns(DeprecationWarning, match="FedGenGMM"):
+            old = fedgengmm_from_sources(jax.random.key(1), shards,
+                                         k_clients=2, k_global=2, h=20,
+                                         chunk_size=CHUNK)
+        new = FedGenGMM(k_clients=2, k_global=2, h=20,
+                        chunk_size=CHUNK).run(shards, key=jax.random.key(1))
+        assert_same_gmm(old.global_gmm, new.global_gmm)
+
+    def test_dem_from_sources_forwards_bit_identically(self, shards):
+        with pytest.warns(DeprecationWarning, match="DEM"):
+            old = dem_from_sources(jax.random.key(2), shards, 2, init=1,
+                                   max_rounds=10, chunk_size=CHUNK)
+        new = DEM(2, init="separated", max_iter=10,
+                  chunk_size=CHUNK).run(shards, key=jax.random.key(2))
+        assert_same_gmm(old.global_gmm, new.global_gmm)
+        assert old.comm == new.comm
+
+
+# ----------------------------------------------------------------------
+# Facade scoring helpers
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestScoringHelpers:
+    def test_score_log_prob_bic_match_model_methods(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        est = GMMEstimator(3, max_iter=10).fit(xj)
+        g = est.gmm_
+        np.testing.assert_allclose(float(score(g, xj)), float(g.score(xj)),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(bic(g, xj)), float(g.bic(xj)),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(log_prob(g, xj)),
+                                   np.asarray(g.log_prob(xj)), rtol=1e-5)
+
+    def test_scorers_accept_sources(self, data):
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        est = GMMEstimator(3, max_iter=10, chunk_size=CHUNK).fit(xj)
+        src = ConcatSource([ArraySource(xj[:701]), ArraySource(xj[701:])])
+        cfg = FitConfig(chunk_size=CHUNK)
+        np.testing.assert_allclose(
+            float(score(est.gmm_, src, config=cfg)),
+            float(score(est.gmm_, xj, config=cfg)), rtol=1e-6)
+        assert log_prob(est.gmm_, src, config=cfg).shape == (len(x),)

@@ -1,0 +1,93 @@
+"""Public-API snapshot: the ``repro.api`` surface and the ``FitConfig``
+field table are frozen here so accidental drift fails the tier-1 lane.
+
+Growing the surface is fine — do it deliberately by updating BOTH the
+code and these snapshots (and DESIGN.md §8, which documents the same
+table). Removing or renaming anything here is a breaking change to every
+facade caller (examples, benchmarks, downstream scenarios) and must say
+so in the PR.
+"""
+import dataclasses
+import inspect
+
+import repro.api as api
+from repro.api import DEM, FedGenGMM, FitConfig, GMMEstimator, KMeansEstimator
+
+# The one public surface (DESIGN.md §8). Sorted to make diffs readable.
+EXPECTED_EXPORTS = sorted([
+    "FitConfig",
+    "GMMEstimator",
+    "KMeansEstimator",
+    "FedGenGMM",
+    "DEM",
+    "score",
+    "log_prob",
+    "bic",
+    "DEFAULT_SOURCE_CHUNK",
+])
+
+# FitConfig field table: (name, default) in declaration order — the §8
+# contract. A changed default silently changes every facade fit, so it is
+# pinned as hard as the names.
+EXPECTED_FITCONFIG_FIELDS = [
+    ("backend", "auto"),
+    ("chunk_size", "auto"),
+    ("covariance_type", "diag"),
+    ("reg_covar", 1e-6),
+    ("tol", 1e-3),
+    ("max_iter", 200),
+    ("init", "auto"),
+    ("seed", 0),
+]
+
+
+class TestSurface:
+    def test_all_matches_snapshot(self):
+        assert sorted(api.__all__) == EXPECTED_EXPORTS
+
+    def test_exports_resolve(self):
+        for name in api.__all__:
+            assert getattr(api, name, None) is not None, name
+
+    def test_no_extra_public_names(self):
+        """Anything public-looking in the module must be declared in
+        __all__ — the facade cannot grow a shadow surface."""
+        public = {n for n in dir(api)
+                  if not n.startswith("_") and n not in ("estimators",)}
+        # submodule imports that back the package are not surface
+        assert public - set(api.__all__) == set()
+
+
+class TestFitConfigFields:
+    def test_field_table(self):
+        fields = [(f.name, f.default) for f in dataclasses.fields(FitConfig)]
+        assert fields == EXPECTED_FITCONFIG_FIELDS
+
+    def test_frozen_and_hashable(self):
+        cfg = FitConfig()
+        try:
+            cfg.tol = 1.0
+            raise AssertionError("FitConfig must be frozen")
+        except dataclasses.FrozenInstanceError:
+            pass
+        assert hash(FitConfig(chunk_size=64)) == hash(FitConfig(chunk_size=64))
+        assert FitConfig() == FitConfig()
+
+
+class TestFacadeShape:
+    """The estimator-style contract every future scenario PR plugs into."""
+
+    def test_fit_signatures(self):
+        for cls in (GMMEstimator, KMeansEstimator):
+            params = inspect.signature(cls.fit).parameters
+            assert "data" in params and "key" in params
+            assert "sample_weight" in params
+
+    def test_run_signatures(self):
+        for cls in (FedGenGMM, DEM):
+            params = inspect.signature(cls.run).parameters
+            assert "clients" in params and "key" in params
+
+    def test_constructors_take_config(self):
+        for cls in (GMMEstimator, KMeansEstimator, FedGenGMM, DEM):
+            assert "config" in inspect.signature(cls.__init__).parameters

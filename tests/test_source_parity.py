@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import dem, dem_from_sources, fedgengmm_from_sources
+from repro.api import DEM, FedGenGMM
+from repro.core import dem
 from repro.core.em import (bic_streaming, e_step_stats, fit_gmm, fit_gmm_bic,
                            init_from_kmeans, init_from_means,
                            log_prob_chunked, score_streaming)
@@ -146,8 +147,8 @@ class TestFederatedSources:
         x, _ = setup
         cuts = [0, 450, 1300, 1999, 3000]
         sources = [ArraySource(x[a:b]) for a, b in zip(cuts, cuts[1:])]
-        fr = fedgengmm_from_sources(jax.random.key(0), sources, k_clients=3,
-                                    k_global=3, h=40, chunk_size=CHUNK)
+        fr = FedGenGMM(k_clients=3, k_global=3, h=40,
+                       chunk_size=CHUNK).run(sources, key=jax.random.key(0))
         bench = fit_gmm(jax.random.key(1), jnp.asarray(x), 3)
         ll_fed = float(fr.global_gmm.score(jnp.asarray(x)))
         ll_cen = float(bench.gmm.score(jnp.asarray(x)))
@@ -156,7 +157,7 @@ class TestFederatedSources:
         assert fr.synthetic.num_rows == 40 * 3 * 4
         assert fr.comm.rounds == 1
 
-    def test_dem_from_sources_matches_resident_dem(self, setup):
+    def test_dem_on_sources_matches_resident_dem(self, setup):
         from repro.core.partition import ClientSplit
         x, _ = setup
         cuts = [0, 800, 1600, 2400, 3000]
@@ -171,18 +172,19 @@ class TestFederatedSources:
         split = ClientSplit(data, mask,
                             np.array([len(s) for s in shards]),
                             np.zeros((4, 1), np.int64))
-        dr_src = dem_from_sources(jax.random.key(0), sources, 3, init=1,
-                                  chunk_size=CHUNK)
+        dr_src = DEM(3, init="separated",
+                     chunk_size=CHUNK).run(sources, key=jax.random.key(0))
         dr_res = dem(jax.random.key(0), split, 3, init=1)
         assert bool(dr_src.converged)
         np.testing.assert_allclose(float(dr_src.log_likelihood),
                                    float(dr_res.log_likelihood), atol=5e-3)
         assert dr_src.comm.rounds == int(dr_src.n_rounds)
 
-    def test_dem_from_sources_rejects_pilot_init(self, setup):
+    def test_dem_rejects_pilot_init_on_sources(self, setup):
         x, _ = setup
-        with pytest.raises(ValueError, match="init 2"):
-            dem_from_sources(jax.random.key(0), [ArraySource(x)], 3, init=2)
+        with pytest.raises(ValueError, match="pilot"):
+            DEM(3, init="pilot").run([ArraySource(x)],
+                                     key=jax.random.key(0))
 
 
 class _WorkingSetSpy(DataSource):

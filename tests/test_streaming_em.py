@@ -5,8 +5,8 @@ Three equivalence claims, each load-bearing for the hot-path rewiring:
      including odd shapes that are not multiples of the kernel tile sizes;
   2. the chunked (lax.scan) E-step == full-batch E-step for any chunk size,
      including chunk sizes that do not divide N;
-  3. full training runs (fit_gmm / fit_gmm_streaming / fedgengmm /
-     dem_sharded) are backend- and chunking-invariant.
+  3. full training runs (fit_gmm / the streaming GMMEstimator facade /
+     fedgengmm / dem_sharded) are backend- and chunking-invariant.
 Plus the regression test for train_locals_bic dropping covariance_type.
 """
 import jax
@@ -15,9 +15,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as hst
 
+from repro.api import GMMEstimator
 from repro.core.em import (e_step_stats, e_step_stats_chunked, fit_gmm,
-                           fit_gmm_streaming, init_from_kmeans,
-                           resolve_estep_backend)
+                           init_from_kmeans, resolve_estep_backend)
 from repro.core.fedgen import fedgengmm, train_locals_bic
 from repro.core.gmm import GMM
 from repro.core.partition import partition
@@ -146,27 +146,29 @@ class TestEndToEndParity:
                                    rtol=1e-3, atol=1e-3)
 
     @pytest.mark.parametrize("chunk_size", [128, 500, 4096])
-    def test_fit_gmm_streaming_matches_reference(self, planted, chunk_size):
+    def test_streaming_facade_matches_reference(self, planted, chunk_size):
         x, _, _ = planted
         xj = jnp.asarray(x)
         ref = fit_gmm(jax.random.key(0), xj, 3)
-        stream = fit_gmm_streaming(jax.random.key(0), xj, 3,
-                                   chunk_size=chunk_size,
-                                   estep_backend="reference")
+        stream = GMMEstimator(3, chunk_size=chunk_size,
+                              backend="reference").fit(
+            xj, key=jax.random.key(0)).result_
         assert abs(float(ref.log_likelihood) - float(stream.log_likelihood)) \
             < 1e-4
         np.testing.assert_allclose(np.asarray(ref.gmm.means),
                                    np.asarray(stream.gmm.means),
                                    rtol=1e-3, atol=1e-3)
 
-    def test_fit_gmm_streaming_chunk_invariance(self, planted):
+    def test_streaming_facade_chunk_invariance(self, planted):
         """End-to-end invariance to chunk_size with the chunked init path:
         k-means, label stats and EM all stream, and any two chunkings
         agree up to float-summation reordering."""
         x, _, _ = planted
         xj = jnp.asarray(x)
-        a = fit_gmm_streaming(jax.random.key(5), xj, 3, chunk_size=128)
-        b = fit_gmm_streaming(jax.random.key(5), xj, 3, chunk_size=1024)
+        a = GMMEstimator(3, chunk_size=128).fit(
+            xj, key=jax.random.key(5)).result_
+        b = GMMEstimator(3, chunk_size=1024).fit(
+            xj, key=jax.random.key(5)).result_
         assert abs(float(a.log_likelihood) - float(b.log_likelihood)) < 1e-4
         np.testing.assert_allclose(np.asarray(a.gmm.means),
                                    np.asarray(b.gmm.means),
