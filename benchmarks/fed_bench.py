@@ -1,0 +1,176 @@
+"""Accuracy-vs-communication across the four federation strategies
+(DESIGN.md §9) — the paper's comm-overhead argument as a tracked artifact.
+
+One planted mixture is partitioned over clients with Dirichlet
+heterogeneity, then every strategy the runtime serves — one-shot
+``FedGenGMM``, iterative ``DEM``, ``FedEM`` (partial participation +
+local epochs, Tian et al.) and ``FedKMeans`` (per-center label stats,
+Garst et al.) — trains through ``repro.api`` on the SAME split. Each row
+reports model quality next to the realized communication ledger, so the
+headline claim (one round of parameter blocks vs hundreds of rounds of
+sufficient statistics at comparable fit) is a number, not prose.
+
+In full mode (standalone ``python benchmarks/fed_bench.py``) the results
+are written to ``BENCH_comm.json`` (repo root) in machine-readable form:
+
+    {"backend", "setting": {n, d, k, clients, alpha, scheme},
+     "strategies": {name: {metric, value, rounds, uplink_floats,
+                           downlink_floats, payload_mb, seconds}}}
+
+``payload_mb`` comes from the dtype-aware ledger
+(``CommStats.total_mb``), so an f64 run doubles the wire volume at
+identical float counts. GMM strategies report ``avg_loglik`` on the
+training union (Eq. 2); FedKMeans has no likelihood and reports
+``inertia_per_row`` (lower is better) — the ``metric`` field names the
+unit so downstream tooling never compares across meanings.
+
+Quick (CI) mode scales down and prints rows only; ``--dry-run`` shrinks
+to tiny N / capped rounds and *validates the report schema* instead of
+recording timings — that is what the CI bench-smoke lane runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import (DEM, FedEM, FedGenGMM, FedKMeans, FitConfig, score)
+from repro.core.partition import partition
+
+N_FULL, N_QUICK, N_DRY = 20_000, 4_000, 512
+D, K, CLIENTS, ALPHA = 8, 5, 8, 0.5
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_comm.json"
+
+STRATEGIES = ("fedgen", "dem", "fedem", "fedkmeans")
+ROW_FIELDS = ("metric", "value", "rounds", "uplink_floats",
+              "downlink_floats", "payload_mb", "seconds")
+
+
+def validate_report(report: dict) -> None:
+    """Schema gate for the tracked JSON; raises ValueError listing every
+    violation rather than stopping at the first."""
+    problems = []
+    for field in ("backend", "setting", "strategies"):
+        if field not in report:
+            problems.append(f"missing top-level field {field!r}")
+    setting = report.get("setting", {})
+    for field in ("n", "d", "k", "clients"):
+        if not isinstance(setting.get(field), int):
+            problems.append(f"setting.{field} must be an int")
+    if not isinstance(setting.get("alpha"), (int, float)):
+        problems.append("setting.alpha must be a number")
+    strategies = report.get("strategies", {})
+    missing = set(STRATEGIES) - set(strategies)
+    if missing:
+        problems.append(f"missing strategies: {sorted(missing)}")
+    for name, row in strategies.items():
+        if row.get("metric") not in ("avg_loglik", "inertia_per_row"):
+            problems.append(f"strategies.{name}.metric must name the "
+                            f"quality unit, got {row.get('metric')!r}")
+        for field in ("value",):
+            if not isinstance(row.get(field), (int, float)):
+                problems.append(f"strategies.{name}.{field} must be a "
+                                f"number, got {row.get(field)!r}")
+        for field in ("rounds", "uplink_floats", "downlink_floats"):
+            v = row.get(field)
+            if not isinstance(v, int) or v < 0:
+                problems.append(f"strategies.{name}.{field} must be a "
+                                f"non-negative int, got {v!r}")
+        for field in ("payload_mb", "seconds"):
+            v = row.get(field)
+            if not isinstance(v, (int, float)) or v < 0:
+                problems.append(f"strategies.{name}.{field} must be a "
+                                f"non-negative number, got {v!r}")
+    if problems:
+        raise ValueError("BENCH_comm.json schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def _ledger_row(metric: str, value: float, comm, seconds: float) -> dict:
+    return {
+        "metric": metric,
+        "value": round(float(value), 5),
+        "rounds": int(comm.rounds),
+        "uplink_floats": int(comm.uplink_floats),
+        "downlink_floats": int(comm.downlink_floats),
+        "payload_mb": round(comm.total_mb, 6),
+        "seconds": round(seconds, 3),
+    }
+
+
+def run(quick: bool = True, dry_run: bool = False) -> list[str]:
+    n = N_DRY if dry_run else (N_QUICK if quick else N_FULL)
+    max_iter = 5 if dry_run else 100
+    rng = np.random.default_rng(0)
+    mus = rng.normal(0, 5, (K, D)).astype(np.float32)
+    y = rng.integers(0, K, n)
+    x = (mus[y] + rng.normal(0, 0.6, (n, D))).astype(np.float32)
+    split = partition(np.random.default_rng(1), x, y, CLIENTS,
+                      "dirichlet", ALPHA)
+    xj = jnp.asarray(x)
+    cfg = FitConfig(max_iter=max_iter)
+    key = jax.random.key(0)
+
+    def loglik(gmm):
+        return float(score(gmm, xj, config=cfg))
+
+    runners = {
+        "fedgen": lambda: FedGenGMM(k_clients=K, k_global=K, h=40,
+                                    config=cfg).run(
+            split, key=jax.random.fold_in(key, 0)),
+        "dem": lambda: DEM(K, config=cfg).run(
+            split, key=jax.random.fold_in(key, 1)),
+        "fedem": lambda: FedEM(K, participation=0.5, local_epochs=2,
+                               config=cfg).run(
+            split, key=jax.random.fold_in(key, 2)),
+        "fedkmeans": lambda: FedKMeans(K, config=cfg).run(
+            split, key=jax.random.fold_in(key, 3)),
+    }
+
+    report = {
+        "backend": jax.default_backend(),
+        "setting": {"n": n, "d": D, "k": K, "clients": CLIENTS,
+                    "alpha": ALPHA, "scheme": "dirichlet"},
+        "strategies": {},
+    }
+    rows = []
+    for name, runner in runners.items():
+        t0 = time.time()
+        res = runner()
+        secs = time.time() - t0
+        if name == "fedkmeans":
+            row = _ledger_row("inertia_per_row", float(res.inertia) / n,
+                              res.comm, secs)
+        else:
+            row = _ledger_row("avg_loglik", loglik(res.global_gmm),
+                              res.comm, secs)
+        report["strategies"][name] = row
+        rows.append(f"fed_comm/{name}/N{n}d{D}K{K}c{CLIENTS}a{ALPHA},"
+                    f"{secs * 1e6:.0f},{row['rounds']}r "
+                    f"{row['payload_mb']:.4f}MB {row['metric']}="
+                    f"{row['value']:.4f}")
+    validate_report(report)
+    if dry_run:
+        rows.append("# dry-run: report schema OK, numbers are placeholders")
+        return rows
+    if not quick:
+        JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--dry-run", action="store_true",
+                        help="tiny-N schema-validation mode (CI bench-smoke "
+                             "lane): runs all four strategies, validates "
+                             "the report schema, writes nothing")
+    cli = parser.parse_args()
+    for r in run(quick=cli.dry_run, dry_run=cli.dry_run):
+        print(r)
+    if not cli.dry_run:
+        print(f"# wrote {JSON_PATH}")

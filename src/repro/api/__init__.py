@@ -1,25 +1,31 @@
-"""repro.api — THE public estimator surface (DESIGN.md §8).
+"""repro.api — THE public estimator surface (DESIGN.md §8/§9).
 
 One frozen, validated :class:`FitConfig` carries every training knob
-(backend, chunk_size, covariance_type, reg_covar, tol, max_iter, init
-strategy, seed policy); four facades dispatch on the input type (resident
-array · DataSource · ClientSplit · list of sources), so the parallel
-``*_streaming`` / ``*_source`` / ``*_from_sources`` entry-point families
-are internal details:
+(backend, chunk_size, covariance_type, reg_covar, tol/max_iter with
+per-algorithm "auto" resolution, init strategy, seed policy); the facades
+dispatch on the input type (resident array · DataSource · ClientSplit ·
+list of sources), so the parallel ``*_streaming`` / ``*_source`` /
+``*_from_sources`` entry-point families are internal details:
 
     from repro.api import FitConfig, GMMEstimator, FedGenGMM
 
     est = GMMEstimator(k=8, chunk_size=65536).fit(NpyFileSource("x.npy"))
     fed = FedGenGMM(k_clients=4, k_global=4).run(split)
 
+The federated runners — one-shot :class:`FedGenGMM` and the iterative
+baselines :class:`DEM`, :class:`FedEM`, :class:`FedKMeans` — all run on
+the §9 federation runtime and return results carrying a dtype-aware
+communication ledger; :func:`fit_federated` is the ``strategy=`` seam
+(named strategies or a custom ``repro.fed.FederationStrategy``).
 ``score`` / ``log_prob`` / ``bic`` are the matching model-level scorers.
 Everything below this package (``repro.core.*`` entry points included) is
 internal; ``tests/test_api_surface.py`` snapshots this surface so drift
 fails CI.
 """
 from repro.core.config import DEFAULT_SOURCE_CHUNK, FitConfig
-from repro.api.estimators import (DEM, FedGenGMM, GMMEstimator,
-                                  KMeansEstimator, bic, log_prob, score)
+from repro.api.estimators import (DEM, FedEM, FedGenGMM, FedKMeans,
+                                  GMMEstimator, KMeansEstimator, bic,
+                                  fit_federated, log_prob, score)
 
 __all__ = [
     "FitConfig",
@@ -27,6 +33,9 @@ __all__ = [
     "KMeansEstimator",
     "FedGenGMM",
     "DEM",
+    "FedEM",
+    "FedKMeans",
+    "fit_federated",
     "score",
     "log_prob",
     "bic",

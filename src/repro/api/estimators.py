@@ -40,6 +40,10 @@ from repro.core.fedgen import FedGenResult, fedgengmm_cfg
 from repro.core.gmm import GMM
 from repro.core.kmeans import KMeansResult, kmeans_fit_cfg
 from repro.core.partition import ClientSplit
+from repro.fed.runtime import FederationStrategy, run_rounds
+from repro.fed.strategies import (FedEMResult, FedKMeansResult,
+                                  _resolve_fedkmeans_init, fed_kmeans_cfg,
+                                  fedem_cfg)
 
 
 def _make_config(config: Optional[FitConfig], overrides: dict) -> FitConfig:
@@ -386,3 +390,134 @@ class DEM:
         if self.result_ is None:
             raise RuntimeError("runner has no result; call run() first")
         return self.result_.global_gmm
+
+
+class FedEM:
+    """Iterative federated EM (Tian et al.): per round, each participating
+    client runs ``local_epochs`` local EM steps from the broadcast
+    parameters and ships sufficient statistics; the server M-steps. With
+    the default knobs this IS the DEM baseline bit for bit; the knobs are
+    what stage the paper's accuracy-vs-communication comparison under
+    realistic client availability.
+
+    ``run(clients)`` dispatches like :class:`DEM` (ClientSplit or list of
+    per-client DataSources; the sharded-mesh variant is
+    ``repro.distributed.fedem_sharded``). ``participation`` in (0, 1] is
+    the per-round cohort fraction (cyclic, deterministic, never empty);
+    ``local_epochs >= 1`` the client-side EM steps per round. Init comes
+    from ``FitConfig.init`` exactly as in DEM. Returns a
+    :class:`repro.fed.strategies.FedEMResult` with the populated
+    cohort-sized communication ledger.
+    """
+
+    def __init__(self, k: int, *, participation: float = 1.0,
+                 local_epochs: int = 1,
+                 config: Optional[FitConfig] = None, **overrides):
+        self.k = _as_int(k, "k")
+        if not 0.0 < float(participation) <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {participation}")
+        self.participation = float(participation)
+        self.local_epochs = _as_int(local_epochs, "local_epochs")
+        self.config = _make_config(config, overrides)
+        # same strategy rule as DEM: validate the init scheme name now,
+        # resolve "auto" per input type at run()
+        _resolve_init(self.config.init, sources=False)
+        self.result_: Optional[FedEMResult] = None
+
+    def run(self, clients, *, key: Optional[jax.Array] = None) -> FedEMResult:
+        _classify(clients, "FedEM.run", ("split", "sources"))
+        key = _resolve_key(key, self.config)
+        self.result_ = fedem_cfg(key, clients, self.config, self.k,
+                                 participation=self.participation,
+                                 local_epochs=self.local_epochs)
+        return self.result_
+
+    @property
+    def global_gmm_(self) -> GMM:
+        if self.result_ is None:
+            raise RuntimeError("runner has no result; call run() first")
+        return self.result_.global_gmm
+
+
+class FedKMeans:
+    """Iterative federated k-means (Garst et al.): per round, clients ship
+    per-center label statistics (counts, sums, inertia) against the
+    broadcast centers; the server recombines into new centers and stops on
+    the squared center shift (``FitConfig.tol``, resolving through the
+    k-means defaults — 1e-4 / 100 rounds).
+
+    ``run(clients)`` dispatches like the other federated runners
+    (sharded-mesh variant: ``repro.distributed.fed_kmeans_sharded``).
+    ``FitConfig.init`` is "auto"/"fed-kmeans" (one-shot warm start,
+    Dennis et al. '21) or "separated". Returns a
+    :class:`repro.fed.strategies.FedKMeansResult`.
+    """
+
+    def __init__(self, k: int, *, config: Optional[FitConfig] = None,
+                 **overrides):
+        self.k = _as_int(k, "k")
+        self.config = _make_config(config, overrides)
+        _resolve_fedkmeans_init(self.config.init)
+        self.result_: Optional[FedKMeansResult] = None
+
+    def run(self, clients, *,
+            key: Optional[jax.Array] = None) -> FedKMeansResult:
+        _classify(clients, "FedKMeans.run", ("split", "sources"))
+        key = _resolve_key(key, self.config)
+        self.result_ = fed_kmeans_cfg(key, clients, self.config, self.k)
+        return self.result_
+
+    @property
+    def centers_(self):
+        if self.result_ is None:
+            raise RuntimeError("runner has no result; call run() first")
+        return self.result_.centers
+
+
+# The four named strategies of the §9 runtime, as facade constructors.
+_STRATEGY_RUNNERS = {"fedgen": FedGenGMM, "dem": DEM, "fedem": FedEM,
+                     "fedkmeans": FedKMeans}
+
+
+def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
+                  config: Optional[FitConfig] = None, max_rounds=None,
+                  **kwargs):
+    """THE strategy seam for FitConfig-driven federated runs (§9).
+
+    ``strategy`` is either a name — ``"fedgen"`` | ``"dem"`` | ``"fedem"``
+    | ``"fedkmeans"`` — whose facade is constructed from ``config`` plus
+    the remaining keyword arguments (``k=...``, ``participation=...``,
+    ...), or a custom :class:`repro.fed.FederationStrategy` instance,
+    which runs directly on the round driver (``max_rounds`` then bounds
+    it; default: the config's EM round budget). Scenario PRs plug in
+    HERE: a new baseline is one strategy class, not a new entry-point
+    family.
+    """
+    if isinstance(strategy, str):
+        if strategy not in _STRATEGY_RUNNERS:
+            raise ValueError(
+                f"unknown strategy {strategy!r}; named strategies are "
+                f"{sorted(_STRATEGY_RUNNERS)} (or pass a "
+                f"FederationStrategy instance)")
+        if max_rounds is not None:
+            raise TypeError(
+                "max_rounds is for custom FederationStrategy instances; "
+                "named strategies take FitConfig.max_iter")
+        runner = _STRATEGY_RUNNERS[strategy](config=config, **kwargs)
+        return runner.run(clients, key=key)
+    if not isinstance(strategy, FederationStrategy):
+        raise TypeError(
+            f"strategy must be a name or a FederationStrategy "
+            f"(local_step/server_combine/converged/...), got "
+            f"{type(strategy).__name__}")
+    if kwargs:
+        raise TypeError(
+            f"unknown argument(s) for a custom strategy run: "
+            f"{sorted(kwargs)}")
+    cfg = config if config is not None else FitConfig()
+    if max_rounds is None:
+        max_rounds = 1 if getattr(strategy, "one_shot", False) \
+            else cfg.resolve_max_iter("em")
+    key = _resolve_key(key, cfg)
+    return run_rounds(strategy, clients, key=key, max_rounds=max_rounds)

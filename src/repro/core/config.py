@@ -30,6 +30,14 @@ ENGINE_BACKENDS = ("auto", "reference", "fused")
 COVARIANCE_TYPES = ("diag", "full")
 INIT_STRATEGIES = ("auto", "kmeans", "separated", "pilot", "fed-kmeans")
 
+# Per-algorithm defaults behind tol="auto" / max_iter="auto". The raw
+# k-means entry points always converged on 1e-4 / 100 while EM used
+# 1e-3 / 200; resolving the difference HERE (instead of one shared
+# concrete default) is what lets `KMeansEstimator` match legacy `kmeans`
+# without callers pinning the knobs by hand (the PR-4 caveat).
+TOL_DEFAULTS = {"em": 1e-3, "kmeans": 1e-4}
+MAX_ITER_DEFAULTS = {"em": 200, "kmeans": 100}
+
 # Default block size for DataSource paths when the config says
 # chunk_size="auto" (a source has no full batch to fall back to, so it
 # streams at this granularity instead).
@@ -132,9 +140,14 @@ class FitConfig:
         (it used to silently mean different things per input type).
     covariance_type : "diag" | "full", threaded through init, EM and BIC.
     reg_covar : covariance floor added at every M-step.
-    tol : convergence threshold on the avg-loglik delta (EM/DEM) or the
-        squared center shift (k-means).
-    max_iter : EM iteration / DEM round / Lloyd sweep budget.
+    tol : convergence threshold on the avg-loglik delta (EM/DEM/FedEM) or
+        the squared center shift (k-means/FedKMeans). "auto" resolves per
+        algorithm at config-resolution time (:data:`TOL_DEFAULTS`: 1e-3
+        for the EM family, 1e-4 for k-means — the historical per-entry-
+        point defaults); an explicit float applies everywhere.
+    max_iter : EM iteration / federated round / Lloyd sweep budget.
+        "auto" resolves per algorithm (:data:`MAX_ITER_DEFAULTS`: 200 EM,
+        100 k-means); an explicit int applies everywhere.
     init : init strategy. "auto" resolves per estimator (k-means init for
         GMM fits; DEM picks fed-kmeans for resident splits and separated
         centers for source clients). DEM also accepts the explicit
@@ -151,8 +164,8 @@ class FitConfig:
     chunk_size: Union[int, str] = "auto"
     covariance_type: str = "diag"
     reg_covar: float = 1e-6
-    tol: float = 1e-3
-    max_iter: int = 200
+    tol: Union[float, str] = "auto"
+    max_iter: Union[int, str] = "auto"
     init: str = "auto"
     seed: int = 0
 
@@ -188,18 +201,29 @@ class FitConfig:
                 f"got {self.covariance_type!r}")
         if not float(self.reg_covar) >= 0.0:
             raise ValueError(f"reg_covar must be >= 0, got {self.reg_covar}")
-        if not float(self.tol) >= 0.0:
-            raise ValueError(f"tol must be >= 0, got {self.tol}")
         object.__setattr__(self, "reg_covar", float(self.reg_covar))
-        object.__setattr__(self, "tol", float(self.tol))
+        if isinstance(self.tol, str):
+            if self.tol != "auto":
+                raise ValueError(
+                    f"tol must be 'auto' or a float >= 0, got {self.tol!r}")
+        else:
+            if not float(self.tol) >= 0.0:
+                raise ValueError(f"tol must be >= 0, got {self.tol}")
+            object.__setattr__(self, "tol", float(self.tol))
         # same integral strictness as chunk_size: truncating 2.5
         # iterations would mask division-gone-wrong caller bugs
         mi = self.max_iter
-        if isinstance(mi, bool) or int(mi) != mi:
-            raise ValueError(f"max_iter must be an integer, got {mi!r}")
-        if int(mi) < 1:
-            raise ValueError(f"max_iter must be >= 1, got {mi}")
-        object.__setattr__(self, "max_iter", int(mi))
+        if isinstance(mi, str):
+            if mi != "auto":
+                raise ValueError(
+                    f"max_iter must be 'auto' or an integer >= 1, "
+                    f"got {mi!r}")
+        else:
+            if isinstance(mi, bool) or int(mi) != mi:
+                raise ValueError(f"max_iter must be an integer, got {mi!r}")
+            if int(mi) < 1:
+                raise ValueError(f"max_iter must be >= 1, got {mi}")
+            object.__setattr__(self, "max_iter", int(mi))
         if self.init not in INIT_STRATEGIES:
             raise ValueError(
                 f"init must be one of {INIT_STRATEGIES}, got {self.init!r}")
@@ -230,6 +254,38 @@ class FitConfig:
         if self.chunk_size == "auto":
             return DEFAULT_SOURCE_CHUNK if source else None
         return self.chunk_size
+
+    def resolve_tol(self, algorithm: str = "em") -> float:
+        """Concrete convergence threshold for one algorithm family:
+        "auto" keeps the historical per-entry-point defaults
+        (:data:`TOL_DEFAULTS`), explicit floats pass through."""
+        if self.tol == "auto":
+            if algorithm not in TOL_DEFAULTS:
+                raise ValueError(
+                    f"algorithm must be one of {tuple(TOL_DEFAULTS)}, "
+                    f"got {algorithm!r}")
+            return TOL_DEFAULTS[algorithm]
+        return self.tol
+
+    def resolve_max_iter(self, algorithm: str = "em") -> int:
+        """Concrete iteration/round budget for one algorithm family:
+        "auto" keeps the historical per-entry-point defaults
+        (:data:`MAX_ITER_DEFAULTS`), explicit ints pass through."""
+        if self.max_iter == "auto":
+            if algorithm not in MAX_ITER_DEFAULTS:
+                raise ValueError(
+                    f"algorithm must be one of {tuple(MAX_ITER_DEFAULTS)}, "
+                    f"got {algorithm!r}")
+            return MAX_ITER_DEFAULTS[algorithm]
+        return self.max_iter
+
+    def resolved_for(self, algorithm: str) -> "FitConfig":
+        """A config with tol/max_iter made concrete for one algorithm —
+        the cache-key normalization used where a config rides through jit
+        as a static argument (an "auto" config and its resolved twin must
+        not compile twice)."""
+        return self.replace(tol=self.resolve_tol(algorithm),
+                            max_iter=self.resolve_max_iter(algorithm))
 
     def resolved_backend(self, fused_supported: bool = True) -> str:
         return resolve_backend(self.backend, fused_supported)

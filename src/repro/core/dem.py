@@ -2,7 +2,13 @@
 
 Every client runs the E-step locally and ships sufficient statistics; the
 server aggregates (a psum in the sharded runtime), runs the M-step, and
-broadcasts the new parameters. One EM iteration = one communication round.
+broadcasts the new parameters. One EM iteration = one communication round
+— which makes DEM a one-screen :class:`DEMStrategy` on the federation
+runtime (``repro.fed.runtime``, DESIGN.md §9): ``local_step`` is the
+engine E-step, ``server_combine`` is the M-step plus the avg-loglik
+convergence scalar, and :func:`run_rounds` owns the client loop, the
+round loop and the communication ledger for every input type
+(ClientSplit, list of DataSources, sharded mesh).
 
 Three initializations of the global component centers are reproduced,
 named in :class:`repro.core.config.FitConfig` init-strategy terms:
@@ -12,28 +18,31 @@ named in :class:`repro.core.config.FitConfig` init-strategy terms:
                to the server,
   "fed-kmeans" (init 3) — one-shot federated k-means (Dennis et al. '21).
 
-Clients arrive either as a padded :class:`ClientSplit` or as a list of
-per-client :class:`DataSource` streams; :func:`dem_cfg` dispatches on the
-input type with one validated :class:`FitConfig` and is what
-``repro.api.DEM`` runs.
+:func:`dem_cfg` dispatches on the client input type with one validated
+:class:`FitConfig` and is what ``repro.api.DEM`` runs; its results are
+bit-identical to the pre-runtime round loops (pinned in
+``tests/test_fed_runtime.py``). The iterative FedEM baseline
+(``repro.fed.strategies``) generalizes :class:`DEMStrategy` with
+partial-participation / local-epochs knobs.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
-from functools import partial
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import FitConfig, is_source_list
-from repro.core.em import (SufficientStats, e_step_stats, fit_gmm,
-                           host_em_loop, init_from_means, m_step)
-from repro.core.fedgen import CommStats, payload_floats
+from repro.core.em import (e_step_stats, fit_gmm, init_from_means, m_step)
 from repro.core.gmm import GMM
 from repro.core.kmeans import federated_kmeans
 from repro.core.partition import ClientSplit
 from repro.data.sources import ConcatSource, DataSource
+from repro.fed.ledger import (CommStats, dtype_itemsize, gmm_payload_floats,
+                              RoundPayload, stats_payload_floats)
+from repro.fed.runtime import run_rounds
 
 
 class DEMResult(NamedTuple):
@@ -71,13 +80,6 @@ def _resolve_init(init: str, sources: bool) -> str:
             "strategies are 'separated' | 'pilot' | 'fed-kmeans' (paper "
             "schemes 1/2/3) or 'auto'")
     return init
-
-
-def _stats_floats(k: int, d: int, diagonal: bool) -> int:
-    """Per-round uplink floats of one client's SufficientStats:
-    s0 (k) + s1 (k·d) + s2 (k·d diag / k·d² full) + loglik + wsum."""
-    cov = k * d if diagonal else k * d * d
-    return k + k * d + cov + 2
 
 
 # ----------------------------------------------------------------------
@@ -130,140 +132,168 @@ def fed_kmeans_centers(key: jax.Array, split: ClientSplit, k: int,
 
 
 # ----------------------------------------------------------------------
-# DEM main loop
+# DEM as a federation strategy
 # ----------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_rounds", "estep_backend",
-                                   "chunk_size"))
-def _dem_loop(gmm0: GMM, data: jax.Array, mask: jax.Array, tol: jax.Array,
-              reg_covar: float, max_rounds: int,
-              estep_backend: str = "auto", chunk_size: int | None = None):
-    """data: (C, N, d), mask: (C, N). Aggregation over the client axis is a
-    tree-sum here; in the sharded runtime it is a jax.lax.psum. The
-    full-batch/chunked dispatch lives in the engine (``e_step_stats``)."""
-
-    def global_stats(gmm: GMM) -> SufficientStats:
-        per_client = jax.vmap(
-            lambda x, w: e_step_stats(gmm, x, w, estep_backend, chunk_size))(
-            data, mask)
-        return jax.tree.map(lambda s: jnp.sum(s, axis=0), per_client)
-
-    def cond(state):
-        _, prev_ll, ll, it = state
-        return jnp.logical_and(it < max_rounds, jnp.abs(ll - prev_ll) > tol)
-
-    def body(state):
-        gmm, _, ll, it = state
-        stats = global_stats(gmm)
-        new_gmm = m_step(stats, reg_covar)
-        new_ll = stats.loglik / jnp.maximum(stats.wsum, 1e-12)
-        return new_gmm, ll, new_ll, it + 1
-
-    stats0 = global_stats(gmm0)
-    gmm1 = m_step(stats0, reg_covar)
-    ll0 = stats0.loglik / jnp.maximum(stats0.wsum, 1e-12)
-    neg_inf = jnp.array(-jnp.inf, data.dtype)
-    state = (gmm1, neg_inf, ll0, jnp.array(1))
-    gmm, prev_ll, ll, rounds = jax.lax.while_loop(cond, body, state)
-    converged = jnp.abs(ll - prev_ll) <= tol
-    return gmm, ll, rounds, converged
+class DEMState(NamedTuple):
+    """Round-loop state: the global model plus the convergence scalars.
+    Leaves are jnp under the jitted driver and Python floats on the host
+    (source-client) path, mirroring the engine's ``host_em_loop``
+    semantics; tol/reg_covar ride here as *traced* values so sweeping
+    them never recompiles the loop."""
+    gmm: GMM
+    prev_ll: jax.Array
+    ll: jax.Array
+    tol: jax.Array
+    reg_covar: jax.Array
 
 
-def _dem_split_cfg(key: jax.Array, split: ClientSplit, config: FitConfig,
-                   k: int, init: str) -> DEMResult:
-    """Resident-array DEM round loop (jitted while_loop, tree-sum
-    aggregation)."""
-    data = jnp.asarray(split.data)
-    mask = jnp.asarray(split.mask)
-    d = data.shape[-1]
-    cs = config.resolve_chunk(source=False)
-    k_init, _ = jax.random.split(key)
-    if init == "separated":
-        centers = max_separated_centers(k_init, k, d)
-    elif init == "pilot":
-        centers = pilot_subset_centers(k_init, split, k)
-    else:  # "fed-kmeans" (validated upstream)
-        centers = fed_kmeans_centers(k_init, split, k, chunk_size=cs)
+@dataclasses.dataclass(frozen=True)
+class DEMStrategy:
+    """Distributed EM on the federation runtime: clients ship
+    :class:`~repro.core.em.SufficientStats`, the server M-steps, one EM
+    iteration per communication round. Frozen/hashable so it rides the
+    jitted round driver as a static argument; ``tol``/``reg_covar`` are
+    ``compare=False`` because they enter the computation through the
+    (traced) state, never the cache key."""
 
-    flat = data.reshape(-1, d)
-    flat_w = mask.reshape(-1)
-    gmm0 = init_from_means(centers, flat, flat_w,
-                           covariance_type=config.covariance_type,
-                           reg_covar=config.reg_covar)
-    gmm, ll, rounds, converged = _dem_loop(
-        gmm0, data, mask, jnp.asarray(config.tol, data.dtype),
-        config.reg_covar, config.max_iter, config.backend, cs)
+    k: int
+    covariance_type: str = "diag"
+    backend: str = "auto"            # engine knob (resolved per op)
+    chunk: Optional[int] = None      # resolved for the input type
+    init: str = "fed-kmeans"
+    host: bool = False               # source clients -> host round loop
+    tol: float = dataclasses.field(default=1e-3, compare=False)
+    reg_covar: float = dataclasses.field(default=1e-6, compare=False)
 
-    c = data.shape[0]
-    n_rounds = int(rounds)
-    comm = CommStats(
-        rounds=n_rounds,
-        uplink_floats=n_rounds * c * _stats_floats(k, d, config.is_diagonal),
-        downlink_floats=n_rounds * c * payload_floats(gmm))
-    return DEMResult(gmm, ll, rounds, converged, comm)
+    one_shot = False
+    name = "dem"
 
+    # -- init ----------------------------------------------------------
 
-def _dem_sources_cfg(key: jax.Array, sources: Sequence[DataSource],
-                     config: FitConfig, k: int, init: str) -> DEMResult:
-    """DEM with per-client :class:`DataSource` data (DESIGN.md §7).
+    def init_state(self, key: jax.Array, backend) -> DEMState:
+        k_init, _ = jax.random.split(key)
+        if backend.kind == "sources":
+            d = backend.dim
+            if self.init == "separated":
+                centers = max_separated_centers(k_init, self.k, d)
+            elif self.init == "fed-kmeans":
+                centers = federated_kmeans(k_init, list(backend.sources),
+                                           self.k, chunk_size=self.chunk)
+            else:  # "pilot"
+                raise ValueError(
+                    "DEM init 'pilot' uploads raw rows and needs resident "
+                    "client data; use a ClientSplit for it")
+            union = ConcatSource(backend.sources)
+            gmm0 = init_from_means(centers, union,
+                                   covariance_type=self.covariance_type,
+                                   reg_covar=self.reg_covar,
+                                   chunk_size=self.chunk)
+            return self.state_from_gmm(gmm0)
+        data, mask = backend.data, backend.mask
+        d = data.shape[-1]
+        if self.init == "separated":
+            centers = max_separated_centers(k_init, self.k, d)
+        elif self.init == "pilot":
+            split = getattr(backend, "split", None)
+            if split is None:
+                raise ValueError(
+                    "DEM init 'pilot' needs a ClientSplit (it uploads a "
+                    "raw pilot subset)")
+            centers = pilot_subset_centers(k_init, split, self.k)
+        else:  # "fed-kmeans" (validated upstream)
+            centers = federated_kmeans(k_init, data, self.k,
+                                       client_weights=mask,
+                                       chunk_size=self.chunk)
+        flat = data.reshape(-1, d)
+        flat_w = mask.reshape(-1)
+        gmm0 = init_from_means(centers, flat, flat_w,
+                               covariance_type=self.covariance_type,
+                               reg_covar=self.reg_covar)
+        return self.state_from_gmm(gmm0, dtype=data.dtype)
 
-    Each round, every client streams its own E-step through the engine and
-    ships only ``SufficientStats`` — exactly the resident payload — so the
-    communication pattern is unchanged while no client (nor the server)
-    ever holds O(N) rows. Ragged client sizes need no padding.
-    """
-    d = sources[0].dim
-    cs = config.resolve_chunk(source=True)
-    k_init, _ = jax.random.split(key)
-    if init == "separated":
-        centers = max_separated_centers(k_init, k, d)
-    elif init == "fed-kmeans":
-        centers = federated_kmeans(k_init, list(sources), k, chunk_size=cs)
-    else:  # "pilot" (validated upstream)
-        raise ValueError(
-            "DEM init 'pilot' uploads raw rows and needs resident client "
-            "data; use a ClientSplit for it")
+    def state_from_gmm(self, gmm0: GMM, dtype=None) -> "DEMState":
+        """Round-0 state around an externally built initial model — what
+        ``init_state`` ends in, and what the sharded entry point uses to
+        honor caller-chosen init centers. ``dtype`` (the data dtype) pins
+        the convergence scalars on the jitted path; the host (source)
+        path carries Python floats instead."""
+        if self.host:
+            neg_inf = float("-inf")
+            return self._make_state(gmm0, neg_inf, neg_inf,
+                                    float(self.tol), float(self.reg_covar))
+        neg_inf = jnp.array(-jnp.inf, dtype)
+        return self._make_state(gmm0, neg_inf, neg_inf,
+                                jnp.asarray(self.tol, dtype), self.reg_covar)
 
-    union = ConcatSource(sources)
-    gmm0 = init_from_means(centers, union,
-                           covariance_type=config.covariance_type,
-                           reg_covar=config.reg_covar, chunk_size=cs)
+    def _make_state(self, gmm, prev_ll, ll, tol, reg_covar):
+        return DEMState(gmm, prev_ll, ll, tol, reg_covar)
 
-    def step(gmm: GMM):
-        """One DEM round: per-client streamed stats -> sum -> M-step."""
-        per = [e_step_stats(gmm, src, None, config.backend, cs)
-               for src in sources]
-        stats: SufficientStats = jax.tree.map(lambda *s: sum(s), *per)
-        avg_ll = float(stats.loglik / jnp.maximum(stats.wsum, 1e-12))
-        return m_step(stats, config.reg_covar), avg_ll
+    # -- one round ------------------------------------------------------
 
-    gmm, ll, rounds, converged = host_em_loop(step, gmm0, config.tol,
-                                              config.max_iter)
+    def local_step(self, state: DEMState, x, w, idx):
+        """One client's E-step over its own rows -> SufficientStats (the
+        uplink payload; additive, so backends sum it)."""
+        return e_step_stats(state.gmm, x, w, self.backend, self.chunk)
 
-    c = len(sources)
-    n_rounds = int(rounds)
-    comm = CommStats(
-        rounds=n_rounds,
-        uplink_floats=n_rounds * c * _stats_floats(k, d, config.is_diagonal),
-        downlink_floats=n_rounds * c * payload_floats(gmm))
-    return DEMResult(gmm, ll, rounds, converged, comm)
+    def server_combine(self, state: DEMState, stats) -> DEMState:
+        gmm = m_step(stats, state.reg_covar)
+        ll = stats.loglik / jnp.maximum(stats.wsum, 1e-12)
+        if self.host:
+            ll = float(ll)
+        return self._next_state(state, gmm, ll)
+
+    def _next_state(self, state, gmm, ll):
+        return DEMState(gmm, state.ll, ll, state.tol, state.reg_covar)
+
+    def converged(self, state: DEMState):
+        return abs(state.ll - state.prev_ll) <= state.tol
+
+    def keep_going(self, state: DEMState):
+        """The historical loop predicate, kept distinct from
+        ``converged``: with a NaN loglik (degenerate run) both are false,
+        so the loop stops after one more round AND reports not-converged
+        — exactly the pre-§9 ``_dem_loop`` / ``host_em_loop`` behavior."""
+        return abs(state.ll - state.prev_ll) > state.tol
+
+    # -- accounting / result -------------------------------------------
+
+    def round_payload(self, backend, state) -> RoundPayload:
+        c, d = backend.num_clients, backend.dim
+        diag = self.covariance_type == "diag"
+        return RoundPayload(
+            uplink_floats=c * stats_payload_floats(self.k, d, diag),
+            downlink_floats=c * gmm_payload_floats(self.k, d, diag),
+            itemsize=dtype_itemsize(state.gmm.means.dtype))
+
+    def finalize(self, state: DEMState, n_rounds, converged,
+                 comm: CommStats) -> DEMResult:
+        ll = state.ll
+        if self.host:
+            ll = jnp.asarray(ll, state.gmm.means.dtype)
+        return DEMResult(state.gmm, ll, n_rounds, jnp.asarray(converged),
+                         comm)
 
 
 def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int) -> DEMResult:
     """Run DEM — the cfg-core behind ``repro.api.DEM``, dispatching on the
     client input type (:class:`ClientSplit` vs list of
-    :class:`DataSource`). The init strategy comes from ``config.init``
-    ("auto" resolves to fed-kmeans for splits, separated centers for
-    sources; "pilot" requires resident data — it uploads raw rows)."""
+    :class:`DataSource`) through the federation runtime. The init strategy
+    comes from ``config.init`` ("auto" resolves to fed-kmeans for splits,
+    separated centers for sources; "pilot" requires resident data — it
+    uploads raw rows)."""
     sources = is_source_list(clients)
-    init = _resolve_init(config.init, sources)
-    if sources:
-        return _dem_sources_cfg(key, clients, config, k, init)
-    if isinstance(clients, ClientSplit):
-        return _dem_split_cfg(key, clients, config, k, init)
-    raise TypeError(
-        f"dem clients must be a ClientSplit or a list of DataSources, "
-        f"got {type(clients).__name__}")
+    if not sources and not isinstance(clients, ClientSplit):
+        raise TypeError(
+            f"dem clients must be a ClientSplit or a list of DataSources, "
+            f"got {type(clients).__name__}")
+    strategy = DEMStrategy(
+        k=k, covariance_type=config.covariance_type, backend=config.backend,
+        chunk=config.resolve_chunk(source=sources),
+        init=_resolve_init(config.init, sources), host=sources,
+        tol=config.resolve_tol("em"), reg_covar=config.reg_covar)
+    return run_rounds(strategy, clients, key=key,
+                      max_rounds=config.resolve_max_iter("em"))
 
 
 def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,

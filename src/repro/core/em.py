@@ -635,6 +635,8 @@ def fit_gmm_cfg(key: jax.Array, x, k: int, config: FitConfig,
     # typo'd value would otherwise surface as an opaque trace-time error.
     config.resolved_estep(config.is_diagonal if init_gmm is None
                           else init_gmm.is_diagonal)
+    tol = config.resolve_tol("em")
+    max_iter = config.resolve_max_iter("em")
     if isinstance(x, DataSource):
         require_array_weights(sample_weight, "fit_gmm over a DataSource")
         cs = config.resolve_chunk(source=True)
@@ -643,7 +645,7 @@ def fit_gmm_cfg(key: jax.Array, x, k: int, config: FitConfig,
                 key, x, k, covariance_type=config.covariance_type,
                 reg_covar=config.reg_covar, chunk_size=cs)
         gmm, ll, it, converged = _em_loop_source(
-            init_gmm, x, config.tol, config.reg_covar, config.max_iter,
+            init_gmm, x, tol, config.reg_covar, max_iter,
             config.backend, cs)
         return EMResult(gmm, ll, it, converged)
     cs = config.resolve_chunk(source=False)
@@ -653,8 +655,8 @@ def fit_gmm_cfg(key: jax.Array, x, k: int, config: FitConfig,
         init_gmm = init_from_kmeans(key, x, k, w, config.covariance_type,
                                     config.reg_covar, chunk_size=cs)
     gmm, ll, it, converged = _em_loop(
-        init_gmm, x, w, jnp.asarray(config.tol, x.dtype), config.reg_covar,
-        config.max_iter, config.backend, cs)
+        init_gmm, x, w, jnp.asarray(tol, x.dtype), config.reg_covar,
+        max_iter, config.backend, cs)
     return EMResult(gmm, ll, it, converged)
 
 

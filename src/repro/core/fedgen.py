@@ -18,6 +18,7 @@ module is its single-process semantics and is what the paper benchmarks use.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from functools import partial
 from typing import NamedTuple, Optional, Sequence
@@ -30,13 +31,12 @@ from repro.core.em import (EMResult, fit_gmm_bic_cfg, fit_gmm_cfg)
 from repro.core.gmm import GMM, merge_gmms
 from repro.core.partition import ClientSplit
 from repro.data.sources import DataSource, SyntheticGMMSource
-
-
-class CommStats(NamedTuple):
-    """Communication accounting for one federated training run."""
-    rounds: int
-    uplink_floats: int       # client -> server payload (total floats)
-    downlink_floats: int     # server -> client payload (total floats)
+# CommStats / payload_floats historically lived here; the one copy of the
+# communication accounting is now the federation ledger (DESIGN.md §9) and
+# these re-exports keep the long-standing import path working.
+from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
+                              payload_floats)
+from repro.fed.runtime import run_rounds
 
 
 class FedGenResult(NamedTuple):
@@ -47,13 +47,6 @@ class FedGenResult(NamedTuple):
     #                            refit ran out-of-core (synthetic="source")
     comm: CommStats
     local_results: list[EMResult]
-
-
-def payload_floats(gmm: GMM) -> int:
-    """Uplink size of one local model: weights + means + covariances."""
-    k, d = gmm.means.shape
-    cov = k * d if gmm.is_diagonal else k * d * d
-    return k + k * d + cov
 
 
 # ----------------------------------------------------------------------
@@ -87,9 +80,14 @@ def train_locals_cfg(key: jax.Array, data: jax.Array, mask: jax.Array,
 
     data: (C, N, d) padded, mask: (C, N). Returns stacked GMM with leaves
     of leading dim C, plus (C,) final logliks and iteration counts.
+    tol/max_iter are normalized to their resolved EM values for the same
+    reason seed/init are normalized out: a ``tol="auto"`` config and its
+    concrete legacy twin describe the identical graph and must share one
+    cache entry.
     """
     return _train_locals_jit(key, data, mask, k,
-                             config.replace(seed=0, init="auto"))
+                             config.resolved_for("em").replace(seed=0,
+                                                               init="auto"))
 
 
 def train_locals(key: jax.Array, data: jax.Array, mask: jax.Array, k: int,
@@ -250,18 +248,85 @@ def aggregate(key: jax.Array, local_gmms: list[GMM], sizes,
 
 
 # ----------------------------------------------------------------------
-# End-to-end FedGenGMM
+# End-to-end FedGenGMM: the one-shot strategy on the federation runtime
 # ----------------------------------------------------------------------
 
-def _one_shot_result(res: EMResult, synth, local_gmms: list[GMM],
-                     local_results: list[EMResult]) -> FedGenResult:
-    """The single communication round's accounting, shared by every input
-    type: uplink = each client's (K, 2d+1) parameter block + |D_c|,
-    downlink = the global model broadcast."""
-    uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
-    down = payload_floats(res.gmm) * len(local_gmms)          # broadcast of G
-    comm = CommStats(rounds=1, uplink_floats=uplink, downlink_floats=down)
-    return FedGenResult(res.gmm, local_gmms, synth, comm, local_results)
+@dataclasses.dataclass(frozen=True)
+class FedGenStrategy:
+    """Algorithm 4.1 as a one-shot :class:`~repro.fed.runtime.
+    FederationStrategy`: the single round runs host-side (``run_once``) —
+    local TrainGMM per client (vmap'd for a padded split, streamed for
+    source clients, Python-level when per-client BIC selection makes K_c
+    heterogeneous), then the server-side merge -> sample -> refit
+    (:func:`aggregate_cfg`). The runtime contributes what every strategy
+    shares: input-type dispatch and the communication ledger — uplink is
+    each client's (K, 2d+1) parameter block + |D_c|, downlink the global
+    broadcast, ``rounds=1`` by construction."""
+
+    config: FitConfig
+    k_clients: Optional[int] = None
+    k_global: Optional[int] = None
+    k_candidates: Optional[tuple] = None
+    h: int = 100
+    synthetic: str = "resident"
+
+    one_shot = True
+    name = "fedgen"
+
+    def init_state(self, key: jax.Array, backend) -> dict:
+        k_local_train, k_agg = jax.random.split(key)
+        return {"k_local": k_local_train, "k_agg": k_agg}
+
+    def run_once(self, state: dict, backend) -> dict:
+        if backend.kind == "sources":
+            local_results = train_locals_sources_cfg(
+                state["k_local"], backend.sources, self.config,
+                k=self.k_clients, k_candidates=self.k_candidates)
+            local_gmms = [r.gmm for r in local_results]
+            sizes = backend.sizes
+        elif backend.kind == "split":
+            split = backend.split
+            sizes = split.sizes
+            if self.k_clients is not None:
+                stacked, lls, iters = train_locals_cfg(
+                    state["k_local"], backend.data, backend.mask,
+                    self.k_clients, self.config)
+                local_gmms = [
+                    GMM(stacked.weights[i], stacked.means[i], stacked.covs[i])
+                    for i in range(split.data.shape[0])]
+                local_results = [
+                    EMResult(g, lls[i], iters[i], jnp.array(True))
+                    for i, g in enumerate(local_gmms)]
+            else:
+                assert self.k_candidates is not None, \
+                    "need k_clients or k_candidates"
+                local_results = train_locals_bic_cfg(
+                    state["k_local"], split, self.k_candidates, self.config)
+                local_gmms = [r.gmm for r in local_results]
+        else:
+            raise TypeError(
+                "FedGenStrategy runs ClientSplit or source-list clients; "
+                "the mesh variant is repro.distributed.fedgen_sharded")
+
+        res, synth = aggregate_cfg(
+            state["k_agg"], local_gmms, sizes, self.config, h=self.h,
+            k_global=self.k_global, k_candidates=self.k_candidates,
+            synthetic=self.synthetic)
+        return {"res": res, "synth": synth, "local_gmms": local_gmms,
+                "local_results": local_results}
+
+    def round_payload(self, backend, state) -> RoundPayload:
+        local_gmms = state["local_gmms"]
+        uplink = sum(payload_floats(g) + 1 for g in local_gmms)  # +1: |D_c|
+        down = payload_floats(state["res"].gmm) * len(local_gmms)
+        return RoundPayload(
+            uplink_floats=uplink, downlink_floats=down,
+            itemsize=dtype_itemsize(state["res"].gmm.means.dtype))
+
+    def finalize(self, state, n_rounds, converged,
+                 comm: CommStats) -> FedGenResult:
+        return FedGenResult(state["res"].gmm, state["local_gmms"],
+                            state["synth"], comm, state["local_results"])
 
 
 def fedgengmm_cfg(key: jax.Array, clients, config: FitConfig,
@@ -271,7 +336,10 @@ def fedgengmm_cfg(key: jax.Array, clients, config: FitConfig,
                   h: int = 100,
                   synthetic: str = "auto") -> FedGenResult:
     """Run the full one-shot pipeline — the cfg-core behind
-    ``repro.api.FedGenGMM``, dispatching on the client input type:
+    ``repro.api.FedGenGMM``, a thin wrapper building a
+    :class:`FedGenStrategy` and handing it to the federation runtime
+    (bit-identical to the pre-runtime pipeline; pinned in
+    ``tests/test_fed_runtime.py``). Dispatch on the client input type:
 
     * a padded :class:`ClientSplit`: vmap'd local EM (fixed ``k_clients``)
       or per-client BIC selection (``k_candidates``), resident arrays;
@@ -286,42 +354,17 @@ def fedgengmm_cfg(key: jax.Array, clients, config: FitConfig,
     clients.
     """
     sources = is_source_list(clients)
-    if synthetic == "auto":
-        synthetic = "source" if sources else "resident"
-    k_local_train, k_agg = jax.random.split(key)
-    if sources:
-        local_results = train_locals_sources_cfg(
-            k_local_train, clients, config, k=k_clients,
-            k_candidates=k_candidates)
-        local_gmms = [r.gmm for r in local_results]
-        sizes = [src.num_rows for src in clients]
-    elif isinstance(clients, ClientSplit):
-        split = clients
-        sizes = split.sizes
-        if k_clients is not None:
-            stacked, lls, iters = train_locals_cfg(
-                k_local_train, jnp.asarray(split.data),
-                jnp.asarray(split.mask), k_clients, config)
-            local_gmms = [
-                GMM(stacked.weights[i], stacked.means[i], stacked.covs[i])
-                for i in range(split.data.shape[0])]
-            local_results = [
-                EMResult(g, lls[i], iters[i], jnp.array(True))
-                for i, g in enumerate(local_gmms)]
-        else:
-            assert k_candidates is not None, "need k_clients or k_candidates"
-            local_results = train_locals_bic_cfg(
-                k_local_train, split, k_candidates, config)
-            local_gmms = [r.gmm for r in local_results]
-    else:
+    if not sources and not isinstance(clients, ClientSplit):
         raise TypeError(
             f"fedgengmm clients must be a ClientSplit or a list of "
             f"DataSources, got {type(clients).__name__}")
-
-    res, synth = aggregate_cfg(
-        k_agg, local_gmms, sizes, config, h=h, k_global=k_global,
-        k_candidates=k_candidates, synthetic=synthetic)
-    return _one_shot_result(res, synth, local_gmms, local_results)
+    if synthetic == "auto":
+        synthetic = "source" if sources else "resident"
+    strategy = FedGenStrategy(
+        config=config, k_clients=k_clients, k_global=k_global,
+        k_candidates=None if k_candidates is None else tuple(k_candidates),
+        h=h, synthetic=synthetic)
+    return run_rounds(strategy, clients, key=key, max_rounds=1)
 
 
 def fedgengmm(key: jax.Array, split: ClientSplit,

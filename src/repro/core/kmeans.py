@@ -172,25 +172,30 @@ def kmeans_fit_cfg(key: jax.Array, x, k: int, config: FitConfig,
     one validated :class:`FitConfig`, one dispatch — resident arrays run
     the jitted Lloyd loops (:func:`kmeans` / :func:`kmeans_multi`), a
     :class:`DataSource` runs the host-driven out-of-core twins. ``n_init``
-    > 1 keeps the best restart by final-center inertia."""
+    > 1 keeps the best restart by final-center inertia. ``tol`` and
+    ``max_iter`` resolve through the "kmeans" algorithm defaults
+    (1e-4 / 100), so a default config matches the legacy ``kmeans`` entry
+    point without callers pinning the knobs."""
     backend = config.backend
+    tol = config.resolve_tol("kmeans")
+    max_iter = config.resolve_max_iter("kmeans")
     if isinstance(x, DataSource):
         require_array_weights(sample_weight, "k-means over a DataSource")
         cs = config.resolve_chunk(source=True)
         if n_init == 1:
-            return kmeans_source(key, x, k, max_iter=config.max_iter,
-                                 tol=config.tol, chunk_size=cs,
+            return kmeans_source(key, x, k, max_iter=max_iter,
+                                 tol=tol, chunk_size=cs,
                                  assign_backend=backend)
-        return kmeans_multi_source(key, x, k, max_iter=config.max_iter,
-                                   tol=config.tol, n_init=n_init,
+        return kmeans_multi_source(key, x, k, max_iter=max_iter,
+                                   tol=tol, n_init=n_init,
                                    chunk_size=cs, assign_backend=backend)
     cs = config.resolve_chunk(source=False)
     if n_init == 1:
         return kmeans(key, x, k, sample_weight=sample_weight,
-                      max_iter=config.max_iter, tol=config.tol,
+                      max_iter=max_iter, tol=tol,
                       chunk_size=cs, assign_backend=backend)
     return kmeans_multi(key, x, k, sample_weight=sample_weight,
-                        max_iter=config.max_iter, tol=config.tol,
+                        max_iter=max_iter, tol=tol,
                         n_init=n_init, chunk_size=cs, assign_backend=backend)
 
 
@@ -334,6 +339,39 @@ def kmeans_label_block(centers: jax.Array, xb: jax.Array,
                                  num_segments=k)
     return SufficientStats(s0, s1, s2, jnp.zeros((), xb.dtype),
                            jnp.asarray(xb.shape[0], xb.dtype))
+
+
+def lloyd_round_stats(centers: jax.Array, x, sample_weight=None,
+                      assign_backend: str = "reference",
+                      chunk_size: Optional[int] = None):
+    """One weighted Lloyd sweep against *fixed* centers ->
+    ``(counts (K,), sums (K, d), inertia ())`` — the per-center label
+    statistics one federated k-means client ships each round (Garst et
+    al.; DESIGN.md §9). Additive in N, so per-client results sum into the
+    server-side center update exactly like EM sufficient statistics.
+
+    ``x`` is a resident ``(N, d)`` array (``sample_weight`` masks padded
+    rows) or a :class:`DataSource` (never padded, no weights); either way
+    the reduction runs through the §6 engine, so ``chunk_size`` bounds
+    the working set. ``assign_backend`` must arrive resolved (the caller
+    sits inside jit where "auto" has already been pinned)."""
+    k = centers.shape[0]
+    if isinstance(x, DataSource):
+        require_array_weights(sample_weight,
+                              "lloyd_round_stats over a DataSource")
+        return reduce_rows(
+            lambda xb: _lloyd_block(centers, xb, assign_backend), x,
+            chunk_size)
+    w = (jnp.ones(x.shape[0], x.dtype) if sample_weight is None
+         else sample_weight)
+
+    def block(xb, wb):
+        idx, d2 = _assign_block(xb, centers, assign_backend)
+        counts = jax.ops.segment_sum(wb, idx, num_segments=k)
+        sums = jax.ops.segment_sum(xb * wb[:, None], idx, num_segments=k)
+        return counts, sums, jnp.sum(d2 * wb)
+
+    return reduce_rows(block, (x, w), chunk_size)
 
 
 def kmeans_source(key: jax.Array, source: DataSource, k: int,

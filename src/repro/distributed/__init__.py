@@ -1,5 +1,8 @@
 """Distributed federated runtime: the paper's communication patterns as
-mesh collectives (one-shot all_gather vs per-round psum)."""
+mesh collectives (one-shot all_gather vs per-round psum), all iterative
+loops served by the shared round driver (``repro.fed.runtime``)."""
 from repro.distributed.fed import (ShardedFedResult, dem_sharded,
+                                   fed_kmeans_sharded, fedem_sharded,
                                    fedgen_sharded)
-__all__ = ["ShardedFedResult", "dem_sharded", "fedgen_sharded"]
+__all__ = ["ShardedFedResult", "dem_sharded", "fed_kmeans_sharded",
+           "fedem_sharded", "fedgen_sharded"]

@@ -1,7 +1,7 @@
-"""Federated GMM learning as mesh collectives (DESIGN.md §3).
+"""Federated GMM learning as mesh collectives (DESIGN.md §3/§9).
 
-Clients map to shards of the ``data`` mesh axis. The two algorithms become
-two collective patterns:
+Clients map to shards of the ``data`` mesh axis. The algorithms become
+collective patterns:
 
   FedGenGMM (one-shot):  local EM runs with ZERO cross-shard communication,
       then the single communication round of the paper is literally ONE
@@ -10,27 +10,39 @@ two collective patterns:
       computes the same global model, as a real parameter server would
       broadcast it anyway).
 
-  DEM (iterative):       every EM iteration psums the sufficient statistics
+  DEM / FedEM / FedKMeans (iterative): every round psums the per-client
+      payload (EM sufficient statistics, or k-means label statistics)
       across the data axis — one all-reduce PER ROUND. The dry-run
       collective analysis makes Table 4 visible in HLO bytes.
+
+Since the §9 refactor the iterative entry points here carry NO round loop
+of their own: shard_map is just a *client backend*
+(``repro.fed.runtime.ShardedClients`` — vmap over the shard's clients,
+psum across the axis) under the same ``run_rounds`` driver that runs the
+single-process strategies, so the mesh runtime and the reference
+semantics cannot drift apart.
 
 Client counts larger than the axis size are handled by placing multiple
 clients per shard (the client axis is reshaped to (shards, per_shard)).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.config import FitConfig
-from repro.core.em import (SufficientStats, e_step_stats, fit_gmm_cfg,
-                           init_from_means, m_step)
+from repro.core.config import FitConfig, resolve_backend
+from repro.core.dem import DEMStrategy, _resolve_init
+from repro.core.em import fit_gmm_cfg, init_from_means
 from repro.core.gmm import GMM, merge_gmms_stacked
 from repro.data.sources import SyntheticGMMSource
+from repro.fed.runtime import run_rounds
+from repro.fed.strategies import (FedEMResult, FedEMStrategy,
+                                  FedKMeansResult, FedKMeansStrategy,
+                                  _resolve_fedkmeans_init)
 
 
 class ShardedFedResult(NamedTuple):
@@ -120,56 +132,80 @@ def dem_sharded(mesh, key, data, mask, k: int, init_centers,
     """Distributed EM over the mesh: one psum of sufficient statistics per
     EM round (the iterative baseline's communication pattern).
 
-    With an integer chunk size (via ``config.chunk_size`` or the legacy
-    ``chunk_size`` knob), each shard streams its clients' rows through
-    the engine (``e_step_stats`` owns the full-batch/chunked dispatch) so
+    Since §9 this is a :class:`~repro.core.dem.DEMStrategy` on the shared
+    round driver — shard_map is the client backend, not a third copy of
+    the loop. ``init_centers`` are the caller-chosen global centers (the
+    scheme inits live in :func:`repro.core.dem.dem_cfg`); ``key`` is
+    unused on this path and kept for signature stability. With an integer
+    chunk size each shard streams its clients' rows through the engine so
     per-round shard memory is bounded by (chunk_size, K) rather than
-    (N, K) — the psum payload is unchanged (SufficientStats is already the
-    reduced form).
+    (N, K) — the psum payload is unchanged (SufficientStats is already
+    the reduced form).
     """
     cfg = config if config is not None else FitConfig.from_legacy(
         backend=estep_backend, chunk_size=chunk_size, tol=tol,
         max_iter=max_rounds, reg_covar=reg_covar)
-    max_rounds, reg_covar = cfg.max_iter, cfg.reg_covar
-    tol, backend = cfg.tol, cfg.backend
-    cs = cfg.resolve_chunk(source=False)
-    axis = "data"
+    data, mask = jnp.asarray(data), jnp.asarray(mask)
     d = data.shape[-1]
-
-    def sharded_round(gmm_leaves, data_shard, mask_shard):
-        gmm = GMM(*gmm_leaves)
-        per = jax.vmap(
-            lambda x, w: e_step_stats(gmm, x, w, backend, cs))(
-            data_shard, mask_shard)
-        local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
-        # === one all-reduce per EM round ===
-        return jax.tree.map(lambda s: jax.lax.psum(s, axis), local)
-
-    spec = P(axis)
-    round_fn = shard_map(
-        sharded_round, mesh=mesh,
-        in_specs=((P(), P(), P()), spec, spec),
-        out_specs=SufficientStats(P(), P(), P(), P(), P()),
-        check_rep=False)
-
+    strategy = DEMStrategy(
+        k=k, covariance_type=cfg.covariance_type, backend=cfg.backend,
+        chunk=cfg.resolve_chunk(source=False), host=False,
+        tol=cfg.resolve_tol("em"), reg_covar=cfg.reg_covar)
     flat = data.reshape(-1, d)
     flat_w = mask.reshape(-1)
-    gmm0 = init_from_means(init_centers, flat, flat_w, reg_covar=reg_covar)
+    gmm0 = init_from_means(init_centers, flat, flat_w,
+                           covariance_type=cfg.covariance_type,
+                           reg_covar=cfg.reg_covar)
+    res = run_rounds(strategy, (data, mask), mesh=mesh,
+                     state0=strategy.state_from_gmm(gmm0, dtype=data.dtype),
+                     max_rounds=cfg.resolve_max_iter("em"))
+    return res.global_gmm, res.n_rounds
 
-    def cond(state):
-        _, prev_ll, ll, it = state
-        return jnp.logical_and(it < max_rounds, jnp.abs(ll - prev_ll) > tol)
 
-    def body(state):
-        gmm, _, ll, it = state
-        stats = round_fn((gmm.weights, gmm.means, gmm.covs), data, mask)
-        new_gmm = m_step(stats, reg_covar)
-        new_ll = stats.loglik / jnp.maximum(stats.wsum, 1e-12)
-        return new_gmm, ll, new_ll, it + 1
+def fedem_sharded(mesh, key, data, mask, k: int, *,
+                  participation: float = 1.0, local_epochs: int = 1,
+                  init_centers=None,
+                  config: FitConfig | None = None) -> FedEMResult:
+    """Iterative federated EM (Tian et al.) over the mesh: DEM's psum
+    pattern with the partial-participation / local-epochs knobs. The
+    result carries the populated communication ledger (cohort-sized
+    uplink per round). ``init_centers`` overrides the scheme init from
+    ``config.init`` (which resolves exactly as in single-process FedEM:
+    "auto" -> one-shot fed-kmeans)."""
+    cfg = config if config is not None else FitConfig()
+    data, mask = jnp.asarray(data), jnp.asarray(mask)
+    strategy = FedEMStrategy(
+        k=k, covariance_type=cfg.covariance_type, backend=cfg.backend,
+        chunk=cfg.resolve_chunk(source=False),
+        init=_resolve_init(cfg.init, sources=False), host=False,
+        tol=cfg.resolve_tol("em"), reg_covar=cfg.reg_covar,
+        participation=float(participation), local_epochs=int(local_epochs),
+        n_clients=data.shape[0])
+    state0 = None
+    if init_centers is not None:
+        d = data.shape[-1]
+        gmm0 = init_from_means(init_centers, data.reshape(-1, d),
+                               mask.reshape(-1),
+                               covariance_type=cfg.covariance_type,
+                               reg_covar=cfg.reg_covar)
+        state0 = strategy.state_from_gmm(gmm0, dtype=data.dtype)
+    return run_rounds(strategy, (data, mask), key=key, mesh=mesh,
+                      state0=state0,
+                      max_rounds=cfg.resolve_max_iter("em"))
 
-    stats0 = round_fn((gmm0.weights, gmm0.means, gmm0.covs), data, mask)
-    gmm1 = m_step(stats0, reg_covar)
-    ll0 = stats0.loglik / jnp.maximum(stats0.wsum, 1e-12)
-    state = (gmm1, jnp.array(-jnp.inf, data.dtype), ll0, jnp.array(1))
-    gmm, _, ll, rounds = jax.lax.while_loop(cond, body, state)
-    return gmm, rounds
+
+def fed_kmeans_sharded(mesh, key, data, mask, k: int, *,
+                       config: FitConfig | None = None) -> FedKMeansResult:
+    """Iterative federated k-means (Garst et al.) over the mesh: one psum
+    of per-center label statistics (counts, sums, inertia) per round —
+    the same collective as DEM with responsibilities replaced by hard
+    labels."""
+    cfg = config if config is not None else FitConfig()
+    data, mask = jnp.asarray(data), jnp.asarray(mask)
+    strategy = FedKMeansStrategy(
+        k=k, assign_backend=resolve_backend(cfg.backend),
+        chunk=cfg.resolve_chunk(source=False),
+        init=_resolve_fedkmeans_init(cfg.init), host=False,
+        tol=cfg.resolve_tol("kmeans"))
+    return run_rounds(strategy, (data, mask), key=key, mesh=mesh,
+                      max_rounds=cfg.resolve_max_iter("kmeans"))

@@ -1,0 +1,43 @@
+"""repro.fed — the federation runtime (DESIGN.md §9).
+
+One :class:`~repro.fed.runtime.FederationStrategy` protocol and one
+:func:`~repro.fed.runtime.run_rounds` driver under every federated
+algorithm: FedGenGMM and DEM (defined next to their numerics in
+``repro.core.fedgen`` / ``repro.core.dem``) plus the iterative baselines
+FedEM and FedKMeans (``repro.fed.strategies``). The ledger
+(``repro.fed.ledger``) is the one copy of the communication accounting.
+
+``strategies`` is loaded lazily (PEP 562): it imports ``repro.core.dem``
+for the shared init machinery, and ``repro.core`` imports this package's
+runtime — eager loading here would close that cycle.
+"""
+from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
+                              gmm_payload_floats, label_payload_floats,
+                              payload_floats, stats_payload_floats)
+from repro.fed.runtime import (FederationStrategy, SplitClients,
+                               SourceClients, ShardedClients, make_backend,
+                               run_rounds)
+
+_LAZY = {
+    "FedEMStrategy": "repro.fed.strategies",
+    "FedKMeansStrategy": "repro.fed.strategies",
+    "FedEMResult": "repro.fed.strategies",
+    "FedKMeansResult": "repro.fed.strategies",
+    "fedem_cfg": "repro.fed.strategies",
+    "fed_kmeans_cfg": "repro.fed.strategies",
+}
+
+__all__ = [
+    "CommStats", "RoundPayload", "dtype_itemsize", "gmm_payload_floats",
+    "label_payload_floats", "payload_floats", "stats_payload_floats",
+    "FederationStrategy", "SplitClients", "SourceClients", "ShardedClients",
+    "make_backend", "run_rounds",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.fed' has no attribute {name!r}")

@@ -1,0 +1,116 @@
+"""The unified communication ledger of the federation runtime (DESIGN.md §9).
+
+Every federated algorithm in this repo decomposes into client-update →
+uplink → server-combine → broadcast rounds, and the paper's headline
+argument is about what those rounds *cost*. Before the §9 refactor each
+algorithm hand-rolled its own `CommStats` arithmetic (and none of it was
+dtype-aware); this module states the accounting once:
+
+- :class:`CommStats` — the per-run ledger every federated result carries.
+  Float counts stay the primary unit (they are what Table 4 compares), and
+  ``itemsize`` makes them convertible to wire bytes: ``payload_bytes`` /
+  ``total_mb`` answer "how many megabytes actually moved" for the payload
+  dtype in play (f32 vs f64 runs differ 2x in bytes at identical float
+  counts).
+- :class:`RoundPayload` — what one round moves; strategies declare it and
+  the round driver (``repro.fed.runtime``) multiplies by the realized
+  round count.
+- the payload-size helpers (``gmm_payload_floats`` & co.) — the closed
+  forms for the three payload families (model parameters, EM sufficient
+  statistics, k-means label statistics).
+
+This module is deliberately repro-free (jax + stdlib only): it sits below
+``repro.core``, so `fedgen.py`/`dem.py` can import it without cycles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+def dtype_itemsize(dtype) -> int:
+    """Bytes per element of a payload dtype (f32 -> 4, f64 -> 8, ...)."""
+    return int(jnp.dtype(dtype).itemsize)
+
+
+class CommStats(NamedTuple):
+    """Communication accounting for one federated training run.
+
+    ``itemsize`` (bytes per payload element, default f32) is what makes
+    the float counts convertible to wire volume; it defaults to 4 so
+    pre-§9 call sites constructing ``CommStats(rounds, up, down)`` keep
+    their meaning.
+    """
+    rounds: int
+    uplink_floats: int       # client -> server payload (total floats)
+    downlink_floats: int     # server -> client payload (total floats)
+    itemsize: int = 4        # bytes per payload element (dtype-aware)
+
+    @property
+    def uplink_bytes(self) -> int:
+        return self.uplink_floats * self.itemsize
+
+    @property
+    def downlink_bytes(self) -> int:
+        return self.downlink_floats * self.itemsize
+
+    @property
+    def payload_bytes(self) -> int:
+        """Total wire volume (uplink + downlink) in bytes."""
+        return self.uplink_bytes + self.downlink_bytes
+
+    @property
+    def total_mb(self) -> float:
+        """Total wire volume in MiB — the unit the comm benchmark plots."""
+        return self.payload_bytes / 2**20
+
+
+class RoundPayload(NamedTuple):
+    """What one communication round moves, summed over the cohort.
+
+    Strategies declare this once (``round_payload``); the round driver
+    multiplies by the realized round count to build the run's
+    :class:`CommStats`, so no strategy ever re-implements the ledger
+    arithmetic.
+    """
+    uplink_floats: int
+    downlink_floats: int
+    itemsize: int = 4
+
+    def totals(self, rounds: int) -> CommStats:
+        return CommStats(rounds=rounds,
+                         uplink_floats=rounds * self.uplink_floats,
+                         downlink_floats=rounds * self.downlink_floats,
+                         itemsize=self.itemsize)
+
+
+# ----------------------------------------------------------------------
+# Payload closed forms (floats per client, per round)
+# ----------------------------------------------------------------------
+
+def gmm_payload_floats(k: int, d: int, diagonal: bool) -> int:
+    """One GMM's parameter block: weights (k) + means (k·d) + covariances
+    (k·d diag / k·d² full) — the FedGenGMM uplink and every broadcast."""
+    cov = k * d if diagonal else k * d * d
+    return k + k * d + cov
+
+
+def payload_floats(gmm) -> int:
+    """:func:`gmm_payload_floats` of a concrete model (duck-typed: any
+    object with ``means.shape`` and ``is_diagonal``)."""
+    k, d = gmm.means.shape
+    return gmm_payload_floats(k, d, gmm.is_diagonal)
+
+
+def stats_payload_floats(k: int, d: int, diagonal: bool) -> int:
+    """One client's EM ``SufficientStats``: s0 (k) + s1 (k·d) + s2 (k·d
+    diag / k·d² full) + loglik + wsum — the DEM/FedEM per-round uplink."""
+    cov = k * d if diagonal else k * d * d
+    return k + k * d + cov + 2
+
+
+def label_payload_floats(k: int, d: int) -> int:
+    """One client's hard-assignment label statistics: counts (k) + sums
+    (k·d) + inertia — the federated k-means per-round uplink."""
+    return k + k * d + 1

@@ -1,0 +1,337 @@
+"""The federation runtime: one round driver under every federated
+algorithm in the repo (DESIGN.md §9).
+
+Tian et al.'s federated EM, Garst et al.'s federated k-means, the paper's
+one-shot FedGenGMM and the DEM baseline all decompose into the same
+round::
+
+    client-update  ->  uplink  ->  server-combine  ->  broadcast
+
+so this module owns that shape exactly once. A
+:class:`FederationStrategy` supplies the algorithm (``local_step`` /
+``server_combine`` / ``converged`` / ``round_payload``); a client
+*backend* supplies where the clients live (a padded resident
+:class:`~repro.core.partition.ClientSplit`, a list of out-of-core
+:class:`~repro.data.sources.DataSource` streams, or shards of a device
+mesh); and :func:`run_rounds` is the single driver that owns the round
+loop, the input-type dispatch, and the communication ledger
+(``repro.fed.ledger``). The algorithms in ``repro.core.fedgen`` /
+``repro.core.dem`` and the new FedEM / FedKMeans baselines
+(``repro.fed.strategies``) are all strategy definitions on this
+substrate — none of them carries its own client loop any more.
+
+Execution modes (picked per backend, never per strategy):
+
+- resident clients (split or sharded mesh): the whole round loop runs as
+  ONE jitted ``lax.while_loop`` — structurally identical to the
+  pre-refactor ``_dem_loop``/``dem_sharded`` loops, which is what keeps
+  the re-landed algorithms bit-identical to their history;
+- source clients: a host-side round loop (a ``DataSource`` cannot live
+  inside jit) with the same state transitions, mirroring the engine's
+  ``host_em_loop`` semantics (Python-float convergence arithmetic).
+
+This module deliberately imports nothing from ``repro.core`` at module
+top (only ``repro.data.sources``, which is itself repro-free), so
+``core/fedgen.py`` and ``core/dem.py`` can import the runtime without
+cycles; the one :class:`ClientSplit` isinstance check is a call-time
+import.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.data.sources import DataSource
+from repro.fed.ledger import CommStats, RoundPayload
+
+
+@runtime_checkable
+class FederationStrategy(Protocol):
+    """The round-based strategy contract (duck-typed; subclassing is not
+    required — frozen dataclasses are the idiom, so a strategy can ride
+    through jit as a static argument).
+
+    Iterative strategies implement:
+
+    - ``init_state(key, backend) -> state`` — host-side; build round-0
+      state (global model, convergence scalars). Numeric knobs that must
+      not recompile the loop when swept (tol, reg_covar) belong in the
+      *state* (traced), not in strategy fields (static).
+    - ``local_step(state, x, w, idx) -> payload`` — ONE client's update:
+      an additive pytree (the uplink). Must be traceable; ``x`` is that
+      client's rows (array or DataSource), ``w`` its padding mask (None
+      for sources), ``idx`` its global client index.
+    - ``server_combine(state, total) -> state`` — the server side of the
+      round, from the client-summed payload.
+    - ``converged(state) -> bool`` — jnp bool under jit, Python bool on
+      the host path (state scalars differ accordingly).
+    - ``keep_going(state) -> bool`` (optional) — the loop-continuation
+      predicate when it is NOT simply ``not converged``. The historical
+      EM loops continue on ``delta > tol`` and report convergence as
+      ``delta <= tol`` — with a NaN convergence scalar BOTH are false, so
+      a degenerate run stops after one more round AND reports
+      not-converged instead of spinning to the round budget. Strategies
+      with that semantics implement both predicates; the driver falls
+      back to ``not converged`` when ``keep_going`` is absent.
+    - ``round_payload(backend, state) -> RoundPayload`` — what one round
+      moves; the driver multiplies by the realized round count.
+    - ``finalize(state, n_rounds, converged, comm) -> result``.
+
+    One-shot strategies (``one_shot = True``) implement ``run_once(state,
+    backend) -> state`` instead of ``local_step``/``server_combine``/
+    ``converged``: the single round runs host-side (FedGenGMM's local
+    fits include Python-level per-client BIC selection).
+    """
+
+    one_shot: bool
+
+    def init_state(self, key: jax.Array, backend) -> Any: ...
+
+    def round_payload(self, backend, state) -> RoundPayload: ...
+
+    def finalize(self, state, n_rounds, converged, comm: CommStats): ...
+
+
+# ----------------------------------------------------------------------
+# Client backends: where the clients live
+# ----------------------------------------------------------------------
+# Each backend exposes the same two faces:
+#   - host metadata (kind / num_clients / dim / sizes / the original
+#     container) that strategies use in init_state and accounting;
+#   - reduce_clients(local_step, state): sum the per-client payload
+#     pytrees — a vmap + tree-sum (split), a Python loop (sources), or a
+#     shard_map + psum (mesh). The jittable backends are pytrees so the
+#     driver can pass them straight through the jitted round loop.
+
+
+@jax.tree_util.register_pytree_node_class
+class SplitClients:
+    """Resident padded clients: ``data (C, N, d)``, ``mask (C, N)``."""
+
+    kind = "split"
+    host = False
+
+    def __init__(self, data: jax.Array, mask: jax.Array, split=None):
+        self.data = data
+        self.mask = mask
+        self.split = split  # the original ClientSplit (host metadata)
+
+    def tree_flatten(self):
+        return (self.data, self.mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_clients(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def sizes(self):
+        return self.split.sizes if self.split is not None else jnp.sum(
+            self.mask, axis=1)
+
+    def reduce_clients(self, local_step, state):
+        c = self.data.shape[0]
+        idx = jnp.arange(c)
+        per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+            self.data, self.mask, idx)
+        return jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
+
+
+class SourceClients:
+    """Out-of-core clients: one :class:`DataSource` stream each. Rounds
+    run host-side (a source cannot live inside jit); per-client block
+    loops stay jitted inside the engine."""
+
+    kind = "sources"
+    host = True
+
+    def __init__(self, sources: Sequence[DataSource]):
+        self.sources = list(sources)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.sources)
+
+    @property
+    def dim(self) -> int:
+        return self.sources[0].dim
+
+    @property
+    def sizes(self):
+        return [src.num_rows for src in self.sources]
+
+    def reduce_clients(self, local_step, state):
+        per = [local_step(state, src, None, i)
+               for i, src in enumerate(self.sources)]
+        return jax.tree.map(lambda *s: sum(s), *per)
+
+
+@jax.tree_util.register_pytree_node_class
+class ShardedClients:
+    """Mesh-sharded clients: the client axis of ``data (C, N, d)`` maps to
+    shards of ``axis``; the per-round combine is literally one
+    ``jax.lax.psum`` across the mesh — the collective pattern the sharded
+    DEM runtime always had, now produced by the same driver as everything
+    else."""
+
+    kind = "sharded"
+    host = False
+
+    def __init__(self, data: jax.Array, mask: jax.Array, mesh,
+                 axis: str = "data"):
+        self.data = data
+        self.mask = mask
+        self.mesh = mesh
+        self.axis = axis
+
+    def tree_flatten(self):
+        return (self.data, self.mask), (self.mesh, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def num_clients(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def sizes(self):
+        return jnp.sum(self.mask, axis=1)
+
+    def reduce_clients(self, local_step, state):
+        axis = self.axis
+        c = self.data.shape[0]
+
+        def shard_fn(state, idx_s, data_s, mask_s):
+            per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+                data_s, mask_s, idx_s)
+            local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
+            # === one all-reduce per round ===
+            return jax.tree.map(lambda s: jax.lax.psum(s, axis), local)
+
+        fn = shard_map(shard_fn, mesh=self.mesh,
+                       in_specs=(P(), P(axis), P(axis), P(axis)),
+                       out_specs=P(), check_rep=False)
+        return fn(state, jnp.arange(c), self.data, self.mask)
+
+
+def make_backend(clients, mesh=None, axis: str = "data"):
+    """THE client dispatch: ClientSplit -> :class:`SplitClients`, a list
+    of DataSources -> :class:`SourceClients`, ``(data, mask)`` arrays with
+    a ``mesh`` -> :class:`ShardedClients`."""
+    if mesh is not None:
+        data, mask = clients
+        return ShardedClients(jnp.asarray(data), jnp.asarray(mask), mesh,
+                              axis)
+    from repro.core.partition import ClientSplit  # call-time: core sits above
+    if isinstance(clients, ClientSplit):
+        return SplitClients(jnp.asarray(clients.data),
+                            jnp.asarray(clients.mask), clients)
+    if (isinstance(clients, (list, tuple)) and len(clients) > 0
+            and all(isinstance(s, DataSource) for s in clients)):
+        return SourceClients(clients)
+    raise TypeError(
+        f"federated clients must be a ClientSplit, a non-empty list of "
+        f"DataSources, or (data, mask) arrays with a mesh; got "
+        f"{type(clients).__name__}")
+
+
+# ----------------------------------------------------------------------
+# The round driver
+# ----------------------------------------------------------------------
+
+def _round(strategy, state, backend):
+    """One full round: client updates -> summed uplink -> server combine."""
+    total = backend.reduce_clients(strategy.local_step, state)
+    return strategy.server_combine(state, total)
+
+
+def _keep_going(strategy, state):
+    """Loop-continuation predicate: the strategy's own ``keep_going``
+    when it has one (EM-style ``delta > tol``, which also halts on a NaN
+    scalar exactly like the pre-§9 loops), else ``not converged``."""
+    kg = getattr(strategy, "keep_going", None)
+    if kg is not None:
+        return kg(state)
+    return jnp.logical_not(strategy.converged(state))
+
+
+@partial(jax.jit, static_argnames=("strategy", "max_rounds"))
+def _iterate_jit(strategy, backend, state0, max_rounds: int):
+    """Resident-client round loop as ONE jitted ``lax.while_loop`` —
+    bootstrap round, then iterate while ``keep_going``. Structurally the
+    pre-§9 ``_dem_loop``: same state transitions, same cond arithmetic,
+    so re-landed strategies reproduce their history bit for bit. The
+    strategy is a static argument (hashable frozen dataclass); numeric
+    knobs that sweep (tol, reg_covar) ride in ``state0`` as traced
+    leaves, so sweeping them does not recompile."""
+
+    def cond(carry):
+        state, it = carry
+        return jnp.logical_and(it < max_rounds, _keep_going(strategy, state))
+
+    def body(carry):
+        state, it = carry
+        return _round(strategy, state, backend), it + 1
+
+    state1 = _round(strategy, state0, backend)
+    state, it = jax.lax.while_loop(cond, body, (state1, jnp.array(1)))
+    return state, it
+
+
+def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
+               state0=None, max_rounds: int = 1, mesh=None,
+               axis: str = "data"):
+    """Run a :class:`FederationStrategy` to convergence — THE round loop.
+
+    Owns everything that used to be copy-pasted per algorithm: the client
+    input dispatch (:func:`make_backend`), the round loop (jitted
+    while_loop for resident/sharded clients, host loop for sources), the
+    bootstrap round, the round budget, and the communication ledger
+    (realized rounds x the strategy's :class:`RoundPayload`).
+
+    ``state0`` overrides the strategy's own ``init_state`` (the sharded
+    DEM entry point passes externally chosen init centers this way);
+    otherwise ``key`` seeds it.
+    """
+    backend = make_backend(clients, mesh, axis)
+    if state0 is None:
+        state0 = strategy.init_state(key, backend)
+
+    if getattr(strategy, "one_shot", False):
+        state = strategy.run_once(state0, backend)
+        rounds, n_rounds, converged = 1, jnp.asarray(1), True
+    elif backend.host:
+        state = _round(strategy, state0, backend)
+        it = 1
+        while it < max_rounds and bool(_keep_going(strategy, state)):
+            state = _round(strategy, state, backend)
+            it += 1
+        rounds, n_rounds = it, jnp.asarray(it)
+        converged = bool(strategy.converged(state))
+    else:
+        state, n_rounds = _iterate_jit(strategy, backend, state0, max_rounds)
+        rounds = int(n_rounds)
+        converged = bool(strategy.converged(state))
+
+    payload = strategy.round_payload(backend, state)
+    comm = payload.totals(rounds)
+    return strategy.finalize(state, n_rounds, converged, comm)

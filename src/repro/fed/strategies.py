@@ -1,0 +1,319 @@
+"""The iterative federated baselines the ROADMAP names, as strategies on
+the federation runtime (DESIGN.md §9).
+
+- :class:`FedEMStrategy` — iterative federated EM after Tian et al.
+  (non-asymptotic analysis of federated EM): per round, each
+  participating client runs ``local_epochs`` local EM steps from the
+  current global parameters and ships its final-epoch
+  ``SufficientStats``; the server sums and M-steps. With
+  ``participation=1.0`` and ``local_epochs=1`` this IS the DEM baseline
+  (``repro.core.dem``) — literally, it subclasses :class:`DEMStrategy`
+  and the reduction is pinned bit-for-bit in
+  ``tests/test_fed_runtime.py``. Partial participation is cyclic (each
+  round takes the next window of ``max(1, round(participation·C))``
+  clients), so cohorts are deterministic, non-empty, and cover every
+  client.
+
+- :class:`FedKMeansStrategy` — iterative federated k-means after Garst &
+  Reinders: per round, each client assigns its rows to the current global
+  centers and ships per-center label statistics (counts, sums, inertia —
+  the existing ``lloyd_round_stats`` machinery); the server recombines
+  into new centers and stops on the squared center shift. Init is a
+  one-shot federated k-means warm start (Dennis et al. '21) or the
+  "separated" scheme.
+
+Both run under every client backend — padded :class:`ClientSplit`, list
+of per-client :class:`DataSource` streams, or a sharded mesh
+(``repro.distributed.fedem_sharded`` / ``fed_kmeans_sharded``) — with
+populated communication ledgers, because :func:`~repro.fed.runtime.
+run_rounds` owns all of that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import FitConfig, is_source_list, resolve_backend
+from repro.core.dem import DEMStrategy, _resolve_init, max_separated_centers
+from repro.core.em import SufficientStats, e_step_stats, m_step
+from repro.core.gmm import GMM
+from repro.core.kmeans import federated_kmeans, lloyd_round_stats
+from repro.core.partition import ClientSplit
+from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
+                              gmm_payload_floats, label_payload_floats,
+                              stats_payload_floats)
+from repro.fed.runtime import run_rounds
+
+
+class FedEMResult(NamedTuple):
+    global_gmm: GMM
+    log_likelihood: jax.Array   # avg loglik over the last round's cohort
+    n_rounds: jax.Array
+    converged: jax.Array
+    comm: CommStats
+
+
+class FedEMState(NamedTuple):
+    """DEM's round state plus the round counter that drives the cyclic
+    participation window."""
+    gmm: GMM
+    prev_ll: jax.Array
+    ll: jax.Array
+    tol: jax.Array
+    reg_covar: jax.Array
+    rnd: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FedEMStrategy(DEMStrategy):
+    """DEM generalized per Tian et al.: ``local_epochs`` local EM steps
+    per round (clients M-step on their own stats between E-steps and ship
+    the final epoch's statistics) and cyclic partial participation
+    (``participation`` fraction of clients per round). Defaults reduce it
+    to :class:`DEMStrategy` exactly."""
+
+    participation: float = 1.0
+    local_epochs: int = 1
+    n_clients: int = 0   # required when participation < 1 (window size)
+
+    name = "fedem"
+
+    def __post_init__(self):
+        if not 0.0 < float(self.participation) <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}")
+        if int(self.local_epochs) < 1:
+            raise ValueError(
+                f"local_epochs must be >= 1, got {self.local_epochs}")
+        if self.participation < 1.0 and self.n_clients < 1:
+            raise ValueError(
+                "participation < 1 needs n_clients (the cyclic cohort "
+                "window is sized from it); the cfg-cores fill it from the "
+                "client container")
+
+    def cohort_size(self) -> int:
+        """Clients per round under cyclic participation (always >= 1)."""
+        if self.participation >= 1.0:
+            return self.n_clients
+        return max(1, int(round(self.participation * self.n_clients)))
+
+    def _make_state(self, gmm, prev_ll, ll, tol, reg_covar):
+        rnd = 0 if self.host else jnp.array(0)
+        return FedEMState(gmm, prev_ll, ll, tol, reg_covar, rnd)
+
+    def _next_state(self, state, gmm, ll):
+        return FedEMState(gmm, state.ll, ll, state.tol, state.reg_covar,
+                          state.rnd + 1)
+
+    def _zero_stats(self, gmm: GMM) -> SufficientStats:
+        """An inactive client's uplink: exact zeros in the stats shapes
+        (s2 mirrors the covariance layout)."""
+        dt = gmm.means.dtype
+        return SufficientStats(jnp.zeros(gmm.weights.shape, dt),
+                               jnp.zeros(gmm.means.shape, dt),
+                               jnp.zeros(gmm.covs.shape, dt),
+                               jnp.zeros((), dt), jnp.zeros((), dt))
+
+    def local_step(self, state: FedEMState, x, w, idx):
+        active = None
+        if self.participation < 1.0:
+            # cyclic cohort: round r takes clients [r·m, r·m + m) mod C.
+            c, m = self.n_clients, self.cohort_size()
+            start = (state.rnd * m) % c
+            active = ((idx - start) % c) < m
+            if self.host and not active:
+                # host path: idx is a concrete int, so non-members skip
+                # the (possibly out-of-core) E-step entirely and ship
+                # exact zeros.
+                return self._zero_stats(state.gmm)
+        gmm = state.gmm
+        stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
+        for _ in range(self.local_epochs - 1):
+            gmm = m_step(stats, state.reg_covar)
+            stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
+        if active is not None and not self.host:
+            # vmap/shard_map path: fixed shapes force every client to
+            # evaluate, so non-members contribute exact zeros to every
+            # summed statistic — the same zero-weight trick the engine
+            # uses for padded rows.
+            stats = jax.tree.map(lambda s: s * jnp.asarray(active, s.dtype),
+                                 stats)
+        return stats
+
+    def round_payload(self, backend, state) -> RoundPayload:
+        m, d = self.cohort_size() or backend.num_clients, backend.dim
+        diag = self.covariance_type == "diag"
+        return RoundPayload(
+            uplink_floats=m * stats_payload_floats(self.k, d, diag),
+            downlink_floats=m * gmm_payload_floats(self.k, d, diag),
+            itemsize=dtype_itemsize(state.gmm.means.dtype))
+
+    def finalize(self, state: FedEMState, n_rounds, converged,
+                 comm: CommStats) -> FedEMResult:
+        ll = state.ll
+        if self.host:
+            ll = jnp.asarray(ll, state.gmm.means.dtype)
+        return FedEMResult(state.gmm, ll, n_rounds, jnp.asarray(converged),
+                           comm)
+
+
+def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
+              participation: float = 1.0,
+              local_epochs: int = 1) -> FedEMResult:
+    """Run FedEM — the cfg-core behind ``repro.api.FedEM``, dispatching on
+    the client input type through the federation runtime. Init strategies
+    and their resolution are DEM's (``config.init``)."""
+    sources = is_source_list(clients)
+    if not sources and not isinstance(clients, ClientSplit):
+        raise TypeError(
+            f"fedem clients must be a ClientSplit or a list of "
+            f"DataSources, got {type(clients).__name__}")
+    if not 0.0 < float(participation) <= 1.0:
+        raise ValueError(
+            f"participation must be in (0, 1], got {participation}")
+    n_clients = len(clients) if sources else clients.data.shape[0]
+    strategy = FedEMStrategy(
+        k=k, covariance_type=config.covariance_type, backend=config.backend,
+        chunk=config.resolve_chunk(source=sources),
+        init=_resolve_init(config.init, sources), host=sources,
+        tol=config.resolve_tol("em"), reg_covar=config.reg_covar,
+        participation=float(participation), local_epochs=int(local_epochs),
+        n_clients=n_clients)
+    return run_rounds(strategy, clients, key=key,
+                      max_rounds=config.resolve_max_iter("em"))
+
+
+# ----------------------------------------------------------------------
+# Federated k-means (Garst et al.)
+# ----------------------------------------------------------------------
+
+class FedKMeansResult(NamedTuple):
+    centers: jax.Array        # (K, d) global centers
+    inertia: jax.Array        # weighted inertia of the last assignment
+    #                           sweep (against the centers that produced
+    #                           the final update — scoring the returned
+    #                           centers would cost one extra round)
+    n_rounds: jax.Array
+    converged: jax.Array
+    comm: CommStats
+
+
+class FedKMeansState(NamedTuple):
+    centers: jax.Array
+    shift: jax.Array          # squared center shift of the last update
+    inertia: jax.Array
+    tol: jax.Array
+
+
+FEDKMEANS_INITS = ("fed-kmeans", "separated")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedKMeansStrategy:
+    """Iterative federated Lloyd: clients ship per-center label statistics
+    (counts, sums, inertia) against the broadcast centers; the server
+    recombines ``sums/counts`` into new centers — a k-means M-step from
+    summed hard-assignment statistics, exactly the EM pattern with
+    responsibilities replaced by labels. Stops when the squared center
+    shift drops to ``tol`` (the k-means convergence rule, so ``tol``
+    resolves through the "kmeans" defaults)."""
+
+    k: int
+    assign_backend: str = "reference"   # resolved (never "auto") — this
+    #                                     rides into jitted client steps
+    chunk: Optional[int] = None
+    init: str = "fed-kmeans"
+    host: bool = False
+    tol: float = dataclasses.field(default=1e-4, compare=False)
+
+    one_shot = False
+    name = "fedkmeans"
+
+    def init_state(self, key: jax.Array, backend) -> FedKMeansState:
+        k_init, _ = jax.random.split(key)
+        if self.init == "separated":
+            centers = max_separated_centers(k_init, self.k, backend.dim)
+        elif backend.kind == "sources":
+            centers = federated_kmeans(k_init, list(backend.sources), self.k,
+                                       chunk_size=self.chunk)
+        else:
+            centers = federated_kmeans(k_init, backend.data, self.k,
+                                       client_weights=backend.mask,
+                                       chunk_size=self.chunk)
+        if self.host:
+            return FedKMeansState(centers, float("inf"), float("inf"),
+                                  float(self.tol))
+        dt = centers.dtype
+        inf = jnp.array(jnp.inf, dt)
+        return FedKMeansState(centers, inf, inf, jnp.asarray(self.tol, dt))
+
+    def local_step(self, state: FedKMeansState, x, w, idx):
+        return lloyd_round_stats(state.centers, x, w, self.assign_backend,
+                                 self.chunk)
+
+    def server_combine(self, state: FedKMeansState,
+                       total) -> FedKMeansState:
+        counts, sums, inertia = total
+        new_centers = jnp.where(
+            counts[:, None] > 0,
+            sums / jnp.maximum(counts[:, None], 1e-12), state.centers)
+        shift = jnp.sum((new_centers - state.centers) ** 2)
+        if self.host:
+            shift, inertia = float(shift), float(inertia)
+        return FedKMeansState(new_centers, shift, inertia, state.tol)
+
+    def converged(self, state: FedKMeansState):
+        return state.shift <= state.tol
+
+    def keep_going(self, state: FedKMeansState):
+        """Distinct from ``not converged`` so a NaN center shift
+        (degenerate geometry) halts the loop AND reports not-converged,
+        like the EM loops."""
+        return state.shift > state.tol
+
+    def round_payload(self, backend, state) -> RoundPayload:
+        c, d = backend.num_clients, backend.dim
+        return RoundPayload(
+            uplink_floats=c * label_payload_floats(self.k, d),
+            downlink_floats=c * self.k * d,
+            itemsize=dtype_itemsize(state.centers.dtype))
+
+    def finalize(self, state: FedKMeansState, n_rounds, converged,
+                 comm: CommStats) -> FedKMeansResult:
+        inertia = state.inertia
+        if self.host:
+            inertia = jnp.asarray(inertia, state.centers.dtype)
+        return FedKMeansResult(state.centers, inertia, n_rounds,
+                               jnp.asarray(converged), comm)
+
+
+def _resolve_fedkmeans_init(init: str) -> str:
+    if init == "auto":
+        return "fed-kmeans"
+    if init not in FEDKMEANS_INITS:
+        raise ValueError(
+            f"FedKMeans init must be 'auto' or one of {FEDKMEANS_INITS} "
+            f"(a one-shot warm start or separated centers), got {init!r}")
+    return init
+
+
+def fed_kmeans_cfg(key: jax.Array, clients, config: FitConfig,
+                   k: int) -> FedKMeansResult:
+    """Run iterative federated k-means — the cfg-core behind
+    ``repro.api.FedKMeans``, dispatching on the client input type through
+    the federation runtime."""
+    sources = is_source_list(clients)
+    if not sources and not isinstance(clients, ClientSplit):
+        raise TypeError(
+            f"federated k-means clients must be a ClientSplit or a list "
+            f"of DataSources, got {type(clients).__name__}")
+    strategy = FedKMeansStrategy(
+        k=k, assign_backend=resolve_backend(config.backend),
+        chunk=config.resolve_chunk(source=sources),
+        init=_resolve_fedkmeans_init(config.init), host=sources,
+        tol=config.resolve_tol("kmeans"))
+    return run_rounds(strategy, clients, key=key,
+                      max_rounds=config.resolve_max_iter("kmeans"))

@@ -6,6 +6,8 @@ Bit-identity is the acceptance bar of the PR-4 refactor: the facade and
 the legacy keyword entry points must run literally the same cfg-core code,
 so results are compared with assert_array_equal, never allclose.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -267,6 +269,32 @@ class TestFacadeBitIdentity:
         np.testing.assert_array_equal(np.asarray(ref.assignments),
                                       np.asarray(est.assignments_))
 
+    def test_kmeans_defaults_agree_without_pinning(self, data):
+        """The PR-4 caveat, closed: tol/max_iter="auto" resolve to the
+        k-means defaults (1e-4/100) at config-resolution time, so a
+        DEFAULT facade config matches the legacy kmeans() entry point
+        bit for bit — no manual pinning."""
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        ref = kmeans(jax.random.key(2), xj, 3)
+        est = KMeansEstimator(3).fit(xj, key=jax.random.key(2))
+        np.testing.assert_array_equal(np.asarray(ref.centers),
+                                      np.asarray(est.centers_))
+        np.testing.assert_array_equal(np.asarray(ref.assignments),
+                                      np.asarray(est.assignments_))
+        np.testing.assert_array_equal(np.asarray(ref.inertia),
+                                      np.asarray(est.inertia_))
+
+    def test_auto_tol_resolution_is_per_algorithm(self):
+        cfg = FitConfig()
+        assert cfg.resolve_tol("em") == 1e-3
+        assert cfg.resolve_tol("kmeans") == 1e-4
+        assert cfg.resolve_max_iter("em") == 200
+        assert cfg.resolve_max_iter("kmeans") == 100
+        pinned = FitConfig(tol=5e-3, max_iter=7)
+        assert pinned.resolve_tol("kmeans") == 5e-3
+        assert pinned.resolve_max_iter("kmeans") == 7
+
     def test_fedgen_split(self, split):
         ref = fedgengmm(jax.random.key(3), split, k_clients=3, k_global=3,
                         h=40)
@@ -381,6 +409,36 @@ class TestDeprecationShims:
                   chunk_size=CHUNK).run(shards, key=jax.random.key(2))
         assert_same_gmm(old.global_gmm, new.global_gmm)
         assert old.comm == new.comm
+
+    def test_every_shim_warns_exactly_once(self, data, shards):
+        """One call, one DeprecationWarning — a shim that warns twice (or
+        triggers another shim) spams real migration logs."""
+        from repro.core.fedgen import train_locals_from_sources
+        from repro.core.kmeans import federated_kmeans_from_sources
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        key = jax.random.key(0)
+        calls = {
+            "fit_gmm_streaming": lambda: fit_gmm_streaming(
+                key, xj, 2, max_iter=3, chunk_size=CHUNK),
+            "fedgengmm_from_sources": lambda: fedgengmm_from_sources(
+                key, shards, k_clients=2, k_global=2, h=10, max_iter=3),
+            "dem_from_sources": lambda: dem_from_sources(
+                key, shards, 2, init=1, max_rounds=3),
+            "train_locals_from_sources": lambda: train_locals_from_sources(
+                key, shards, k=2, max_iter=3),
+            "federated_kmeans_from_sources":
+                lambda: federated_kmeans_from_sources(key, shards, 2,
+                                                      max_iter=3),
+        }
+        for name, call in calls.items():
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                call()
+            dep = [w for w in caught
+                   if issubclass(w.category, DeprecationWarning)]
+            assert len(dep) == 1, (name, [str(w.message) for w in dep])
+            assert name in str(dep[0].message)
 
 
 # ----------------------------------------------------------------------

@@ -11,15 +11,19 @@ import dataclasses
 import inspect
 
 import repro.api as api
-from repro.api import DEM, FedGenGMM, FitConfig, GMMEstimator, KMeansEstimator
+from repro.api import (DEM, FedEM, FedGenGMM, FedKMeans, FitConfig,
+                       GMMEstimator, KMeansEstimator)
 
-# The one public surface (DESIGN.md §8). Sorted to make diffs readable.
+# The one public surface (DESIGN.md §8/§9). Sorted to make diffs readable.
 EXPECTED_EXPORTS = sorted([
     "FitConfig",
     "GMMEstimator",
     "KMeansEstimator",
     "FedGenGMM",
     "DEM",
+    "FedEM",
+    "FedKMeans",
+    "fit_federated",
     "score",
     "log_prob",
     "bic",
@@ -28,16 +32,29 @@ EXPECTED_EXPORTS = sorted([
 
 # FitConfig field table: (name, default) in declaration order — the §8
 # contract. A changed default silently changes every facade fit, so it is
-# pinned as hard as the names.
+# pinned as hard as the names. tol/max_iter default "auto" = per-algorithm
+# resolution (EM 1e-3/200, k-means 1e-4/100 — TOL_DEFAULTS /
+# MAX_ITER_DEFAULTS in repro.core.config).
 EXPECTED_FITCONFIG_FIELDS = [
     ("backend", "auto"),
     ("chunk_size", "auto"),
     ("covariance_type", "diag"),
     ("reg_covar", 1e-6),
-    ("tol", 1e-3),
-    ("max_iter", 200),
+    ("tol", "auto"),
+    ("max_iter", "auto"),
     ("init", "auto"),
     ("seed", 0),
+]
+
+# Deprecation shims must never leak into the facade: they live in
+# repro.core, warn on use, and forward — the public surface stays the
+# estimator/runner set above.
+SHIM_NAMES = [
+    "fit_gmm_streaming",
+    "fedgengmm_from_sources",
+    "dem_from_sources",
+    "train_locals_from_sources",
+    "federated_kmeans_from_sources",
 ]
 
 
@@ -84,10 +101,32 @@ class TestFacadeShape:
             assert "sample_weight" in params
 
     def test_run_signatures(self):
-        for cls in (FedGenGMM, DEM):
+        for cls in (FedGenGMM, DEM, FedEM, FedKMeans):
             params = inspect.signature(cls.run).parameters
             assert "clients" in params and "key" in params
 
     def test_constructors_take_config(self):
-        for cls in (GMMEstimator, KMeansEstimator, FedGenGMM, DEM):
+        for cls in (GMMEstimator, KMeansEstimator, FedGenGMM, DEM, FedEM,
+                    FedKMeans):
             assert "config" in inspect.signature(cls.__init__).parameters
+
+    def test_strategy_seam_signature(self):
+        params = inspect.signature(api.fit_federated).parameters
+        assert "clients" in params and "strategy" in params
+        assert "config" in params and "key" in params
+
+
+class TestNoShimLeak:
+    """The `*_from_sources` / `fit_gmm_streaming` deprecation shims are
+    internal: none may appear in the facade's exports or attributes, and
+    none may appear as a FitConfig field (the snapshot above would catch
+    a field, this catches the names)."""
+
+    def test_shims_not_exported(self):
+        for name in SHIM_NAMES:
+            assert name not in api.__all__, name
+            assert not hasattr(api, name), name
+
+    def test_shims_not_fitconfig_fields(self):
+        fields = {f.name for f in dataclasses.fields(FitConfig)}
+        assert fields.isdisjoint(SHIM_NAMES)

@@ -19,7 +19,8 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.core import fit_gmm, partition, fedgengmm
     from repro.core.dem import fed_kmeans_centers
-    from repro.distributed import dem_sharded, fedgen_sharded
+    from repro.distributed import (dem_sharded, fed_kmeans_sharded,
+                                   fedem_sharded, fedgen_sharded)
 
     mesh = jax.make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
@@ -47,6 +48,21 @@ SCRIPT = textwrap.dedent("""
     # single-process (unsharded) reference for parity
     fr = fedgengmm(jax.random.key(0), split, k_clients=3, k_global=3, h=60)
     out["fed_ll_ref"] = float(fr.global_gmm.score(xj))
+
+    # the iterative baselines on the SAME driver, mesh as client backend
+    fe = fedem_sharded(mesh, jax.random.key(4), data, mask, 3,
+                       participation=0.5, local_epochs=2)
+    out["fedem_ll"] = float(fe.global_gmm.score(xj))
+    out["fedem_rounds"] = int(fe.n_rounds)
+    out["fedem_uplink"] = int(fe.comm.uplink_floats)
+    out["fedem_itemsize"] = int(fe.comm.itemsize)
+
+    km = fed_kmeans_sharded(mesh, jax.random.key(5), data, mask, 3)
+    out["km_rounds"] = int(km.n_rounds)
+    out["km_uplink"] = int(km.comm.uplink_floats)
+    c = np.asarray(km.centers)
+    out["km_center_err"] = float(max(
+        min(np.linalg.norm(c - m, axis=1)) for m in mus))
     print(json.dumps(out))
 """)
 
@@ -76,3 +92,22 @@ def test_sharded_matches_single_process(sharded_results):
     """Mesh execution is a faithful implementation of the same algorithm."""
     r = sharded_results
     assert abs(r["fed_ll"] - r["fed_ll_ref"]) < 0.25, r
+
+
+def test_sharded_fedem_fits_with_cohort_ledger(sharded_results):
+    """FedEM under the mesh backend: partial participation still reaches
+    a good fit, and the ledger is cohort-sized (8 of 16 clients per
+    round, diag stats for k=3, d=3: 3 + 9 + 9 + 2 floats each)."""
+    r = sharded_results
+    assert r["fedem_ll"] > r["central_ll"] - 0.5, r
+    assert r["fedem_uplink"] == r["fedem_rounds"] * 8 * (3 + 9 + 9 + 2), r
+    assert r["fedem_itemsize"] == 4
+
+
+def test_sharded_fed_kmeans_recovers_centers(sharded_results):
+    """FedKMeans under the mesh backend: per-center label stats psum'd
+    per round (16 clients x (k + k*d + 1) floats), planted centers
+    recovered."""
+    r = sharded_results
+    assert r["km_center_err"] < 0.5, r
+    assert r["km_uplink"] == r["km_rounds"] * 16 * (3 + 9 + 1), r

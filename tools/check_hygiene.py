@@ -2,24 +2,40 @@
 """Repo-hygiene gate (CI `hygiene` lane; run locally with
 ``python tools/check_hygiene.py``).
 
-Fails on committed Python bytecode — ``__pycache__`` directories or
-``.pyc``/``.pyo`` files in the git index. This is a regression class this
-repo has actually shipped (22 ``.pyc`` files rode along in the PR 1→2
-window), so it is enforced rather than trusted to ``.gitignore``, which
-only guards *untracked* files: ``git add -f``, IDE auto-stage, or bytecode
-committed before the ignore rule all slip straight past it.
+Fails on:
 
-Pure stdlib and no test collection here — the companion
-``pytest --collect-only`` gate needs the real dependency stack and runs as
-its own CI step (see .github/workflows/ci.yml).
+- committed Python bytecode — ``__pycache__`` directories or
+  ``.pyc``/``.pyo`` files in the git index. This is a regression class
+  this repo has actually shipped (22 ``.pyc`` files rode along in the
+  PR 1→2 window), so it is enforced rather than trusted to
+  ``.gitignore``, which only guards *untracked* files: ``git add -f``,
+  IDE auto-stage, or bytecode committed before the ignore rule all slip
+  straight past it.
+- upward imports — any module under ``repro.core`` or ``repro.fed``
+  importing ``repro.api`` at module top. The facade sits ABOVE the core
+  and the federation runtime (DESIGN.md §8/§9); the deprecation shims
+  lazily import it at call time, and a module-level import would close
+  an import cycle that only surfaces as an opaque partially-initialized-
+  module error depending on which package a user imports first.
+
+Pure stdlib (the import guard is an AST walk, no repro import) and no
+test collection here — the companion ``pytest --collect-only`` gate
+needs the real dependency stack and runs as its own CI step (see
+.github/workflows/ci.yml).
 """
 from __future__ import annotations
 
+import ast
 import subprocess
 import sys
 from pathlib import Path
 
 BYTECODE_SUFFIXES = (".pyc", ".pyo")
+
+# Packages that must never import the facade at module top (the facade
+# imports THEM).
+LAYERED_PACKAGES = ("src/repro/core", "src/repro/fed")
+FORBIDDEN_PREFIX = "repro.api"
 
 
 def tracked_files(repo_root: Path) -> list[str]:
@@ -34,6 +50,39 @@ def bytecode_violations(paths: list[str]) -> list[str]:
         if "__pycache__" in Path(p).parts or p.endswith(BYTECODE_SUFFIXES))
 
 
+def _module_level_imports(tree: ast.Module):
+    """Top-of-module import nodes only: imports inside function/class
+    bodies are the sanctioned lazy pattern and stay legal."""
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+        elif isinstance(node, (ast.If, ast.Try)):  # guarded module imports
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Import, ast.ImportFrom)):
+                    yield sub
+
+
+def import_cycle_violations(repo_root: Path) -> list[str]:
+    """``repro.core`` / ``repro.fed`` modules importing ``repro.api`` at
+    module top (the facade layering rule, DESIGN.md §9)."""
+    bad = []
+    for pkg in LAYERED_PACKAGES:
+        for path in sorted((repo_root / pkg).rglob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in _module_level_imports(tree):
+                if isinstance(node, ast.Import):
+                    names = [a.name for a in node.names]
+                else:
+                    names = [node.module or ""]
+                for name in names:
+                    if name == FORBIDDEN_PREFIX or name.startswith(
+                            FORBIDDEN_PREFIX + "."):
+                        bad.append(
+                            f"{path.relative_to(repo_root)}:{node.lineno} "
+                            f"imports {name} at module top")
+    return bad
+
+
 def main() -> int:
     repo_root = Path(__file__).resolve().parent.parent
     bad = bytecode_violations(tracked_files(repo_root))
@@ -42,8 +91,16 @@ def main() -> int:
         for p in bad:
             print(f"  {p}")
         return 1
+    cycles = import_cycle_violations(repo_root)
+    if cycles:
+        print("layering violations (facade imports below repro.api; "
+              "lazy-import it at call time instead):")
+        for c in cycles:
+            print(f"  {c}")
+        return 1
     print(f"hygiene OK: no bytecode among {len(tracked_files(repo_root))} "
-          f"tracked files")
+          f"tracked files; no repro.core/repro.fed module imports "
+          f"repro.api at module top")
     return 0
 
 
