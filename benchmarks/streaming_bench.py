@@ -16,9 +16,13 @@ trajectory is tracked across PRs:
     {"stages": {stage: {"full_us", "chunked_us", "full_peak_bytes",
                         "chunked_peak_bytes", "slowdown"}},
      "sources": {"estep_full_us", "estep_scan_chunked_us",
-                 "estep_array_source_us", "estep_mmap_source_us",
-                 "estep_synthetic_source_us", "source_vs_scan",
+                 "estep_scan2_chunked_us", "estep_array_source_us",
+                 "estep_mmap_source_us", "estep_synthetic_source_us",
+                 "estep_source_prefetch{0,1,2}_us", "source_vs_scan",
                  "source_vs_full"}, ...}
+
+Full mode additionally enforces the regression guards (``source_vs_full``
+<= 2.0, ``init_from_kmeans_chunked_us`` < 500k) before writing the JSON.
 
 Quick (CI) mode runs a scaled-down sweep and prints rows only — it never
 touches the tracked JSON, so benchmark smoke runs don't dirty the working
@@ -57,6 +61,7 @@ from repro.api import bic as api_bic
 from repro.core.em import e_step_stats, init_from_kmeans, label_stats
 from repro.core.gmm import GMM
 from repro.core.kmeans import kmeans
+from repro.data import sources
 from repro.data.sources import ArraySource, NpyFileSource, SyntheticGMMSource
 
 N_FULL, N_QUICK, N_DRY, D, K = 100_000, 20_000, 2_048, 16, 8
@@ -73,11 +78,20 @@ REPORT_SCHEMA = {
     "stages": ("full_us", "chunked_us", "full_peak_bytes",
                "chunked_peak_bytes", "slowdown"),
     "sources": ("chunk_size", "estep_full_us", "estep_scan_chunked_us",
-                "estep_array_source_us", "estep_mmap_source_us",
-                "estep_synthetic_source_us", "source_vs_scan",
+                "estep_scan2_chunked_us", "estep_array_source_us",
+                "estep_mmap_source_us", "estep_synthetic_source_us",
+                "estep_source_prefetch0_us", "estep_source_prefetch1_us",
+                "estep_source_prefetch2_us", "source_vs_scan",
                 "source_vs_full"),
 }
 STAGES = ("kmeans_lloyd", "init_label_stats", "em_estep", "bic_score")
+
+# Full-mode regression guards: the ratios/outliers this PR drove down stay
+# down, or the bench refuses to write the tracked JSON. (Quick/dry modes
+# run on scaled shapes and noisy CI boxes — guards only apply to the
+# committed full-mode numbers.)
+SOURCE_VS_FULL_MAX = 2.0
+INIT_US_MAX = 500_000
 
 
 def validate_report(report: dict) -> None:
@@ -160,12 +174,16 @@ def _source_section(x, gmm, chunk, iters, tmpdir):
     }
     es_full = jax.jit(lambda x: e_step_stats(gmm, x).s1)
     es_scan = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=chunk).s1)
+    es_scan2 = jax.jit(lambda x: e_step_stats(gmm, x, chunk_size=chunk,
+                                              scan_width=2).s1)
     full_us = _time(lambda: es_full(x), iters=iters)
     scan_us = _time(lambda: es_scan(x), iters=iters)
+    scan2_us = _time(lambda: es_scan2(x), iters=iters)
     section = {
         "chunk_size": chunk,
         "estep_full_us": round(full_us),
         "estep_scan_chunked_us": round(scan_us),
+        "estep_scan2_chunked_us": round(scan2_us),
     }
     rows = []
     for name, src in srcs.items():
@@ -174,6 +192,23 @@ def _source_section(x, gmm, chunk, iters, tmpdir):
         section[f"estep_{name}_source_us"] = round(us)
         rows.append(f"streaming/estep_source_{name}_c{chunk}/N{n}d{D}K{K},"
                     f"{us:.0f},{chunk * K * 4 / 2**20:.2f}")
+    # Prefetch-depth sweep over the array source: depth 0 = synchronous
+    # block loop, 1/2 = producer thread keeping that many prepared blocks
+    # ahead of compute. Depth is pinned via the module default so the rows
+    # time exactly what library callers get at each setting.
+    default_depth = sources.PREFETCH_DEPTH
+    try:
+        for depth in (0, 1, 2):
+            sources.PREFETCH_DEPTH = depth
+            us = _time(lambda: e_step_stats(gmm, srcs["array"],
+                                            chunk_size=chunk).s1,
+                       iters=iters)
+            section[f"estep_source_prefetch{depth}_us"] = round(us)
+            rows.append(
+                f"streaming/estep_source_prefetch{depth}_c{chunk}/"
+                f"N{n}d{D}K{K},{us:.0f},{chunk * K * 4 / 2**20:.2f}")
+    finally:
+        sources.PREFETCH_DEPTH = default_depth
     section["source_vs_scan"] = round(
         section["estep_array_source_us"] / max(scan_us, 1e-9), 3)
     section["source_vs_full"] = round(
@@ -227,6 +262,20 @@ def run(quick: bool = True, dry_run: bool = False) -> list[str]:
         us = _time(lambda: init_from_kmeans(jax.random.key(1), x, K,
                                             chunk_size=chunk).means, iters=1)
         report["init_from_kmeans_chunked_us"] = round(us)
+        guard_violations = []
+        if report["sources"]["source_vs_full"] > SOURCE_VS_FULL_MAX:
+            guard_violations.append(
+                f"source_vs_full {report['sources']['source_vs_full']} > "
+                f"{SOURCE_VS_FULL_MAX} (host block loop regressed vs "
+                f"full-batch)")
+        if report["init_from_kmeans_chunked_us"] >= INIT_US_MAX:
+            guard_violations.append(
+                f"init_from_kmeans_chunked_us "
+                f"{report['init_from_kmeans_chunked_us']} >= {INIT_US_MAX} "
+                f"(the 6.3s init outlier is back)")
+        if guard_violations:
+            raise RuntimeError("streaming bench regression guard:\n  "
+                               + "\n  ".join(guard_violations))
         JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
     return rows
 

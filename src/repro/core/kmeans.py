@@ -30,7 +30,27 @@ from repro.core.config import (FitConfig, is_source_list,
                                resolve_source_chunk)
 from repro.core.em import (SufficientStats, reduce_rows,
                            streaming_map_reduce, streaming_reduce)
-from repro.data.sources import DataSource
+from repro.data.sources import DataSource, prefetch_blocks
+
+# Rows the k-means++ seeding pass works from when the dataset is larger:
+# seeding is O(k · N_pool · d) with a k-round categorical over an
+# (N_pool,)-logit vector, and a uniform subsample this size seeds planted
+# mixtures indistinguishably from the full pass at a fraction of the cost
+# (the Lloyd iterations that follow see every row regardless).
+SEED_ROWS = 16384
+
+# Lockstep Lloyd sweeps every restart runs before kmeans_multi prunes to
+# the best seed (see kmeans_multi): enough for inertia to separate good
+# seedings from bad on anything EM-initializable, while bad restarts never
+# get to drag a vmapped while_loop through dozens of straggler iterations.
+PILOT_ITERS = 3
+
+# Full-data Lloyd budget for kmeans_multi's refine stage beyond SEED_ROWS
+# rows: the winner first converges on the seed subsample (cheap sweeps),
+# then polishes on the full data — at 100k rows a full sweep costs ~9ms
+# on the 1-core CPU backend, so an unbounded full-data while_loop is what
+# made init_from_kmeans a 6.3s outlier.
+REFINE_ITERS = 10
 
 
 class KMeansResult(NamedTuple):
@@ -61,6 +81,27 @@ def _assign_block(xb: jax.Array, centers: jax.Array,
             jnp.min(dists, axis=1))
 
 
+def _labels_onehot(idx: jax.Array, k: int, wb: jax.Array,
+                   dtype) -> jax.Array:
+    """Weighted one-hot (B, K) of an assignment vector. Per-cluster sums
+    then become matmuls (``oh.T @ xb``) instead of ``segment_sum`` scatter
+    adds — the scatter path costs ~13ms per 100k-row sweep on a 1-core
+    CPU backend, the matmul path ~1ms, and Lloyd runs one sweep per
+    iteration (this was most of the 6.3s init outlier)."""
+    cols = jnp.arange(k, dtype=idx.dtype)[None, :]
+    return (idx[:, None] == cols).astype(dtype) * wb[:, None]
+
+
+def _sweep_block(xb: jax.Array, wb: jax.Array, centers: jax.Array,
+                 backend: str):
+    """Weighted Lloyd-sweep sufficient statistics of one block:
+    (counts (K,), sums (K, d), inertia ())."""
+    k = centers.shape[0]
+    idx, d2 = _assign_block(xb, centers, backend)
+    oh = _labels_onehot(idx, k, wb, xb.dtype)
+    return jnp.sum(oh, axis=0), oh.T @ xb, jnp.sum(d2 * wb)
+
+
 def kmeans_plusplus(key: jax.Array, x: jax.Array, k: int,
                     sample_weight: Optional[jax.Array] = None) -> jax.Array:
     """k-means++ seeding -> (k, d). Supports zero-weighted (padded) rows."""
@@ -85,13 +126,30 @@ def kmeans_plusplus(key: jax.Array, x: jax.Array, k: int,
     return centers
 
 
+def _seed_centers(key: jax.Array, x: jax.Array, k: int, w: jax.Array,
+                  seed_rows: int) -> jax.Array:
+    """k-means++ over a uniform row subsample once N exceeds ``seed_rows``
+    (sampled rows keep their weights); the full pass below that. Seeding
+    was measured at >100ms per restart on a 100k-row batch — almost all of
+    it the k categorical draws over (N,) logits — and the Lloyd iterations
+    wash out any subsampling noise in the seed."""
+    n = x.shape[0]
+    if n <= seed_rows:
+        return kmeans_plusplus(key, x, k, w)
+    key, sub = jax.random.split(key)
+    idx = jax.random.randint(sub, (seed_rows,), 0, n)
+    return kmeans_plusplus(key, x[idx], k, w[idx])
+
+
 @partial(jax.jit, static_argnames=("k", "max_iter", "chunk_size",
-                                   "assign_backend"))
+                                   "assign_backend", "seed_rows"))
 def kmeans(key: jax.Array, x: jax.Array, k: int,
            sample_weight: Optional[jax.Array] = None,
            max_iter: int = 100, tol: float = 1e-4,
            chunk_size: Optional[int] = None,
-           assign_backend: str = "auto") -> KMeansResult:
+           assign_backend: str = "auto",
+           init_centers: Optional[jax.Array] = None,
+           seed_rows: int = SEED_ROWS) -> KMeansResult:
     """Weighted Lloyd's algorithm with k-means++ init.
 
     Every sweep accumulates (counts (K,), sums (K, d), inertia) sufficient
@@ -101,17 +159,24 @@ def kmeans(key: jax.Array, x: jax.Array, k: int,
     working set is O(chunk_size·K). The returned assignments, inertia and
     cluster sizes are recomputed against the *returned* centers (a final
     sweep), not the pre-update centers of the last Lloyd iteration.
+
+    Beyond ``seed_rows`` rows the k-means++ pass seeds from a uniform row
+    subsample (weights ride along) — the Lloyd sweeps still see every row.
+    ``init_centers`` skips seeding entirely and starts Lloyd from the given
+    (k, d) centers (how :func:`kmeans_multi` resumes its pruned winner).
     """
     n, d = x.shape
     w = jnp.ones(n, x.dtype) if sample_weight is None else sample_weight
     backend = resolve_backend(assign_backend)
-    centers0 = kmeans_plusplus(key, x, k, w)
+    if init_centers is not None:
+        centers0 = init_centers
+    else:
+        centers0 = _seed_centers(key, x, k, w, seed_rows)
 
     def block_stats(xb, wb, centers):
         idx, d2 = _assign_block(xb, centers, backend)
-        counts = jax.ops.segment_sum(wb, idx, num_segments=k)
-        sums = jax.ops.segment_sum(xb * wb[:, None], idx, num_segments=k)
-        return (counts, sums, jnp.sum(d2 * wb)), idx
+        oh = _labels_onehot(idx, k, wb, xb.dtype)
+        return (jnp.sum(oh, axis=0), oh.T @ xb, jnp.sum(d2 * wb)), idx
 
     def sweep(centers):
         """One assignment pass -> ((counts, sums, inertia), assignments)."""
@@ -120,9 +185,23 @@ def kmeans(key: jax.Array, x: jax.Array, k: int,
         return streaming_map_reduce(
             lambda xb, wb: block_stats(xb, wb, centers), (x, w), chunk_size)
 
+    def update_block(xb, wb, centers):
+        """counts/sums only — the Lloyd loop never reads inertia, so the
+        assignment reduces to ``argmax(x·c - ||c||²/2)``: one matmul per
+        block, no per-row ``x²`` term or min-distance pass (both are
+        assignment-invariant constants per row)."""
+        if backend == "fused":
+            idx, _ = _assign_block(xb, centers, backend)
+        else:
+            score = xb @ centers.T - 0.5 * jnp.sum(
+                centers * centers, axis=1)[None, :]
+            idx = jnp.argmax(score, axis=1).astype(jnp.int32)
+        oh = _labels_onehot(idx, k, wb, xb.dtype)
+        return jnp.sum(oh, axis=0), oh.T @ xb
+
     def sweep_stats(centers):
         """Reduce-only sweep for the Lloyd loop (assignments not collected)."""
-        return reduce_rows(lambda xb, wb: block_stats(xb, wb, centers)[0],
+        return reduce_rows(lambda xb, wb: update_block(xb, wb, centers),
                            (x, w), chunk_size)
 
     def cond(state):
@@ -131,7 +210,7 @@ def kmeans(key: jax.Array, x: jax.Array, k: int,
 
     def body(state):
         centers, it, _ = state
-        counts, sums, _ = sweep_stats(centers)
+        counts, sums = sweep_stats(centers)
         new_centers = jnp.where(
             counts[:, None] > 0,
             sums / jnp.maximum(counts[:, None], 1e-12), centers)
@@ -147,22 +226,88 @@ def kmeans(key: jax.Array, x: jax.Array, k: int,
 
 
 @partial(jax.jit, static_argnames=("k", "max_iter", "n_init", "chunk_size",
-                                   "assign_backend"))
+                                   "assign_backend", "pilot_iters",
+                                   "seed_rows"))
 def kmeans_multi(key: jax.Array, x: jax.Array, k: int,
                  sample_weight: Optional[jax.Array] = None,
                  max_iter: int = 100, tol: float = 1e-4,
                  n_init: int = 4,
                  chunk_size: Optional[int] = None,
-                 assign_backend: str = "auto") -> KMeansResult:
+                 assign_backend: str = "auto",
+                 pilot_iters: int = PILOT_ITERS,
+                 seed_rows: int = SEED_ROWS) -> KMeansResult:
     """Best of ``n_init`` k-means restarts (lowest inertia) — sklearn-style
     robustness against bad seeding, which matters for small local client
-    datasets. Restart selection compares inertias of the *final* centers
-    (see :func:`kmeans`)."""
+    datasets.
+
+    Restarts are **pilot-pruned**: every seed runs ``pilot_iters`` fixed
+    Lloyd sweeps under one vmap, the seed with the lowest pilot inertia
+    wins, and only the winner iterates to convergence. The previous
+    vmap-of-while_loop design ran ALL restarts in lockstep until the
+    slowest straggler converged — one bad seed spinning 38 iterations at
+    n_init-wide cost was the committed 6.3s ``init_from_kmeans_chunked``
+    outlier. Beyond ``seed_rows`` rows the pilot (and the winner's
+    convergence run) operate on one shared uniform row subsample, with a
+    bounded :data:`REFINE_ITERS` full-data polish at the end — so the
+    full data is swept O(1) times, not O(iterations). The winner's
+    returned stats are always recomputed against its final centers on the
+    full data (see :func:`kmeans`), so restart selection quality is
+    judged on real inertia downstream.
+    """
+    if n_init == 1:
+        return kmeans(key, x, k, sample_weight, max_iter, tol, chunk_size,
+                      assign_backend, seed_rows=seed_rows)
+    n = x.shape[0]
+    w = (jnp.ones(n, x.dtype) if sample_weight is None else sample_weight)
+    backend = resolve_backend(assign_backend)
+    # The pilot's only job is picking a seed, so beyond ``seed_rows`` rows
+    # its sweeps run on one shared uniform subsample (weights ride along,
+    # full-batch — the subsample working set is O(seed_rows·d) by
+    # construction). Only the pruned winner ever sweeps the full data.
+    if n > seed_rows:
+        key, sub = jax.random.split(key)
+        sidx = jax.random.randint(sub, (seed_rows,), 0, n)
+        xs, ws, pilot_chunk = x[sidx], w[sidx], None
+    else:
+        xs, ws, pilot_chunk = x, w, chunk_size
     keys = jax.random.split(key, n_init)
-    runs = jax.vmap(lambda kk: kmeans(kk, x, k, sample_weight, max_iter, tol,
-                                      chunk_size, assign_backend))(keys)
-    best = jnp.argmin(runs.inertia)
-    return jax.tree.map(lambda a: a[best], runs)
+
+    def sweep_stats(centers):
+        return reduce_rows(
+            lambda xb, wb: _sweep_block(xb, wb, centers, backend),
+            (xs, ws), pilot_chunk)
+
+    def pilot(kk):
+        centers = kmeans_plusplus(kk, xs, k, ws)
+
+        def body(_, carry):
+            centers, _ = carry
+            counts, sums, inertia = sweep_stats(centers)
+            new_centers = jnp.where(
+                counts[:, None] > 0,
+                sums / jnp.maximum(counts[:, None], 1e-12), centers)
+            return new_centers, inertia
+
+        return jax.lax.fori_loop(
+            0, pilot_iters, body, (centers, jnp.array(jnp.inf, x.dtype)))
+
+    pilot_centers, pilot_inertia = jax.vmap(pilot)(keys)
+    best = jnp.argmin(pilot_inertia)
+    if n > seed_rows:
+        # Coreset-style finish: converge the winner on the subsample
+        # (sweeps are ~n/seed_rows cheaper), then a bounded full-data
+        # refine — the returned assignments/inertia/sizes all come from
+        # the final full-data sweeps.
+        sub = kmeans(key, xs, k, sample_weight=ws, max_iter=max_iter,
+                     tol=tol, assign_backend=assign_backend,
+                     init_centers=pilot_centers[best])
+        res = kmeans(key, x, k, sample_weight, min(max_iter, REFINE_ITERS),
+                     tol, chunk_size, assign_backend,
+                     init_centers=sub.centers)
+        return res._replace(n_iter=res.n_iter + sub.n_iter + pilot_iters)
+    res = kmeans(key, x, k, sample_weight, max_iter, tol, chunk_size,
+                 assign_backend, init_centers=pilot_centers[best])
+    return res._replace(n_iter=res.n_iter + pilot_iters)
 
 
 def kmeans_fit_cfg(key: jax.Array, x, k: int, config: FitConfig,
@@ -258,7 +403,7 @@ def federated_kmeans(key: jax.Array, client_data, k_global: int,
 
 @jax.jit
 def _seed_block(centers: jax.Array, valid: jax.Array, round_key: jax.Array,
-                start: jax.Array, xb: jax.Array):
+                start: jax.Array, xb: jax.Array, wb: jax.Array):
     """One k-means++ sampling round over one block via the Gumbel-max
     trick: sampling a row with probability ∝ min-distance² equals taking
     the argmax of ``log(min_d²) + Gumbel``. Per-row Gumbel noise is keyed
@@ -266,7 +411,8 @@ def _seed_block(centers: jax.Array, valid: jax.Array, round_key: jax.Array,
     maxima compose into the global argmax on the host — a streamed
     categorical sample without an (N,) probability vector. With no valid
     centers yet (round 0) the score degenerates to pure Gumbel noise,
-    i.e. a uniform first-center draw."""
+    i.e. a uniform first-center draw. ``wb`` is the prefetch pad mask:
+    padded rows score -inf, so they can never be drawn as a center."""
     b = xb.shape[0]
     idx = jnp.arange(b, dtype=jnp.uint32) + start
     row_keys = jax.vmap(jax.random.fold_in, (None, 0))(round_key, idx)
@@ -275,7 +421,7 @@ def _seed_block(centers: jax.Array, valid: jax.Array, round_key: jax.Array,
     d2min = jnp.min(d2, axis=1)
     base = jnp.where(jnp.isfinite(d2min),
                      jnp.log(jnp.maximum(d2min, 1e-30)), 0.0)
-    score = base + g
+    score = jnp.where(wb > 0, base + g, -jnp.inf)
     i = jnp.argmax(score)
     return score[i], xb[i]
 
@@ -285,9 +431,10 @@ def kmeans_plusplus_streaming(key: jax.Array, source: DataSource, k: int,
     """k-means++ seeding over a :class:`DataSource` -> (k, d).
 
     The ROADMAP's last resident-array scan: each of the k rounds streams
-    the blocks once, recomputing min distances against the centers chosen
-    so far (O(k²·N·d) total instead of the cached-min-d O(k·N·d) of the
-    resident pass — the price of holding no (N,) state)."""
+    the blocks once (through the prefetching loader), recomputing min
+    distances against the centers chosen so far (O(k²·N·d) total instead
+    of the cached-min-d O(k·N·d) of the resident pass — the price of
+    holding no (N,) state)."""
     chunk_size = resolve_source_chunk(chunk_size)
     d = source.dim
     centers = jnp.zeros((k, d), source.dtype)
@@ -296,9 +443,9 @@ def kmeans_plusplus_streaming(key: jax.Array, source: DataSource, k: int,
         round_key = jax.random.fold_in(key, r)
         best_score, best_row = -float("inf"), None
         start = 0
-        for xb in source.iter_blocks(chunk_size):
+        for xb, wb in prefetch_blocks(source, chunk_size):
             score, row = _seed_block(centers, valid, round_key,
-                                     jnp.uint32(start), xb)
+                                     jnp.uint32(start), xb, wb)
             score = float(score)
             if score > best_score:
                 best_score, best_row = score, row
@@ -309,36 +456,32 @@ def kmeans_plusplus_streaming(key: jax.Array, source: DataSource, k: int,
 
 
 @partial(jax.jit, static_argnames=("backend",))
-def _lloyd_block(centers: jax.Array, xb: jax.Array, backend: str):
-    """(counts, sums, inertia) of one unweighted block — the Lloyd-sweep
-    sufficient statistics the host loop accumulates."""
-    k = centers.shape[0]
-    idx, d2 = _assign_block(xb, centers, backend)
-    counts = jax.ops.segment_sum(jnp.ones(xb.shape[0], xb.dtype), idx,
-                                 num_segments=k)
-    sums = jax.ops.segment_sum(xb, idx, num_segments=k)
-    return counts, sums, jnp.sum(d2)
+def _lloyd_block(centers: jax.Array, xb: jax.Array, wb: jax.Array,
+                 backend: str):
+    """(counts, sums, inertia) of one block — the Lloyd-sweep sufficient
+    statistics the host loop accumulates. ``wb`` is the prefetch pad mask
+    (source rows all carry weight 1; padded rows weight 0)."""
+    return _sweep_block(xb, wb, centers, backend)
 
 
 @partial(jax.jit, static_argnames=("covariance_type", "backend"))
-def kmeans_label_block(centers: jax.Array, xb: jax.Array,
+def kmeans_label_block(centers: jax.Array, xb: jax.Array, wb: jax.Array,
                        covariance_type: str, backend: str) -> SufficientStats:
     """Hard-assignment label statistics of one block against fixed centers
     — the out-of-core replacement for ``label_stats``: assignment and
     labelling fuse into one pass, so the (N,) label vector of the resident
-    init never exists."""
+    init never exists. ``wb`` masks prefetch pad rows out of every sum."""
     k = centers.shape[0]
     idx, _ = _assign_block(xb, centers, backend)
-    s0 = jax.ops.segment_sum(jnp.ones(xb.shape[0], xb.dtype), idx,
-                             num_segments=k)
-    s1 = jax.ops.segment_sum(xb, idx, num_segments=k)
+    oh = _labels_onehot(idx, k, wb, xb.dtype)
+    s0 = jnp.sum(oh, axis=0)
+    s1 = oh.T @ xb
     if covariance_type == "diag":
-        s2 = jax.ops.segment_sum(xb * xb, idx, num_segments=k)
+        s2 = oh.T @ (xb * xb)
     else:
-        s2 = jax.ops.segment_sum(xb[:, :, None] * xb[:, None, :], idx,
-                                 num_segments=k)
+        s2 = jnp.einsum("nk,ni,nj->kij", oh, xb, xb)
     return SufficientStats(s0, s1, s2, jnp.zeros((), xb.dtype),
-                           jnp.asarray(xb.shape[0], xb.dtype))
+                           jnp.sum(wb))
 
 
 def lloyd_round_stats(centers: jax.Array, x, sample_weight=None,
@@ -355,42 +498,41 @@ def lloyd_round_stats(centers: jax.Array, x, sample_weight=None,
     the reduction runs through the §6 engine, so ``chunk_size`` bounds
     the working set. ``assign_backend`` must arrive resolved (the caller
     sits inside jit where "auto" has already been pinned)."""
-    k = centers.shape[0]
     if isinstance(x, DataSource):
         require_array_weights(sample_weight,
                               "lloyd_round_stats over a DataSource")
         return reduce_rows(
-            lambda xb: _lloyd_block(centers, xb, assign_backend), x,
+            lambda xb, wb: _lloyd_block(centers, xb, wb, assign_backend), x,
             chunk_size)
     w = (jnp.ones(x.shape[0], x.dtype) if sample_weight is None
          else sample_weight)
-
-    def block(xb, wb):
-        idx, d2 = _assign_block(xb, centers, assign_backend)
-        counts = jax.ops.segment_sum(wb, idx, num_segments=k)
-        sums = jax.ops.segment_sum(xb * wb[:, None], idx, num_segments=k)
-        return counts, sums, jnp.sum(d2 * wb)
-
-    return reduce_rows(block, (x, w), chunk_size)
+    return reduce_rows(
+        lambda xb, wb: _sweep_block(xb, wb, centers, assign_backend),
+        (x, w), chunk_size)
 
 
 def kmeans_source(key: jax.Array, source: DataSource, k: int,
                   max_iter: int = 100, tol: float = 1e-4,
                   chunk_size: Optional[int] = None,
-                  assign_backend: str = "auto") -> KMeansResult:
+                  assign_backend: str = "auto",
+                  init_centers: Optional[jax.Array] = None) -> KMeansResult:
     """Lloyd's algorithm over a :class:`DataSource`: streamed k-means++
     seeding, then host-driven sweeps accumulating (counts, sums, inertia)
     per block. Mirrors :func:`kmeans` (same update, same stopping rule,
     final re-score against the returned centers) except that assignments
-    are not collected — they would be the only O(N) output."""
+    are not collected — they would be the only O(N) output.
+    ``init_centers`` skips seeding, as in :func:`kmeans`."""
     chunk_size = resolve_source_chunk(chunk_size)
     backend = resolve_backend(assign_backend)
-    centers = kmeans_plusplus_streaming(key, source, k, chunk_size)
+    if init_centers is None:
+        centers = kmeans_plusplus_streaming(key, source, k, chunk_size)
+    else:
+        centers = init_centers
 
     def sweep(c):
-        return streaming_reduce(lambda xb: _lloyd_block(xb=xb, centers=c,
-                                                        backend=backend),
-                                source, chunk_size)
+        return streaming_reduce(
+            lambda xb, wb: _lloyd_block(c, xb, wb, backend),
+            source, chunk_size)
 
     it, shift, tol = 0, float("inf"), float(tol)
     while it < max_iter and shift > tol:
@@ -408,18 +550,37 @@ def kmeans_multi_source(key: jax.Array, source: DataSource, k: int,
                         max_iter: int = 100, tol: float = 1e-4,
                         n_init: int = 4,
                         chunk_size: Optional[int] = None,
-                        assign_backend: str = "auto") -> KMeansResult:
-    """Best of ``n_init`` out-of-core restarts by final-center inertia —
-    the source twin of :func:`kmeans_multi` (restarts run sequentially on
-    the host; each is a separate streamed run)."""
-    best = None
+                        assign_backend: str = "auto",
+                        pilot_iters: int = PILOT_ITERS) -> KMeansResult:
+    """Best of ``n_init`` out-of-core restarts — the source twin of
+    :func:`kmeans_multi`, pilot-pruned the same way: each seed streams
+    ``pilot_iters`` fixed Lloyd sweeps, the lowest pilot inertia wins, and
+    only the winner iterates to convergence (restarts run sequentially on
+    the host; N full-convergence streams became one)."""
+    if n_init == 1:
+        return kmeans_source(key, source, k, max_iter=max_iter, tol=tol,
+                             chunk_size=chunk_size,
+                             assign_backend=assign_backend)
+    chunk_size = resolve_source_chunk(chunk_size)
+    backend = resolve_backend(assign_backend)
+    best_centers, best_inertia = None, float("inf")
     for sub in jax.random.split(key, n_init):
-        res = kmeans_source(sub, source, k, max_iter=max_iter, tol=tol,
-                            chunk_size=chunk_size,
-                            assign_backend=assign_backend)
-        if best is None or float(res.inertia) < float(best.inertia):
-            best = res
-    return best
+        centers = kmeans_plusplus_streaming(sub, source, k, chunk_size)
+        inertia = float("inf")
+        for _ in range(pilot_iters):
+            counts, sums, inertia = streaming_reduce(
+                lambda xb, wb: _lloyd_block(centers, xb, wb, backend),
+                source, chunk_size)
+            centers = jnp.where(
+                counts[:, None] > 0,
+                sums / jnp.maximum(counts[:, None], 1e-12), centers)
+            inertia = float(inertia)
+        if inertia < best_inertia:
+            best_centers, best_inertia = centers, inertia
+    res = kmeans_source(key, source, k, max_iter=max_iter, tol=tol,
+                        chunk_size=chunk_size, assign_backend=backend,
+                        init_centers=best_centers)
+    return res._replace(n_iter=res.n_iter + pilot_iters)
 
 
 def federated_kmeans_from_sources(key: jax.Array,

@@ -30,12 +30,19 @@ whole stack); :class:`SyntheticGMMSource` duck-types the ``GMM`` pytree
 from __future__ import annotations
 
 import abc
+import queue
+import threading
 from functools import partial
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Default lookahead of :func:`prefetch_blocks` (how many prepared blocks a
+# loader keeps in flight ahead of the consumer). Module-level so tests and
+# benchmarks can pin it (0 = synchronous loop, no thread).
+PREFETCH_DEPTH = 2
 
 
 def _check_chunk(chunk_size: int) -> int:
@@ -85,6 +92,125 @@ class DataSource(abc.ABC):
     def __repr__(self) -> str:
         return (f"{type(self).__name__}(num_rows={self.num_rows}, "
                 f"dim={self.dim}, dtype={jnp.dtype(self.dtype).name})")
+
+
+# ----------------------------------------------------------------------
+# Prefetching block loader (DESIGN.md §7): pad-and-mask + double buffering
+# ----------------------------------------------------------------------
+
+def pad_target(num_rows: int, chunk_size: int) -> int:
+    """The ONE static row count every block of a ``(num_rows, chunk_size)``
+    stream is padded to. Multi-block streams pad the ragged tail up to the
+    full ``chunk_size`` (each per-block stage then compiles exactly once
+    per chunk shape); single-block streams round up to a multiple of 64 so
+    federated clients of slightly different sizes share traces instead of
+    each forcing one."""
+    chunk_size = _check_chunk(chunk_size)
+    if num_rows > chunk_size:
+        return chunk_size
+    return min(chunk_size, -(-num_rows // 64) * 64)
+
+
+@partial(jax.jit, static_argnames=("pad",))
+def _pad_rows(xb: jax.Array, pad: int) -> jax.Array:
+    return jnp.pad(xb, ((0, pad),) + ((0, 0),) * (xb.ndim - 1))
+
+
+_MASK_CACHE: dict = {}
+
+
+def _block_mask(target: int, valid: int, dtype) -> jax.Array:
+    """(target,) 0/1 row mask with ``valid`` leading ones — cached, so
+    every full block of a pass shares one buffer."""
+    key = (target, valid, jnp.dtype(dtype).name)
+    mask = _MASK_CACHE.get(key)
+    if mask is None:
+        mask = jnp.asarray(
+            np.r_[np.ones(valid), np.zeros(target - valid)].astype(dtype))
+        _MASK_CACHE[key] = mask
+    return mask
+
+
+_DONE = object()
+
+
+def prefetch_blocks(source: DataSource, chunk_size: int,
+                    depth: Optional[int] = None
+                    ) -> Iterator[tuple[jax.Array, jax.Array]]:
+    """Iterate ``(block, mask)`` pairs of a source with the next blocks
+    prepared ahead of the consumer — the host-side loader every engine
+    block loop drives (DESIGN.md §7).
+
+    Two jobs, one seam:
+
+    - **pad-and-mask**: every yielded block has the SAME static shape
+      (:func:`pad_target` rows), with a cached 0/1 row mask marking real
+      rows. Zero-padded rows carry weight 0 through every engine
+      statistic, so per-block jitted stages compile once per chunk shape
+      instead of once per distinct ragged tail.
+    - **prefetch**: with ``depth > 0`` a background thread stays up to
+      ``depth`` prepared blocks ahead, overlapping the host-side work of
+      block i+1 (mmap page-in, synthetic generation dispatch, slicing,
+      padding, ``jax.device_put``) with device compute on block i.
+      ``depth`` defaults to the module-level :data:`PREFETCH_DEPTH`;
+      ``depth=0`` runs the same prepare inline (no thread).
+
+    Block order is never changed — the consumer sees exactly the
+    partition ``iter_blocks`` emits, so accumulation order (and therefore
+    the bit-identity of source-backed fits) is untouched.
+    """
+    chunk_size = _check_chunk(chunk_size)
+    if depth is None:
+        depth = PREFETCH_DEPTH
+    target = pad_target(source.num_rows, chunk_size)
+    dtype = source.dtype
+
+    def prepare(xb):
+        b = xb.shape[0]
+        if b == target:
+            return jax.device_put(xb), _block_mask(target, b, dtype)
+        return (_pad_rows(jax.device_put(xb), target - b),
+                _block_mask(target, b, dtype))
+
+    if depth <= 0:
+        for xb in source.iter_blocks(chunk_size):
+            yield prepare(xb)
+        return
+
+    q: queue.Queue = queue.Queue(maxsize=int(depth))
+    stop = threading.Event()
+
+    def put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        try:
+            for xb in source.iter_blocks(chunk_size):
+                if not put((None, prepare(xb))):
+                    return
+            put((_DONE, None))
+        except BaseException as exc:  # noqa: BLE001 — re-raised downstream
+            put((exc, None))
+
+    thread = threading.Thread(target=producer, daemon=True,
+                              name="prefetch_blocks")
+    thread.start()
+    try:
+        while True:
+            tag, item = q.get()
+            if tag is _DONE:
+                return
+            if tag is not None:
+                raise tag
+            yield item
+    finally:
+        stop.set()
 
 
 class ArraySource(DataSource):
@@ -240,7 +366,7 @@ class SyntheticGMMSource(DataSource):
     module import-free below the stack.
     """
 
-    def __init__(self, gmm, num_rows: int, key):
+    def __init__(self, gmm, num_rows: int, key, cache_blocks: int = 1):
         num_rows = int(num_rows)
         if num_rows <= 0:
             raise ValueError(f"num_rows must be positive, got {num_rows}")
@@ -252,6 +378,13 @@ class SyntheticGMMSource(DataSource):
                        else jnp.linalg.cholesky(covs))
         self._key = key
         self._num_rows = num_rows
+        # Tiny sources (the FedGen synthetic-replay sets are a few thousand
+        # rows) pay the full generation dispatch chain on EVERY pass of a
+        # multi-pass fit. Sources that fit inside `cache_blocks` blocks keep
+        # their generated blocks; anything larger streams as before, so the
+        # O(chunk) working-set guarantee is untouched.
+        self._cache_blocks = int(cache_blocks)
+        self._cache: dict[int, list] = {}
 
     @property
     def num_rows(self) -> int:
@@ -267,10 +400,97 @@ class SyntheticGMMSource(DataSource):
 
     def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
         chunk_size = _check_chunk(chunk_size)
+        if self.num_blocks(chunk_size) <= self._cache_blocks:
+            blocks = self._cache.get(chunk_size)
+            if blocks is None:
+                blocks = [self._gen_block(start, chunk_size)
+                          for start in range(0, self._num_rows, chunk_size)]
+                self._cache[chunk_size] = blocks
+            yield from blocks
+            return
         for start in range(0, self._num_rows, chunk_size):
-            size = min(chunk_size, self._num_rows - start)
-            yield _synth_block(self._log_weights, self._means, self._scale,
-                               self._key, jnp.uint32(start), size)
+            yield self._gen_block(start, chunk_size)
+
+    def _gen_block(self, start: int, chunk_size: int) -> jax.Array:
+        size = min(chunk_size, self._num_rows - start)
+        return _synth_block(self._log_weights, self._means, self._scale,
+                            self._key, jnp.uint32(start), size)
+
+
+class ShuffledSource(DataSource):
+    """Windowed multi-epoch reshuffle of another source.
+
+    ``epoch=0`` is an exact passthrough — same blocks, same order, bit for
+    bit — so wrapping a source costs nothing until the caller actually asks
+    for a new ordering. For ``epoch >= 1``, rows are permuted inside
+    windows of ``window_blocks`` consecutive blocks (an O(window · chunk)
+    buffer, never O(N)), with the permutation keyed by
+    ``fold_in(fold_in(key, epoch), window_index)``: deterministic,
+    restartable, and different every epoch. ``with_epoch(e)`` derives the
+    next epoch's view without touching the wrapped source.
+
+    Streamed fits are pass-order-pinned by the bit-identity contract;
+    this wrapper is the sanctioned way to vary that order across epochs
+    (e.g. minibatch-flavoured EM) without giving up determinism.
+    """
+
+    def __init__(self, inner: DataSource, key, epoch: int = 0,
+                 window_blocks: int = 8):
+        self._inner = inner
+        self._key = key
+        self._epoch = int(epoch)
+        if self._epoch < 0:
+            raise ValueError(f"epoch must be >= 0, got {epoch}")
+        self._window_blocks = int(window_blocks)
+        if self._window_blocks <= 0:
+            raise ValueError(
+                f"window_blocks must be positive, got {window_blocks}")
+
+    @property
+    def num_rows(self) -> int:
+        return self._inner.num_rows
+
+    @property
+    def dim(self) -> int:
+        return self._inner.dim
+
+    @property
+    def dtype(self):
+        return self._inner.dtype
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def with_epoch(self, epoch: int) -> "ShuffledSource":
+        return ShuffledSource(self._inner, self._key, epoch,
+                              self._window_blocks)
+
+    def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
+        chunk_size = _check_chunk(chunk_size)
+        if self._epoch == 0:
+            yield from self._inner.iter_blocks(chunk_size)
+            return
+        ekey = jax.random.fold_in(self._key, jnp.uint32(self._epoch))
+        window: list[jax.Array] = []
+        widx = 0
+
+        def flush(window, widx):
+            buf = (window[0] if len(window) == 1
+                   else jnp.concatenate(window, axis=0))
+            perm = jax.random.permutation(
+                jax.random.fold_in(ekey, jnp.uint32(widx)), buf.shape[0])
+            buf = buf[perm]
+            for s in range(0, buf.shape[0], chunk_size):
+                yield buf[s:s + chunk_size]
+
+        for block in self._inner.iter_blocks(chunk_size):
+            window.append(block)
+            if len(window) == self._window_blocks:
+                yield from flush(window, widx)
+                window, widx = [], widx + 1
+        if window:
+            yield from flush(window, widx)
 
 
 def as_source(x) -> DataSource:

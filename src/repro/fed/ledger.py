@@ -77,12 +77,17 @@ class RoundPayload(NamedTuple):
     uplink_floats: int
     downlink_floats: int
     itemsize: int = 4
+    extra_uplink_floats: int = 0   # once-per-run uplink outside the round
+    #                                loop (e.g. final-center rescore
+    #                                scalars), added to the totals once
 
     def totals(self, rounds: int) -> CommStats:
-        return CommStats(rounds=rounds,
-                         uplink_floats=rounds * self.uplink_floats,
-                         downlink_floats=rounds * self.downlink_floats,
-                         itemsize=self.itemsize)
+        return CommStats(
+            rounds=rounds,
+            uplink_floats=rounds * self.uplink_floats
+            + self.extra_uplink_floats,
+            downlink_floats=rounds * self.downlink_floats,
+            itemsize=self.itemsize)
 
 
 # ----------------------------------------------------------------------

@@ -332,6 +332,13 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
         rounds = int(n_rounds)
         converged = bool(strategy.converged(state))
 
+    # Optional once-per-run epilogue (e.g. FedKMeans rescoring its final
+    # centers); runs eagerly after the loop, before the ledger is drawn up
+    # so the strategy's RoundPayload can account for it.
+    post = getattr(strategy, "post_rounds", None)
+    if post is not None and not getattr(strategy, "one_shot", False):
+        state = post(state, backend)
+
     payload = strategy.round_payload(backend, state)
     comm = payload.totals(rounds)
     return strategy.finalize(state, n_rounds, converged, comm)

@@ -31,6 +31,7 @@ run_rounds` owns all of that.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple, Optional
 
 import jax
@@ -58,13 +59,16 @@ class FedEMResult(NamedTuple):
 
 class FedEMState(NamedTuple):
     """DEM's round state plus the round counter that drives the cyclic
-    participation window."""
+    participation window and the per-cohort loglik history that makes
+    partial-participation convergence judgeable (see
+    :meth:`FedEMStrategy._next_state`)."""
     gmm: GMM
     prev_ll: jax.Array
     ll: jax.Array
     tol: jax.Array
     reg_covar: jax.Array
     rnd: jax.Array
+    ll_hist: jax.Array   # (T,) ring buffer, T = cohort cycle length
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,13 +104,40 @@ class FedEMStrategy(DEMStrategy):
             return self.n_clients
         return max(1, int(round(self.participation * self.n_clients)))
 
+    def _period(self) -> int:
+        """Rounds until the cyclic window revisits the same cohort: the
+        additive order of the window stride ``m`` in Z_C, i.e.
+        C / gcd(C, m). 1 under full participation."""
+        if self.participation >= 1.0:
+            return 1
+        c, m = self.n_clients, self.cohort_size()
+        return c // math.gcd(c, m)
+
     def _make_state(self, gmm, prev_ll, ll, tol, reg_covar):
         rnd = 0 if self.host else jnp.array(0)
-        return FedEMState(gmm, prev_ll, ll, tol, reg_covar, rnd)
+        hist = jnp.full((self._period(),), -jnp.inf, gmm.means.dtype)
+        return FedEMState(gmm, prev_ll, ll, tol, reg_covar, rnd, hist)
 
     def _next_state(self, state, gmm, ll):
-        return FedEMState(gmm, state.ll, ll, state.tol, state.reg_covar,
-                          state.rnd + 1)
+        t = self._period()
+        if t == 1:
+            # full participation: exactly DEM's consecutive-round delta
+            return FedEMState(gmm, state.ll, ll, state.tol, state.reg_covar,
+                              state.rnd + 1, state.ll_hist)
+        # Partial participation: consecutive rounds score DIFFERENT
+        # cohorts, so their loglik delta never settles below tol and the
+        # loop used to run to max_iter every time (the PR-5 caveat). The
+        # ring buffer makes prev_ll "this same cohort's loglik one cycle
+        # ago" — a like-for-like delta the inherited DEM predicates
+        # (|ll - prev_ll| vs tol) can judge. Slots still at -inf (first
+        # cycle) keep the loop going unconditionally.
+        pos = state.rnd % t
+        prev = state.ll_hist[pos]
+        hist = state.ll_hist.at[pos].set(ll)
+        if self.host:
+            prev = float(prev)
+        return FedEMState(gmm, prev, ll, state.tol, state.reg_covar,
+                          state.rnd + 1, hist)
 
     def _zero_stats(self, gmm: GMM) -> SufficientStats:
         """An inactive client's uplink: exact zeros in the stats shapes
@@ -192,10 +223,11 @@ def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
 
 class FedKMeansResult(NamedTuple):
     centers: jax.Array        # (K, d) global centers
-    inertia: jax.Array        # weighted inertia of the last assignment
-    #                           sweep (against the centers that produced
-    #                           the final update — scoring the returned
-    #                           centers would cost one extra round)
+    inertia: jax.Array        # weighted inertia of the RETURNED centers:
+    #                           one extra streamed assignment pass after
+    #                           the last round (clients ship one scalar
+    #                           each — accounted in comm as
+    #                           extra_uplink_floats)
     n_rounds: jax.Array
     converged: jax.Array
     comm: CommStats
@@ -274,12 +306,30 @@ class FedKMeansStrategy:
         like the EM loops."""
         return state.shift > state.tol
 
+    def post_rounds(self, state: FedKMeansState, backend) -> FedKMeansState:
+        """One extra assignment sweep against the FINAL centers, so the
+        reported inertia describes the centers the caller gets. The round
+        loop's own inertia scores the pre-update centers (the same bug
+        class PR 2 fixed in ``kmeans``); each client ships one scalar
+        back, accounted as ``extra_uplink_floats``."""
+
+        def rescore(st, x, w, idx):
+            _, _, inertia = lloyd_round_stats(st.centers, x, w,
+                                              self.assign_backend, self.chunk)
+            return inertia
+
+        inertia = backend.reduce_clients(rescore, state)
+        if self.host:
+            inertia = float(inertia)
+        return state._replace(inertia=inertia)
+
     def round_payload(self, backend, state) -> RoundPayload:
         c, d = backend.num_clients, backend.dim
         return RoundPayload(
             uplink_floats=c * label_payload_floats(self.k, d),
             downlink_floats=c * self.k * d,
-            itemsize=dtype_itemsize(state.centers.dtype))
+            itemsize=dtype_itemsize(state.centers.dtype),
+            extra_uplink_floats=c)   # the post-rounds inertia scalars
 
     def finalize(self, state: FedKMeansState, n_rounds, converged,
                  comm: CommStats) -> FedKMeansResult:

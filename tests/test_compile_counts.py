@@ -1,0 +1,138 @@
+"""Compilation-count regression suite for the out-of-core engine.
+
+The per-block dispatch tax this PR kills had two components: re-tracing
+(the ragged tail block used to arrive at its own shape, so every stage
+compiled twice per stream — and per-N on top for the host-loop helpers)
+and per-block dispatch overhead. The pad-and-mask contract
+(``prefetch_blocks`` pads every block to ONE static shape per stream and
+hands the engine a 0/1 row mask) makes compile counts O(1) in the number
+of blocks *and* in the number of distinct non-dividing source lengths.
+These tests pin that: the module-level jitted per-block kernels must not
+gain cache entries when the same pipeline runs over sources whose length
+does not divide the chunk size.
+
+Also pinned here: bit-identity of the prefetching loader against a
+synchronous block loop (depth must never reorder or alter blocks), and of
+``ShuffledSource`` at epoch 0 against its inner source.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import importlib
+
+import repro.core.em as em
+
+# `import repro.core.kmeans as km` would bind repro.core's re-exported
+# `kmeans` *function* (package attribute wins over submodule) — resolve
+# the module itself to reach the jitted per-block helpers.
+km = importlib.import_module("repro.core.kmeans")
+from repro.core.em import e_step_stats, fit_gmm, init_from_kmeans
+from repro.core.gmm import GMM
+from repro.data.sources import (ArraySource, ShuffledSource, pad_target,
+                                prefetch_blocks)
+
+CHUNK = 512  # never divides the Ns below -> every stream has a ragged tail
+NS = (2_999, 3_000, 3_001)
+D, K = 4, 3
+
+
+def _make_x(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 2.0, (n, D)).astype(np.float32))
+
+
+def _gmm():
+    rng = np.random.default_rng(1)
+    return GMM(jnp.full((K,), 1.0 / K),
+               jnp.asarray(rng.normal(0, 2.0, (K, D)).astype(np.float32)),
+               jnp.ones((K, D), jnp.float32))
+
+
+class TestCompileCounts:
+    def test_estep_blocks_compile_once_across_ragged_sources(self):
+        gmm = _gmm()
+        e_step_stats(gmm, ArraySource(_make_x(NS[0])), chunk_size=CHUNK)
+        baseline = em._estep_block_reference._cache_size()
+        for n in NS[1:]:
+            e_step_stats(gmm, ArraySource(_make_x(n)), chunk_size=CHUNK)
+        assert em._estep_block_reference._cache_size() == baseline
+
+    def test_fit_gmm_source_blocks_compile_once_across_ragged_sources(self):
+        fit_gmm(jax.random.key(0), ArraySource(_make_x(NS[0])), K,
+                max_iter=3, chunk_size=CHUNK)
+        baseline = em._estep_block_reference._cache_size()
+        for n in NS[1:]:
+            fit_gmm(jax.random.key(0), ArraySource(_make_x(n)), K,
+                    max_iter=3, chunk_size=CHUNK)
+        assert em._estep_block_reference._cache_size() == baseline
+
+    def test_kmeans_source_blocks_compile_once_across_ragged_sources(self):
+        km.kmeans_source(jax.random.key(0), ArraySource(_make_x(NS[0])),
+                             K, max_iter=3, chunk_size=CHUNK)
+        lloyd = km._lloyd_block._cache_size()
+        seed = km._seed_block._cache_size()
+        for n in NS[1:]:
+            km.kmeans_source(jax.random.key(0), ArraySource(_make_x(n)),
+                                 K, max_iter=3, chunk_size=CHUNK)
+        assert km._lloyd_block._cache_size() == lloyd
+        assert km._seed_block._cache_size() == seed
+
+    def test_init_from_kmeans_source_compiles_once_across_ragged_sources(
+            self):
+        init_from_kmeans(jax.random.key(0), ArraySource(_make_x(NS[0])), K,
+                         chunk_size=CHUNK)
+        label = km.kmeans_label_block._cache_size()
+        for n in NS[1:]:
+            init_from_kmeans(jax.random.key(0), ArraySource(_make_x(n)), K,
+                             chunk_size=CHUNK)
+        assert km.kmeans_label_block._cache_size() == label
+
+    def test_every_block_shares_one_padded_shape(self):
+        x = _make_x(NS[0])
+        shapes = {xb.shape for xb, _ in
+                  prefetch_blocks(ArraySource(x), CHUNK)}
+        assert shapes == {(CHUNK, D)}
+
+    def test_tiny_source_pads_to_its_64_bucket_not_the_chunk(self):
+        x = _make_x(70)
+        (xb, wb), = list(prefetch_blocks(ArraySource(x), CHUNK))
+        assert xb.shape == (pad_target(70, CHUNK), D) == (128, D)
+        assert float(jnp.sum(wb)) == 70.0
+
+
+class TestLoaderParity:
+    @pytest.mark.parametrize("depth", [1, 2, 3])
+    def test_prefetch_depth_is_bit_identical_to_sync_loop(self, depth):
+        src = ArraySource(_make_x(NS[0]))
+        sync = list(prefetch_blocks(src, CHUNK, depth=0))
+        pre = list(prefetch_blocks(src, CHUNK, depth=depth))
+        assert len(sync) == len(pre)
+        for (xs, ws), (xp, wp) in zip(sync, pre):
+            np.testing.assert_array_equal(np.asarray(xs), np.asarray(xp))
+            np.testing.assert_array_equal(np.asarray(ws), np.asarray(wp))
+
+    def test_abandoned_prefetch_iterator_shuts_down(self):
+        src = ArraySource(_make_x(NS[0]))
+        it = prefetch_blocks(src, CHUNK, depth=2)
+        next(it)
+        it.close()  # must not deadlock on the producer thread
+
+    def test_shuffled_epoch0_is_bit_identical_passthrough(self):
+        src = ArraySource(_make_x(NS[0]))
+        shuffled = ShuffledSource(src, jax.random.key(3), epoch=0)
+        plain = list(src.iter_blocks(CHUNK))
+        wrapped = list(shuffled.iter_blocks(CHUNK))
+        assert len(plain) == len(wrapped)
+        for a, b in zip(plain, wrapped):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shuffled_epoch0_estep_is_bit_identical(self):
+        gmm = _gmm()
+        src = ArraySource(_make_x(NS[0]))
+        base = e_step_stats(gmm, src, chunk_size=CHUNK)
+        shuf = e_step_stats(gmm, ShuffledSource(src, jax.random.key(3)),
+                            chunk_size=CHUNK)
+        for a, b in zip(base, shuf):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

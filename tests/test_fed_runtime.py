@@ -229,6 +229,19 @@ class TestFedEM:
         assert fr.comm.rounds == int(fr.n_rounds)
         assert bool(jnp.all(jnp.isfinite(fr.global_gmm.means)))
 
+    def test_partial_participation_converges_before_budget(self, split):
+        """Regression: with participation < 1 the old convergence check
+        compared consecutive rounds' log-likelihoods across *different*
+        cohorts, so cohort-composition noise swamped the tol and every
+        partial-participation run burned its full ``max_iter`` budget.
+        The per-cohort history fix compares same-cohort log-likelihoods
+        one cycle apart; on a well-separated planted mixture the run must
+        now terminate well before the budget, converged."""
+        fr = FedEM(3, participation=0.5, init="separated",
+                   max_iter=60).run(split, key=jax.random.key(7))
+        assert bool(fr.converged)
+        assert int(fr.n_rounds) < 60
+
     def test_local_epochs_still_fit_well(self, data, split):
         """Local epochs change the trajectory, not the destination: the
         fit stays in the centralized ballpark."""
@@ -272,8 +285,9 @@ class TestFedKMeans:
         c, k, d = split.data.shape[0], 3, split.data.shape[-1]
         res = FedKMeans(k, init="separated", max_iter=50).run(
             split, key=jax.random.key(2))
+        # + c: the post-rounds inertia rescore ships one scalar per client
         assert res.comm.uplink_floats == \
-            res.comm.rounds * c * label_payload_floats(k, d)
+            res.comm.rounds * c * label_payload_floats(k, d) + c
         assert res.comm.downlink_floats == res.comm.rounds * c * k * d
 
     def test_separated_init_iterates(self, split):
@@ -293,6 +307,21 @@ class TestFedKMeans:
         from repro.core.kmeans import lloyd_round_stats
         _, _, fed_inertia = lloyd_round_stats(res.centers, xj)
         assert float(fed_inertia) < 1.1 * float(bench.inertia)
+
+    def test_inertia_is_rescored_against_returned_centers(self, split):
+        """Regression: ``FedKMeansResult.inertia`` used to be the
+        *pre-update* inertia of the last round (each round scores the
+        broadcast centers, then moves them), so it never described the
+        returned centers. The post-rounds rescore pins it to a streamed
+        sweep of the final centers — reproduced here client-by-client,
+        exactly as the backend reduces it."""
+        from repro.core.kmeans import lloyd_round_stats
+        res = FedKMeans(3).run(split, key=jax.random.key(3))
+        per = jax.vmap(
+            lambda x, w: lloyd_round_stats(res.centers, x, w)[2])(
+            split.data, split.mask)
+        np.testing.assert_array_equal(np.asarray(res.inertia),
+                                      np.asarray(jnp.sum(per)))
 
     def test_init_validation(self):
         with pytest.raises(ValueError, match="FedKMeans init"):

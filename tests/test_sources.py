@@ -7,7 +7,8 @@ import pytest
 
 from repro.core.gmm import GMM
 from repro.data.sources import (ArraySource, ConcatSource, DataSource,
-                                NpyFileSource, SyntheticGMMSource, as_source)
+                                NpyFileSource, ShuffledSource,
+                                SyntheticGMMSource, as_source)
 
 
 @pytest.fixture(scope="module")
@@ -161,6 +162,61 @@ class TestSyntheticGMMSource:
     def test_rejects_zero_rows(self, gmm):
         with pytest.raises(ValueError):
             SyntheticGMMSource(gmm, 0, jax.random.key(0))
+
+
+class TestShuffledSource:
+    CHUNK = 128  # 1000 rows -> 7 full blocks + 104-row ragged tail
+
+    def test_protocol_passthrough(self, rows):
+        src = ShuffledSource(ArraySource(rows), jax.random.key(1))
+        assert (src.num_rows, src.dim) == (1000, 5)
+        assert src.dtype == jnp.float32
+        assert src.epoch == 0
+
+    def test_epoch_shuffles_rows_but_keeps_partition(self, rows):
+        base = ArraySource(rows)
+        plain = blocks_of(base, self.CHUNK)
+        shuf = blocks_of(ShuffledSource(base, jax.random.key(1), epoch=1),
+                         self.CHUNK)
+        # identical block-size partition (the engine pads per shape, so a
+        # shuffle must never invent new block shapes) ...
+        assert [b.shape for b in shuf] == [b.shape for b in plain]
+        # ... identical row multiset ...
+        sorted_rows = lambda bs: np.sort(np.concatenate(bs), axis=0)
+        np.testing.assert_array_equal(sorted_rows(shuf), sorted_rows(plain))
+        # ... but an actually different order
+        assert not all(np.array_equal(a, b) for a, b in zip(plain, shuf))
+
+    def test_epochs_are_deterministic_and_distinct(self, rows):
+        base = ArraySource(rows)
+        src = ShuffledSource(base, jax.random.key(1), epoch=2)
+        again = ShuffledSource(base, jax.random.key(1)).with_epoch(2)
+        for a, b in zip(blocks_of(src, self.CHUNK),
+                        blocks_of(again, self.CHUNK)):
+            np.testing.assert_array_equal(a, b)
+        other = blocks_of(src.with_epoch(3), self.CHUNK)
+        assert not all(np.array_equal(a, b) for a, b in
+                       zip(blocks_of(src, self.CHUNK), other))
+
+    def test_shuffle_is_windowed_not_global(self, rows):
+        """Rows only move within windows of ``window_blocks`` blocks —
+        the O(window · chunk) buffer bound, pinned behaviorally."""
+        src = ShuffledSource(ArraySource(rows), jax.random.key(5), epoch=1,
+                             window_blocks=2)
+        shuf = np.concatenate(blocks_of(src, self.CHUNK))
+        window_rows = 2 * self.CHUNK
+        for start in range(0, 1000, window_rows):
+            got = shuf[start:start + window_rows]
+            want = rows[start:start + window_rows]
+            np.testing.assert_array_equal(np.sort(got, axis=0),
+                                          np.sort(want, axis=0))
+
+    def test_validation(self, rows):
+        with pytest.raises(ValueError, match="epoch"):
+            ShuffledSource(ArraySource(rows), jax.random.key(0), epoch=-1)
+        with pytest.raises(ValueError, match="window_blocks"):
+            ShuffledSource(ArraySource(rows), jax.random.key(0),
+                           window_blocks=0)
 
 
 class TestEngineValidation:

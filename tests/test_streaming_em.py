@@ -128,6 +128,22 @@ class TestChunkedVsFullBatch:
         with pytest.raises(ValueError, match="chunk_size"):
             e_step_stats_chunked(gmm, x, chunk_size=0)
 
+    # width 2 divides the 8-chunk stack, 3 leaves a ragged super-chunk
+    @pytest.mark.parametrize("scan_width", [2, 3, 8])
+    def test_two_level_scan_matches_width_one(self, scan_width):
+        """The 2-level scan (vmapped super-chunks) changes reduction
+        *order*, not value: f32-rounding-level agreement with the serial
+        width-1 scan, which stays the reproducibility default."""
+        rng = np.random.default_rng(5)
+        gmm = random_diag_gmm(rng, 5, 7)
+        x = jnp.asarray(rng.normal(0, 2, (1000, 7)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0, 1, 1000), jnp.float32)
+        serial = e_step_stats(gmm, x, w, estep_backend="reference",
+                              chunk_size=128)
+        wide = e_step_stats(gmm, x, w, estep_backend="reference",
+                            chunk_size=128, scan_width=scan_width)
+        assert_stats_close(serial, wide, rtol=1e-3, atol=1e-2)
+
 
 @pytest.mark.slow
 class TestEndToEndParity:
