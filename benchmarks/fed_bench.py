@@ -24,6 +24,15 @@ training union (Eq. 2); FedKMeans has no likelihood and reports
 ``inertia_per_row`` (lower is better) — the ``metric`` field names the
 unit so downstream tooling never compares across meanings.
 
+Full and dry modes also stage the **population benchmark** (DESIGN.md §9,
+"cohort execution"): a 1k-client Dirichlet population on which every
+FedEM round samples a cohort of m clients, timed across
+m ∈ {8, 32, 128, 1000} against a frozen copy of the PR-6
+train-all+zero-mask path. The ``population`` section of the report
+carries the wall-clock-vs-cohort-size curve and the m=32 speedup; full
+mode FAILS (RuntimeError) if sampling a 32-cohort is not at least 5x
+faster per round than masking all 1000 — the tentpole claim, guarded.
+
 Quick (CI) mode scales down and prints rows only; ``--dry-run`` shrinks
 to tiny N / capped rounds and *validates the report schema* instead of
 recording timings — that is what the CI bench-smoke lane runs.
@@ -31,6 +40,7 @@ recording timings — that is what the CI bench-smoke lane runs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -40,7 +50,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import (DEM, FedEM, FedGenGMM, FedKMeans, FitConfig, score)
+from repro.core.em import SufficientStats, e_step_stats, m_step
 from repro.core.partition import partition
+from repro.fed import CyclicSampler, run_rounds
+from repro.fed.strategies import FedEMStrategy
 
 N_FULL, N_QUICK, N_DRY = 20_000, 4_000, 512
 D, K, CLIENTS, ALPHA = 8, 5, 8, 0.5
@@ -49,6 +62,13 @@ JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_comm.json"
 STRATEGIES = ("fedgen", "dem", "fedem", "fedkmeans")
 ROW_FIELDS = ("metric", "value", "rounds", "uplink_floats",
               "downlink_floats", "payload_mb", "seconds")
+
+# population benchmark: C clients, cohort sizes to sweep, rounds timed
+POP_FULL = dict(clients=1_000, n=50_000, cohorts=(8, 32, 128, 1_000),
+                guard_m=32, rounds=6)
+POP_DRY = dict(clients=48, n=960, cohorts=(4, 16, 48), guard_m=16,
+               rounds=2)
+POP_MIN_SPEEDUP = 5.0
 
 
 def validate_report(report: dict) -> None:
@@ -86,9 +106,143 @@ def validate_report(report: dict) -> None:
             if not isinstance(v, (int, float)) or v < 0:
                 problems.append(f"strategies.{name}.{field} must be a "
                                 f"non-negative number, got {v!r}")
+    if "population" in report:
+        _validate_population(report["population"], problems)
     if problems:
         raise ValueError("BENCH_comm.json schema violations:\n  "
                          + "\n  ".join(problems))
+
+
+def _validate_population(section: dict, problems: list[str]) -> None:
+    for field in ("clients", "n", "rounds"):
+        v = section.get(field)
+        if not isinstance(v, int) or v < 1:
+            problems.append(f"population.{field} must be a positive int, "
+                            f"got {v!r}")
+    curve = section.get("curve")
+    if not isinstance(curve, list) or not curve:
+        problems.append("population.curve must be a non-empty list")
+        curve = []
+    for i, pt in enumerate(curve):
+        m = pt.get("cohort_size")
+        if not isinstance(m, int) or m < 1:
+            problems.append(f"population.curve[{i}].cohort_size must be "
+                            f"a positive int, got {m!r}")
+        s = pt.get("seconds_per_round")
+        if not isinstance(s, (int, float)) or s < 0:
+            problems.append(f"population.curve[{i}].seconds_per_round "
+                            f"must be a non-negative number, got {s!r}")
+    base = section.get("baseline_zero_mask", {})
+    if not isinstance(base.get("seconds_per_round"), (int, float)):
+        problems.append("population.baseline_zero_mask.seconds_per_round "
+                        "must be a number")
+    if not isinstance(section.get("guard_cohort_size"), int):
+        problems.append("population.guard_cohort_size must be an int")
+    if not isinstance(section.get("guard_speedup"), (int, float)):
+        problems.append("population.guard_speedup must be a number")
+
+
+@dataclasses.dataclass(frozen=True)
+class _ZeroMaskFedEM(FedEMStrategy):
+    """Frozen copy of the PR-6 FedEM participation path (train-all +
+    zero-mask): every one of the C clients runs its E-step every round
+    and non-members multiply their stats by 0. This is the baseline the
+    cohort execution layer is measured against — kept inside the bench
+    so the comparison survives even after the production path forgets
+    this shape ever existed."""
+
+    def local_step(self, state, x, w, idx):
+        active = None
+        if self.participation < 1.0:
+            c, m = self.n_clients, self.cohort_size()
+            start = (state.rnd * m) % c
+            active = ((idx - start) % c) < m
+        gmm = state.gmm
+        stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
+        for _ in range(self.local_epochs - 1):
+            gmm = m_step(stats, state.reg_covar)
+            stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
+        if active is not None:
+            stats = jax.tree.map(
+                lambda s: s * jnp.asarray(active, s.dtype), stats)
+        return stats
+
+
+def _pop_strategy(cls, m: int, clients: int) -> FedEMStrategy:
+    # tol=1e-30 never triggers the ring-buffer convergence check, so the
+    # loop always runs the full static max_rounds — clean per-round time
+    return cls(k=K, covariance_type="diag", backend="auto", chunk=None,
+               init="separated", host=False, tol=1e-30, reg_covar=1e-6,
+               participation=m / clients, local_epochs=1,
+               n_clients=clients)
+
+
+def _timed_rounds(strategy, split, state0, rounds, sampler=None) -> float:
+    """Seconds per round, after a warmup run pays for compilation."""
+    def go():
+        res = run_rounds(strategy, split, key=jax.random.key(0),
+                         state0=state0, max_rounds=rounds, sampler=sampler)
+        jax.block_until_ready(res.global_gmm.means)
+        return res
+    go()  # warmup: compile
+    t0 = time.time()
+    go()
+    return (time.time() - t0) / rounds
+
+
+def run_population(dry_run: bool = False) -> tuple[dict, list[str]]:
+    """The O(cohort)-vs-O(population) measurement: per-round wall clock
+    of cohort-sampled FedEM across cohort sizes on one Dirichlet
+    population, against the frozen zero-mask baseline at the guard
+    cohort size."""
+    p = POP_DRY if dry_run else POP_FULL
+    c, n, rounds = p["clients"], p["n"], p["rounds"]
+    rng = np.random.default_rng(2)
+    mus = rng.normal(0, 5, (K, D)).astype(np.float32)
+    y = rng.integers(0, K, n)
+    x = (mus[y] + rng.normal(0, 0.6, (n, D))).astype(np.float32)
+    split = partition(np.random.default_rng(3), x, y, c, "dirichlet",
+                      ALPHA)
+
+    # one shared initial model so every timed run does identical math
+    # (the round-0 state itself is per-strategy: the convergence ring
+    # buffer's length depends on the cohort-cycle period)
+    from repro.fed.runtime import make_backend
+    ref = _pop_strategy(FedEMStrategy, p["guard_m"], c)
+    gmm0 = ref.init_state(jax.random.key(1), make_backend(split)).gmm
+
+    section = {"clients": c, "n": n, "rounds": rounds, "alpha": ALPHA,
+               "scheme": "dirichlet", "curve": []}
+    rows = []
+    for m in p["cohorts"]:
+        strat = _pop_strategy(FedEMStrategy, m, c)
+        sampler = CyclicSampler(c, m) if m < c else None
+        state0 = strat.state_from_gmm(gmm0, dtype=jnp.float32)
+        secs = _timed_rounds(strat, split, state0, rounds, sampler)
+        section["curve"].append(
+            {"cohort_size": m, "seconds_per_round": round(secs, 6)})
+        rows.append(f"fed_pop/cohort_m{m}/C{c}n{n},{secs * 1e6:.0f},"
+                    f"{rounds}r")
+
+    base = _pop_strategy(_ZeroMaskFedEM, p["guard_m"], c)
+    base_secs = _timed_rounds(
+        base, split, base.state_from_gmm(gmm0, dtype=jnp.float32), rounds)
+    section["baseline_zero_mask"] = {
+        "cohort_size": p["guard_m"],
+        "seconds_per_round": round(base_secs, 6)}
+    guard_secs = next(pt["seconds_per_round"] for pt in section["curve"]
+                      if pt["cohort_size"] == p["guard_m"])
+    speedup = base_secs / max(guard_secs, 1e-12)
+    section["guard_cohort_size"] = p["guard_m"]
+    section["guard_speedup"] = round(speedup, 3)
+    rows.append(f"fed_pop/zero_mask_baseline_m{p['guard_m']}/C{c}n{n},"
+                f"{base_secs * 1e6:.0f},{speedup:.1f}x")
+    if not dry_run and speedup < POP_MIN_SPEEDUP:
+        raise RuntimeError(
+            f"cohort execution regressed: m={p['guard_m']} cohort round "
+            f"is only {speedup:.2f}x faster than the zero-mask "
+            f"train-all baseline (guard: >= {POP_MIN_SPEEDUP}x)")
+    return section, rows
 
 
 def _ledger_row(metric: str, value: float, comm, seconds: float) -> dict:
@@ -154,6 +308,13 @@ def run(quick: bool = True, dry_run: bool = False) -> list[str]:
                     f"{secs * 1e6:.0f},{row['rounds']}r "
                     f"{row['payload_mb']:.4f}MB {row['metric']}="
                     f"{row['value']:.4f}")
+    # population benchmark: full mode measures + guards the 1k-client
+    # speedup claim; dry mode runs a tiny population to validate the
+    # schema; quick (orchestrator) mode skips it for CI latency
+    if dry_run or not quick:
+        section, pop_rows = run_population(dry_run=dry_run)
+        report["population"] = section
+        rows.extend(pop_rows)
     validate_report(report)
     if dry_run:
         rows.append("# dry-run: report schema OK, numbers are placeholders")

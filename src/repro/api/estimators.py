@@ -403,22 +403,36 @@ class FedEM:
     ``run(clients)`` dispatches like :class:`DEM` (ClientSplit or list of
     per-client DataSources; the sharded-mesh variant is
     ``repro.distributed.fedem_sharded``). ``participation`` in (0, 1] is
-    the per-round cohort fraction (cyclic, deterministic, never empty);
-    ``local_epochs >= 1`` the client-side EM steps per round. Init comes
-    from ``FitConfig.init`` exactly as in DEM. Returns a
+    the per-round cohort fraction; ``cohort`` picks how the driver
+    samples it — ``"cyclic"`` (deterministic window, never empty, covers
+    every client) or ``"uniform"`` (seeded sampling without replacement,
+    ``cohort_seed``) — and ONLY the sampled clients compute, so a round
+    costs O(cohort). ``stragglers`` (an
+    :class:`repro.fed.ArrivalStragglers` or any ``drop_mask`` policy)
+    drops each round's slowest arrivals to exact-zero contribution.
+    ``local_epochs >= 1`` is the client-side EM steps per round. Init
+    comes from ``FitConfig.init`` exactly as in DEM. Returns a
     :class:`repro.fed.strategies.FedEMResult` with the populated
-    cohort-sized communication ledger.
+    cohort-sized communication ledger (init-phase warm-start traffic
+    included).
     """
 
     def __init__(self, k: int, *, participation: float = 1.0,
-                 local_epochs: int = 1,
+                 local_epochs: int = 1, cohort: str = "cyclic",
+                 cohort_seed: int = 0, stragglers=None,
                  config: Optional[FitConfig] = None, **overrides):
         self.k = _as_int(k, "k")
         if not 0.0 < float(participation) <= 1.0:
             raise ValueError(
                 f"participation must be in (0, 1], got {participation}")
+        if cohort not in ("cyclic", "uniform"):
+            raise ValueError(
+                f"cohort must be 'cyclic' or 'uniform', got {cohort!r}")
         self.participation = float(participation)
         self.local_epochs = _as_int(local_epochs, "local_epochs")
+        self.cohort = cohort
+        self.cohort_seed = _as_int(cohort_seed, "cohort_seed", minimum=0)
+        self.stragglers = stragglers
         self.config = _make_config(config, overrides)
         # same strategy rule as DEM: validate the init scheme name now,
         # resolve "auto" per input type at run()
@@ -430,7 +444,10 @@ class FedEM:
         key = _resolve_key(key, self.config)
         self.result_ = fedem_cfg(key, clients, self.config, self.k,
                                  participation=self.participation,
-                                 local_epochs=self.local_epochs)
+                                 local_epochs=self.local_epochs,
+                                 cohort=self.cohort,
+                                 cohort_seed=self.cohort_seed,
+                                 stragglers=self.stragglers)
         return self.result_
 
     @property
@@ -482,7 +499,7 @@ _STRATEGY_RUNNERS = {"fedgen": FedGenGMM, "dem": DEM, "fedem": FedEM,
 
 def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
                   config: Optional[FitConfig] = None, max_rounds=None,
-                  **kwargs):
+                  sampler=None, stragglers=None, **kwargs):
     """THE strategy seam for FitConfig-driven federated runs (§9).
 
     ``strategy`` is either a name — ``"fedgen"`` | ``"dem"`` | ``"fedem"``
@@ -490,9 +507,14 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
     the remaining keyword arguments (``k=...``, ``participation=...``,
     ...), or a custom :class:`repro.fed.FederationStrategy` instance,
     which runs directly on the round driver (``max_rounds`` then bounds
-    it; default: the config's EM round budget). Scenario PRs plug in
-    HERE: a new baseline is one strategy class, not a new entry-point
-    family.
+    it; default: the config's EM round budget). Custom strategies also
+    take the driver's cohort-execution seams directly: ``sampler`` (a
+    ``repro.fed.cohort`` sampler — each round computes only its sampled
+    cohort) and ``stragglers`` (a ``drop_mask`` policy). Named
+    strategies express the same knobs through their own keywords
+    (``participation=...``, ``cohort=...``, ``stragglers=...`` for
+    FedEM). Scenario PRs plug in HERE: a new baseline is one strategy
+    class, not a new entry-point family.
     """
     if isinstance(strategy, str):
         if strategy not in _STRATEGY_RUNNERS:
@@ -504,6 +526,13 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
             raise TypeError(
                 "max_rounds is for custom FederationStrategy instances; "
                 "named strategies take FitConfig.max_iter")
+        if sampler is not None:
+            raise TypeError(
+                "sampler is for custom FederationStrategy instances; "
+                "named strategies build their own (FedEM: participation="
+                "... with cohort='cyclic'|'uniform')")
+        if stragglers is not None:
+            kwargs["stragglers"] = stragglers
         runner = _STRATEGY_RUNNERS[strategy](config=config, **kwargs)
         return runner.run(clients, key=key)
     if not isinstance(strategy, FederationStrategy):
@@ -520,4 +549,5 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
         max_rounds = 1 if getattr(strategy, "one_shot", False) \
             else cfg.resolve_max_iter("em")
     key = _resolve_key(key, cfg)
-    return run_rounds(strategy, clients, key=key, max_rounds=max_rounds)
+    return run_rounds(strategy, clients, key=key, max_rounds=max_rounds,
+                      sampler=sampler, stragglers=stragglers)

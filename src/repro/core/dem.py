@@ -107,8 +107,13 @@ def max_separated_centers(key: jax.Array, k: int, d: int,
     return centers
 
 
+# Init 2's pilot subset size (raw rows uploaded to the server) — also
+# what the comm ledger charges a pilot init for.
+PILOT_ROWS = 100
+
+
 def pilot_subset_centers(key: jax.Array, split: ClientSplit, k: int,
-                         n_pilot: int = 100) -> jax.Array:
+                         n_pilot: int = PILOT_ROWS) -> jax.Array:
     """Init 2: clients upload a tiny uniform subset (n_pilot points total);
     the server fits a pilot GMM and uses its means. NOTE: uploads raw data."""
     data = jnp.asarray(split.data).reshape(-1, split.data.shape[-1])
@@ -261,10 +266,27 @@ class DEMStrategy:
     def round_payload(self, backend, state) -> RoundPayload:
         c, d = backend.num_clients, backend.dim
         diag = self.covariance_type == "diag"
+        # Under a cohort sampler the driver's accounting view reports
+        # num_clients == cohort size (per-round traffic) while
+        # population_clients stays C — init-phase traffic touches the
+        # whole population exactly once.
+        pop = getattr(backend, "population_clients", c)
+        if self.init == "fed-kmeans":
+            # one-shot warm start: every client uploads its k local
+            # centers + k cluster sizes (Dennis et al. '21)
+            init_up = pop * (self.k * d + self.k)
+        elif self.init == "pilot":
+            init_up = PILOT_ROWS * d   # raw pilot rows to the server
+        else:  # "separated": server-side construction, no uplink
+            init_up = 0
         return RoundPayload(
             uplink_floats=c * stats_payload_floats(self.k, d, diag),
             downlink_floats=c * gmm_payload_floats(self.k, d, diag),
-            itemsize=dtype_itemsize(state.gmm.means.dtype))
+            itemsize=dtype_itemsize(state.gmm.means.dtype),
+            extra_uplink_floats=init_up,
+            # the round-0 global model broadcast (every init scheme ends
+            # in one; warm starts used to ride the ledger for free)
+            extra_downlink_floats=pop * gmm_payload_floats(self.k, d, diag))
 
     def finalize(self, state: DEMState, n_rounds, converged,
                  comm: CommStats) -> DEMResult:

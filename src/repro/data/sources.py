@@ -30,6 +30,7 @@ whole stack); :class:`SyntheticGMMSource` duck-types the ``GMM`` pytree
 from __future__ import annotations
 
 import abc
+import os
 import queue
 import threading
 from functools import partial
@@ -39,10 +40,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+
+def default_prefetch_depth() -> int:
+    """Host-aware default lookahead for :func:`prefetch_blocks`.
+
+    The producer thread only pays off when it has a core to run on: on a
+    1–2-core host it competes with device compute and loses (the
+    ``estep_source_prefetch{0,1,2}_us`` rows of BENCH_streaming.json
+    document depth 0 winning there), so ``os.cpu_count() <= 2`` defaults
+    to 0 (synchronous loop, no thread) and anything wider keeps the
+    historical depth 2. The ``REPRO_PREFETCH_DEPTH`` environment
+    variable overrides the heuristic outright (and call sites can always
+    pass ``depth=`` explicitly).
+    """
+    env = os.environ.get("REPRO_PREFETCH_DEPTH")
+    if env is not None:
+        depth = int(env)
+        if depth < 0:
+            raise ValueError(
+                f"REPRO_PREFETCH_DEPTH must be >= 0, got {env!r}")
+        return depth
+    cpus = os.cpu_count() or 1
+    return 0 if cpus <= 2 else 2
+
+
 # Default lookahead of :func:`prefetch_blocks` (how many prepared blocks a
-# loader keeps in flight ahead of the consumer). Module-level so tests and
-# benchmarks can pin it (0 = synchronous loop, no thread).
-PREFETCH_DEPTH = 2
+# loader keeps in flight ahead of the consumer), auto-sized from the host
+# core count. Module-level so tests and benchmarks can pin it (0 =
+# synchronous loop, no thread).
+PREFETCH_DEPTH = default_prefetch_depth()
 
 
 def _check_chunk(chunk_size: int) -> int:

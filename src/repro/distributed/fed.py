@@ -39,6 +39,7 @@ from repro.core.dem import DEMStrategy, _resolve_init
 from repro.core.em import fit_gmm_cfg, init_from_means
 from repro.core.gmm import GMM, merge_gmms_stacked
 from repro.data.sources import SyntheticGMMSource
+from repro.fed.cohort import make_sampler
 from repro.fed.runtime import run_rounds
 from repro.fed.strategies import (FedEMResult, FedEMStrategy,
                                   FedKMeansResult, FedKMeansStrategy,
@@ -164,14 +165,19 @@ def dem_sharded(mesh, key, data, mask, k: int, init_centers,
 
 def fedem_sharded(mesh, key, data, mask, k: int, *,
                   participation: float = 1.0, local_epochs: int = 1,
-                  init_centers=None,
+                  cohort: str = "cyclic", cohort_seed: int = 0,
+                  stragglers=None, init_centers=None,
                   config: FitConfig | None = None) -> FedEMResult:
     """Iterative federated EM (Tian et al.) over the mesh: DEM's psum
-    pattern with the partial-participation / local-epochs knobs. The
-    result carries the populated communication ledger (cohort-sized
-    uplink per round). ``init_centers`` overrides the scheme init from
-    ``config.init`` (which resolves exactly as in single-process FedEM:
-    "auto" -> one-shot fed-kmeans)."""
+    pattern with the partial-participation / local-epochs knobs. Under
+    ``participation < 1`` the driver samples a cohort per round
+    (``cohort``: "cyclic" or seeded "uniform") and each shard computes
+    ONLY the cohort members it owns — per-shard round cost is O(m), not
+    O(clients/shard). The result carries the populated communication
+    ledger (cohort-sized uplink per round, init traffic included).
+    ``init_centers`` overrides the scheme init from ``config.init``
+    (which resolves exactly as in single-process FedEM: "auto" ->
+    one-shot fed-kmeans)."""
     cfg = config if config is not None else FitConfig()
     data, mask = jnp.asarray(data), jnp.asarray(mask)
     strategy = FedEMStrategy(
@@ -181,6 +187,10 @@ def fedem_sharded(mesh, key, data, mask, k: int, *,
         tol=cfg.resolve_tol("em"), reg_covar=cfg.reg_covar,
         participation=float(participation), local_epochs=int(local_epochs),
         n_clients=data.shape[0])
+    sampler = None
+    if strategy.participation < 1.0:
+        sampler = make_sampler(cohort, data.shape[0],
+                               strategy.cohort_size(), seed=cohort_seed)
     state0 = None
     if init_centers is not None:
         d = data.shape[-1]
@@ -191,7 +201,8 @@ def fedem_sharded(mesh, key, data, mask, k: int, *,
         state0 = strategy.state_from_gmm(gmm0, dtype=data.dtype)
     return run_rounds(strategy, (data, mask), key=key, mesh=mesh,
                       state0=state0,
-                      max_rounds=cfg.resolve_max_iter("em"))
+                      max_rounds=cfg.resolve_max_iter("em"),
+                      sampler=sampler, stragglers=stragglers)
 
 
 def fed_kmeans_sharded(mesh, key, data, mask, k: int, *,

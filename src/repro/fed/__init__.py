@@ -11,6 +11,8 @@ FedEM and FedKMeans (``repro.fed.strategies``). The ledger
 for the shared init machinery, and ``repro.core`` imports this package's
 runtime — eager loading here would close that cycle.
 """
+from repro.fed.cohort import (ArrivalStragglers, CyclicSampler,
+                              UniformSampler, make_sampler)
 from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
                               gmm_payload_floats, label_payload_floats,
                               payload_floats, stats_payload_floats)
@@ -28,6 +30,7 @@ _LAZY = {
 }
 
 __all__ = [
+    "ArrivalStragglers", "CyclicSampler", "UniformSampler", "make_sampler",
     "CommStats", "RoundPayload", "dtype_itemsize", "gmm_payload_floats",
     "label_payload_floats", "payload_floats", "stats_payload_floats",
     "FederationStrategy", "SplitClients", "SourceClients", "ShardedClients",

@@ -1,0 +1,156 @@
+"""Cohort sampling and straggler handling for the federation runtime
+(DESIGN.md §9, "cohort execution").
+
+Production FL populations are mostly idle: a participation-0.03 round at
+C = 1000 touches 30 clients, and the round's cost must scale with those
+30, not the 1000. This module owns the two seams the round driver
+(``repro.fed.runtime.run_rounds``) threads through every backend:
+
+- a **cohort sampler** — ``cohort(key, rnd) -> (m,)`` sorted global
+  client indices, the clients round ``rnd`` actually trains.
+  :class:`CyclicSampler` reproduces FedEM's historical deterministic
+  window (round r takes clients ``[r·m, r·m + m) mod C`` — pinned
+  bit-identical to the PR-6 train-all+zero-mask path in
+  ``tests/test_fed_runtime.py``); :class:`UniformSampler` is seeded
+  uniform sampling without replacement (Tian et al.'s
+  partial-participation regime).
+- a **straggler policy** — ``drop_mask(key, rnd, cohort) -> (m,)`` 0/1
+  weights over the sampled cohort. :class:`ArrivalStragglers` simulates a
+  per-round timeout: every cohort member draws an arrival time, the
+  slowest ``drop_frac`` fraction misses the deadline, and the round
+  reduces over the survivors only (exact-zero contribution from the
+  dropped — the DEM zero-weight masking, driven by arrival order).
+
+Both are frozen hashable dataclasses, because they ride the jitted round
+loop as *static* arguments: the membership logic is part of the compiled
+program, but the PRNG **seed is deliberately excluded from the hash/eq**
+(``compare=False``) and enters the computation through a traced key — so
+re-seeding the sampler, and therefore changing which clients participate,
+NEVER retraces the loop. Cohort *size* (``m``) is static: one compiled
+shape serves all rounds at a fixed m.
+
+Samplers return **sorted ascending** indices. On the vmap backends the
+order is erased by the scatter-sum reduction; on the host (source)
+backend it fixes the client iteration order, keeping the f32
+summation order identical to the historical loop over ``enumerate``
+(bit-identity again).
+
+This module is repro-free below ``repro.fed.runtime`` (jax + stdlib
+only), so the runtime imports it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CyclicSampler:
+    """Deterministic cyclic cohorts: round ``rnd`` takes the window
+    ``[rnd·m, rnd·m + m) mod C`` — exactly the window FedEM's zero-mask
+    path computed per client, now computed once by the driver. Cohorts
+    are non-empty, cover every client within one cycle (period
+    ``C / gcd(C, m)``), and ignore the PRNG key entirely."""
+
+    num_clients: int
+    cohort_size: int
+
+    name = "cyclic"
+
+    def __post_init__(self):
+        _validate_sizes(self.num_clients, self.cohort_size)
+
+    def cohort(self, key, rnd):
+        c, m = self.num_clients, self.cohort_size
+        start = (rnd * m) % c
+        idx = (start + jnp.arange(m, dtype=jnp.int32)) % c
+        # the window wraps at most once, so sorting restores ascending
+        # global order (what the host backend iterates in)
+        return jnp.sort(idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler:
+    """Seeded uniform sampling without replacement: round ``rnd`` draws
+    ``m`` distinct clients from ``fold_in(key, rnd)``. The seed is
+    ``compare=False`` — it reaches the computation through the traced key
+    the driver builds from it, so re-seeding never recompiles."""
+
+    num_clients: int
+    cohort_size: int
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    name = "uniform"
+
+    def __post_init__(self):
+        _validate_sizes(self.num_clients, self.cohort_size)
+
+    def cohort(self, key, rnd):
+        k = jax.random.fold_in(key, rnd)
+        idx = jax.random.choice(k, self.num_clients,
+                                (self.cohort_size,), replace=False)
+        return jnp.sort(idx.astype(jnp.int32))
+
+
+def _validate_sizes(num_clients: int, cohort_size: int) -> None:
+    if int(num_clients) < 1:
+        raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+    if not 1 <= int(cohort_size) <= int(num_clients):
+        raise ValueError(
+            f"cohort_size must be in [1, num_clients={num_clients}], "
+            f"got {cohort_size}")
+
+
+def make_sampler(kind: str, num_clients: int, cohort_size: int,
+                 seed: int = 0):
+    """Sampler factory by name — the spelling the api facades use.
+    ``"cyclic"`` (deterministic window) or ``"uniform"`` (seeded,
+    without replacement)."""
+    if kind == "cyclic":
+        return CyclicSampler(int(num_clients), int(cohort_size))
+    if kind == "uniform":
+        return UniformSampler(int(num_clients), int(cohort_size),
+                              seed=int(seed))
+    raise ValueError(
+        f"cohort sampler must be 'cyclic' or 'uniform', got {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalStragglers:
+    """Simulated round deadline: each cohort member draws an arrival
+    time ``uniform(fold_in(fold_in(key, rnd), client_id))``; the slowest
+    ``drop_frac`` fraction of the cohort misses the cutoff and is
+    dropped (0 weight — its payload never enters the round sum, and the
+    server's M-step renormalizes by the surviving ``wsum``, i.e. the
+    reweight-by-survivors rule). At least one client always survives.
+
+    Keying arrival times by *global client id* (not cohort position)
+    makes a client's luck independent of which cohort it lands in; the
+    seed is ``compare=False`` exactly like the samplers', so re-seeding
+    the simulation never retraces the round loop."""
+
+    drop_frac: float
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    def __post_init__(self):
+        if not 0.0 <= float(self.drop_frac) < 1.0:
+            raise ValueError(
+                f"drop_frac must be in [0, 1), got {self.drop_frac}")
+
+    def n_keep(self, cohort_size: int) -> int:
+        """Survivors per round (static: the cutoff rank is part of the
+        compiled program; which *clients* survive is traced)."""
+        m = int(cohort_size)
+        return max(1, m - int(round(float(self.drop_frac) * m)))
+
+    def drop_mask(self, key, rnd, cohort):
+        m = cohort.shape[0]
+        keep = self.n_keep(m)
+        kr = jax.random.fold_in(key, rnd)
+        arrival = jax.vmap(
+            lambda i: jax.random.uniform(jax.random.fold_in(kr, i)))(cohort)
+        # keep the `keep` earliest arrivals: cutoff = keep-th order stat
+        cutoff = jnp.sort(arrival)[keep - 1]
+        return (arrival <= cutoff).astype(jnp.float32)

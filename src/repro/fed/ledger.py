@@ -78,15 +78,20 @@ class RoundPayload(NamedTuple):
     downlink_floats: int
     itemsize: int = 4
     extra_uplink_floats: int = 0   # once-per-run uplink outside the round
-    #                                loop (e.g. final-center rescore
-    #                                scalars), added to the totals once
+    #                                loop (final-center rescore scalars,
+    #                                warm-start statistics), added once
+    extra_downlink_floats: int = 0  # once-per-run downlink outside the
+    #                                 round loop — the init-phase model /
+    #                                 center broadcast that warm starts
+    #                                 used to ride for free, added once
 
     def totals(self, rounds: int) -> CommStats:
         return CommStats(
             rounds=rounds,
             uplink_floats=rounds * self.uplink_floats
             + self.extra_uplink_floats,
-            downlink_floats=rounds * self.downlink_floats,
+            downlink_floats=rounds * self.downlink_floats
+            + self.extra_downlink_floats,
             itemsize=self.itemsize)
 
 

@@ -44,6 +44,7 @@ from typing import Any, Optional, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -104,10 +105,25 @@ class FederationStrategy(Protocol):
 # Each backend exposes the same two faces:
 #   - host metadata (kind / num_clients / dim / sizes / the original
 #     container) that strategies use in init_state and accounting;
-#   - reduce_clients(local_step, state): sum the per-client payload
-#     pytrees — a vmap + tree-sum (split), a Python loop (sources), or a
-#     shard_map + psum (mesh). The jittable backends are pytrees so the
-#     driver can pass them straight through the jitted round loop.
+#   - reduce_clients(local_step, state, cohort=None, weights=None): sum
+#     the per-client payload pytrees — a vmap + tree-sum (split), a
+#     Python loop (sources), or a shard_map + psum (mesh). With a
+#     ``cohort`` (sorted (m,) global client indices from the driver's
+#     sampler) only the sampled clients compute: the split backend
+#     gathers the (m, N, d) cohort slab and vmaps over m (indices are
+#     TRACED, so membership changes never retrace; m is static, so one
+#     compiled shape serves every round), the source backend iterates
+#     only the cohort's streams, and the sharded backend gathers
+#     per-shard and psums the realized contributors. ``weights`` (0/1
+#     per cohort member, from the driver's straggler policy) zero out
+#     clients that missed the round deadline. The jittable backends are
+#     pytrees so the driver can pass them through the jitted round loop.
+
+
+def _weight_bcast(w, s):
+    """Reshape per-client weights (m,) to broadcast against a stacked
+    per-client payload leaf (m, ...)."""
+    return w.reshape(w.shape + (1,) * (s.ndim - 1)).astype(s.dtype)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -142,12 +158,39 @@ class SplitClients:
         return self.split.sizes if self.split is not None else jnp.sum(
             self.mask, axis=1)
 
-    def reduce_clients(self, local_step, state):
+    @property
+    def population_clients(self) -> int:
+        return self.num_clients
+
+    def reduce_clients(self, local_step, state, cohort=None, weights=None):
         c = self.data.shape[0]
-        idx = jnp.arange(c)
+        if cohort is None:
+            idx = jnp.arange(c)
+            per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+                self.data, self.mask, idx)
+            if weights is not None:
+                per = jax.tree.map(
+                    lambda s: s * _weight_bcast(weights, s), per)
+            return jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
+        # Cohort execution: gather the (m, N, d) slab and compute ONLY
+        # the sampled clients. The indices are traced (no retrace when
+        # membership changes) and m is static (one compiled shape for
+        # all rounds).
         per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
-            self.data, self.mask, idx)
-        return jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
+            jnp.take(self.data, cohort, axis=0),
+            jnp.take(self.mask, cohort, axis=0), cohort)
+        if weights is not None:
+            per = jax.tree.map(lambda s: s * _weight_bcast(weights, s), per)
+        # Scatter the m payloads into their population slots and reduce
+        # over all C: same summation tree as the historical train-all +
+        # zero-mask reduction, which is what keeps cyclic-cohort FedEM
+        # bit-identical to its PR-6 self (f32 addition is order-
+        # sensitive; a direct sum over m would round differently).
+        return jax.tree.map(
+            lambda s: jnp.sum(
+                jnp.zeros((c,) + s.shape[1:], s.dtype).at[cohort].set(s),
+                axis=0),
+            per)
 
 
 class SourceClients:
@@ -173,9 +216,28 @@ class SourceClients:
     def sizes(self):
         return [src.num_rows for src in self.sources]
 
-    def reduce_clients(self, local_step, state):
-        per = [local_step(state, src, None, i)
-               for i, src in enumerate(self.sources)]
+    @property
+    def population_clients(self) -> int:
+        return self.num_clients
+
+    def reduce_clients(self, local_step, state, cohort=None, weights=None):
+        if cohort is None:
+            members = range(len(self.sources))
+        else:
+            # ascending order (samplers sort), so the f32 summation
+            # order matches the historical full-population loop
+            members = [int(i) for i in np.asarray(cohort)]
+        w = None if weights is None else np.asarray(weights)
+        per = []
+        for pos, i in enumerate(members):
+            if w is not None and w[pos] == 0.0:
+                continue  # missed the deadline: the (possibly
+                #           out-of-core) E-step never runs
+            p = local_step(state, self.sources[i], None, i)
+            if w is not None and w[pos] != 1.0:
+                p = jax.tree.map(
+                    lambda s: s * jnp.asarray(w[pos], s.dtype), p)
+            per.append(p)
         return jax.tree.map(lambda *s: sum(s), *per)
 
 
@@ -216,21 +278,58 @@ class ShardedClients:
     def sizes(self):
         return jnp.sum(self.mask, axis=1)
 
-    def reduce_clients(self, local_step, state):
+    @property
+    def population_clients(self) -> int:
+        return self.num_clients
+
+    def reduce_clients(self, local_step, state, cohort=None, weights=None):
         axis = self.axis
         c = self.data.shape[0]
 
-        def shard_fn(state, idx_s, data_s, mask_s):
-            per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
-                data_s, mask_s, idx_s)
-            local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
-            # === one all-reduce per round ===
-            return jax.tree.map(lambda s: jax.lax.psum(s, axis), local)
+        if cohort is None:
+            def shard_fn(state, idx_s, w_s, data_s, mask_s):
+                per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+                    data_s, mask_s, idx_s)
+                if weights is not None:
+                    per = jax.tree.map(
+                        lambda s: s * _weight_bcast(w_s, s), per)
+                local = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
+                # === one all-reduce per round ===
+                return jax.tree.map(lambda s: jax.lax.psum(s, axis), local)
 
+            w = jnp.ones((c,)) if weights is None else weights
+            fn = shard_map(shard_fn, mesh=self.mesh,
+                           in_specs=(P(), P(axis), P(axis), P(axis),
+                                     P(axis)),
+                           out_specs=P(), check_rep=False)
+            return fn(state, jnp.arange(c), w, self.data, self.mask)
+
+        # Cohort execution: the cohort (and its weights) are replicated;
+        # each shard gathers the cohort members IT owns from its local
+        # client slab, zero-masks the slots owned elsewhere, and the
+        # psum sums the realized contributors. Per-shard compute is
+        # O(m), not O(per_shard): membership stays traced, m static.
+        m = cohort.shape[0]
+        per_shard = c // self.mesh.shape[axis]
+
+        def shard_fn(state, idx_s, cohort_r, w_r, data_s, mask_s):
+            local = cohort_r - idx_s[0]
+            owned = (local >= 0) & (local < per_shard)
+            safe = jnp.clip(local, 0, per_shard - 1)
+            per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+                jnp.take(data_s, safe, axis=0),
+                jnp.take(mask_s, safe, axis=0), cohort_r)
+            gate = owned.astype(w_r.dtype) * w_r
+            per = jax.tree.map(lambda s: s * _weight_bcast(gate, s), per)
+            total = jax.tree.map(lambda s: jnp.sum(s, axis=0), per)
+            # === one all-reduce per round ===
+            return jax.tree.map(lambda s: jax.lax.psum(s, axis), total)
+
+        w = jnp.ones((m,)) if weights is None else weights
         fn = shard_map(shard_fn, mesh=self.mesh,
-                       in_specs=(P(), P(axis), P(axis), P(axis)),
+                       in_specs=(P(), P(axis), P(), P(), P(axis), P(axis)),
                        out_specs=P(), check_rep=False)
-        return fn(state, jnp.arange(c), self.data, self.mask)
+        return fn(state, jnp.arange(c), cohort, w, self.data, self.mask)
 
 
 def make_backend(clients, mesh=None, axis: str = "data"):
@@ -258,9 +357,12 @@ def make_backend(clients, mesh=None, axis: str = "data"):
 # The round driver
 # ----------------------------------------------------------------------
 
-def _round(strategy, state, backend):
-    """One full round: client updates -> summed uplink -> server combine."""
-    total = backend.reduce_clients(strategy.local_step, state)
+def _round(strategy, state, backend, cohort=None, weights=None):
+    """One full round: client updates -> summed uplink -> server combine.
+    ``cohort``/``weights`` come from the driver's sampler and straggler
+    policy (None = full participation, everyone on time)."""
+    total = backend.reduce_clients(strategy.local_step, state, cohort,
+                                   weights)
     return strategy.server_combine(state, total)
 
 
@@ -274,15 +376,38 @@ def _keep_going(strategy, state):
     return jnp.logical_not(strategy.converged(state))
 
 
-@partial(jax.jit, static_argnames=("strategy", "max_rounds"))
-def _iterate_jit(strategy, backend, state0, max_rounds: int):
+def _cohort_and_weights(sampler, stragglers, backend, skey, dkey, rnd):
+    """Resolve round ``rnd``'s cohort indices and straggler weights from
+    the driver-owned policies. Keys are traced, policies static: which
+    clients participate can change every round (and every reseed)
+    without adding a jit cache entry."""
+    cohort = None if sampler is None else sampler.cohort(skey, rnd)
+    weights = None
+    if stragglers is not None:
+        members = cohort if cohort is not None \
+            else jnp.arange(backend.num_clients)
+        weights = stragglers.drop_mask(dkey, rnd, members)
+    return cohort, weights
+
+
+@partial(jax.jit, static_argnames=("strategy", "max_rounds", "sampler",
+                                   "stragglers"))
+def _iterate_jit(strategy, backend, state0, max_rounds: int,
+                 sampler=None, stragglers=None, skey=None, dkey=None):
     """Resident-client round loop as ONE jitted ``lax.while_loop`` —
     bootstrap round, then iterate while ``keep_going``. Structurally the
     pre-§9 ``_dem_loop``: same state transitions, same cond arithmetic,
     so re-landed strategies reproduce their history bit for bit. The
-    strategy is a static argument (hashable frozen dataclass); numeric
-    knobs that sweep (tol, reg_covar) ride in ``state0`` as traced
-    leaves, so sweeping them does not recompile."""
+    strategy, sampler and straggler policy are static arguments (hashable
+    frozen dataclasses); numeric knobs that sweep (tol, reg_covar) ride
+    in ``state0`` as traced leaves and the sampler/straggler PRNG keys
+    (``skey``/``dkey``) are traced, so sweeping knobs or reseeding the
+    cohort draw does not recompile."""
+
+    def one_round(state, rnd):
+        cohort, weights = _cohort_and_weights(sampler, stragglers, backend,
+                                              skey, dkey, rnd)
+        return _round(strategy, state, backend, cohort, weights)
 
     def cond(carry):
         state, it = carry
@@ -290,45 +415,101 @@ def _iterate_jit(strategy, backend, state0, max_rounds: int):
 
     def body(carry):
         state, it = carry
-        return _round(strategy, state, backend), it + 1
+        return one_round(state, it), it + 1
 
-    state1 = _round(strategy, state0, backend)
+    state1 = one_round(state0, jnp.array(0))
     state, it = jax.lax.while_loop(cond, body, (state1, jnp.array(1)))
     return state, it
 
 
+class _CohortView:
+    """Accounting proxy the driver hands to ``round_payload`` when a
+    sampler is in play: ``num_clients`` is the cohort size m (what a
+    round actually moves), ``population_clients`` stays the population C
+    (what once-per-run init traffic touches). Strategies keep writing
+    per-round arithmetic against ``backend.num_clients`` and it stays
+    correct under sampling."""
+
+    def __init__(self, backend, cohort_size: int):
+        self._backend = backend
+        self.num_clients = int(cohort_size)
+        self.population_clients = backend.num_clients
+        self.kind = backend.kind
+        self.host = backend.host
+
+    @property
+    def dim(self) -> int:
+        return self._backend.dim
+
+
 def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
                state0=None, max_rounds: int = 1, mesh=None,
-               axis: str = "data"):
+               axis: str = "data", sampler=None, stragglers=None):
     """Run a :class:`FederationStrategy` to convergence — THE round loop.
 
     Owns everything that used to be copy-pasted per algorithm: the client
     input dispatch (:func:`make_backend`), the round loop (jitted
     while_loop for resident/sharded clients, host loop for sources), the
-    bootstrap round, the round budget, and the communication ledger
-    (realized rounds x the strategy's :class:`RoundPayload`).
+    bootstrap round, the round budget, cohort sampling, straggler drops,
+    and the communication ledger (realized rounds x the strategy's
+    :class:`RoundPayload`).
 
     ``state0`` overrides the strategy's own ``init_state`` (the sharded
     DEM entry point passes externally chosen init centers this way);
     otherwise ``key`` seeds it.
-    """
+
+    ``sampler`` (``repro.fed.cohort``: :class:`CyclicSampler` /
+    :class:`UniformSampler`) makes each round compute ONLY its sampled
+    cohort — cost scales with m, not the population — and resizes the
+    per-round ledger to the cohort. ``stragglers``
+    (:class:`ArrivalStragglers`) drops the round's slowest arrivals to
+    exact-zero contribution. Both are driver-owned and strategy-agnostic:
+    any iterative strategy runs under them unchanged (one-shot strategies
+    reject them — there is no round structure to sample)."""
     backend = make_backend(clients, mesh, axis)
+    one_shot = getattr(strategy, "one_shot", False)
+    skey = dkey = None
+    if sampler is not None:
+        if one_shot:
+            raise ValueError(
+                "cohort sampling needs a round structure; one-shot "
+                "strategies take no sampler")
+        if sampler.num_clients != backend.num_clients:
+            raise ValueError(
+                f"sampler is sized for {sampler.num_clients} clients but "
+                f"the backend has {backend.num_clients}")
+        skey = jax.random.key(int(getattr(sampler, "seed", 0)))
+    if stragglers is not None:
+        if one_shot:
+            raise ValueError(
+                "straggler handling needs a round structure; one-shot "
+                "strategies take no straggler policy")
+        dkey = jax.random.key(int(getattr(stragglers, "seed", 0)))
     if state0 is None:
         state0 = strategy.init_state(key, backend)
 
-    if getattr(strategy, "one_shot", False):
+    if one_shot:
         state = strategy.run_once(state0, backend)
         rounds, n_rounds, converged = 1, jnp.asarray(1), True
     elif backend.host:
-        state = _round(strategy, state0, backend)
+        def host_round(state, rnd):
+            cohort, weights = _cohort_and_weights(
+                sampler, stragglers, backend, skey, dkey, rnd)
+            if cohort is not None:
+                cohort = np.asarray(cohort)
+            return _round(strategy, state, backend, cohort, weights)
+
+        state = host_round(state0, 0)
         it = 1
         while it < max_rounds and bool(_keep_going(strategy, state)):
-            state = _round(strategy, state, backend)
+            state = host_round(state, it)
             it += 1
         rounds, n_rounds = it, jnp.asarray(it)
         converged = bool(strategy.converged(state))
     else:
-        state, n_rounds = _iterate_jit(strategy, backend, state0, max_rounds)
+        state, n_rounds = _iterate_jit(strategy, backend, state0,
+                                       max_rounds, sampler, stragglers,
+                                       skey, dkey)
         rounds = int(n_rounds)
         converged = bool(strategy.converged(state))
 
@@ -336,9 +517,11 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
     # centers); runs eagerly after the loop, before the ledger is drawn up
     # so the strategy's RoundPayload can account for it.
     post = getattr(strategy, "post_rounds", None)
-    if post is not None and not getattr(strategy, "one_shot", False):
+    if post is not None and not one_shot:
         state = post(state, backend)
 
-    payload = strategy.round_payload(backend, state)
+    ledger_backend = backend if sampler is None \
+        else _CohortView(backend, sampler.cohort_size)
+    payload = strategy.round_payload(ledger_backend, state)
     comm = payload.totals(rounds)
     return strategy.finalize(state, n_rounds, converged, comm)

@@ -9,10 +9,13 @@ the federation runtime (DESIGN.md §9).
   ``participation=1.0`` and ``local_epochs=1`` this IS the DEM baseline
   (``repro.core.dem``) — literally, it subclasses :class:`DEMStrategy`
   and the reduction is pinned bit-for-bit in
-  ``tests/test_fed_runtime.py``. Partial participation is cyclic (each
-  round takes the next window of ``max(1, round(participation·C))``
-  clients), so cohorts are deterministic, non-empty, and cover every
-  client.
+  ``tests/test_fed_runtime.py``. Partial participation is COHORT
+  EXECUTION (``repro.fed.cohort``): the driver samples
+  ``max(1, round(participation·C))`` clients per round — the default
+  cyclic sampler is deterministic, non-empty, covers every client, and
+  is pinned bit-identical to the historical train-all + zero-mask path;
+  a seeded uniform sampler is one knob away — and ONLY the cohort
+  computes, so a round costs O(cohort), not O(population).
 
 - :class:`FedKMeansStrategy` — iterative federated k-means after Garst &
   Reinders: per round, each client assigns its rows to the current global
@@ -39,13 +42,13 @@ import jax.numpy as jnp
 
 from repro.core.config import FitConfig, is_source_list, resolve_backend
 from repro.core.dem import DEMStrategy, _resolve_init, max_separated_centers
-from repro.core.em import SufficientStats, e_step_stats, m_step
+from repro.core.em import e_step_stats, m_step
 from repro.core.gmm import GMM
 from repro.core.kmeans import federated_kmeans, lloyd_round_stats
 from repro.core.partition import ClientSplit
+from repro.fed.cohort import make_sampler
 from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
-                              gmm_payload_floats, label_payload_floats,
-                              stats_payload_floats)
+                              label_payload_floats)
 from repro.fed.runtime import run_rounds
 
 
@@ -75,13 +78,20 @@ class FedEMState(NamedTuple):
 class FedEMStrategy(DEMStrategy):
     """DEM generalized per Tian et al.: ``local_epochs`` local EM steps
     per round (clients M-step on their own stats between E-steps and ship
-    the final epoch's statistics) and cyclic partial participation
+    the final epoch's statistics) and partial participation
     (``participation`` fraction of clients per round). Defaults reduce it
-    to :class:`DEMStrategy` exactly."""
+    to :class:`DEMStrategy` exactly.
+
+    Since the cohort-execution refactor WHICH clients run is not this
+    strategy's business: the driver's sampler (``run_rounds(sampler=...)``,
+    built by :func:`fedem_cfg`) hands each backend the round's cohort and
+    only those clients compute. The knobs here still size the
+    convergence machinery: ``participation``/``n_clients`` fix the
+    cohort-cycle length of the loglik ring buffer."""
 
     participation: float = 1.0
     local_epochs: int = 1
-    n_clients: int = 0   # required when participation < 1 (window size)
+    n_clients: int = 0   # required when participation < 1 (cycle length)
 
     name = "fedem"
 
@@ -139,48 +149,23 @@ class FedEMStrategy(DEMStrategy):
         return FedEMState(gmm, prev, ll, state.tol, state.reg_covar,
                           state.rnd + 1, hist)
 
-    def _zero_stats(self, gmm: GMM) -> SufficientStats:
-        """An inactive client's uplink: exact zeros in the stats shapes
-        (s2 mirrors the covariance layout)."""
-        dt = gmm.means.dtype
-        return SufficientStats(jnp.zeros(gmm.weights.shape, dt),
-                               jnp.zeros(gmm.means.shape, dt),
-                               jnp.zeros(gmm.covs.shape, dt),
-                               jnp.zeros((), dt), jnp.zeros((), dt))
-
     def local_step(self, state: FedEMState, x, w, idx):
-        active = None
-        if self.participation < 1.0:
-            # cyclic cohort: round r takes clients [r·m, r·m + m) mod C.
-            c, m = self.n_clients, self.cohort_size()
-            start = (state.rnd * m) % c
-            active = ((idx - start) % c) < m
-            if self.host and not active:
-                # host path: idx is a concrete int, so non-members skip
-                # the (possibly out-of-core) E-step entirely and ship
-                # exact zeros.
-                return self._zero_stats(state.gmm)
+        """One cohort member's update. Participation is NOT handled here
+        any more — the driver's sampler decides who runs and the backend
+        computes only those clients (the historical per-client window
+        test and the host-path skip both became driver/backend concerns;
+        the uplink of a non-member is exactly absent, which the pinned
+        zero-uplink ledger and e-step-count tests still assert)."""
         gmm = state.gmm
         stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
         for _ in range(self.local_epochs - 1):
             gmm = m_step(stats, state.reg_covar)
             stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
-        if active is not None and not self.host:
-            # vmap/shard_map path: fixed shapes force every client to
-            # evaluate, so non-members contribute exact zeros to every
-            # summed statistic — the same zero-weight trick the engine
-            # uses for padded rows.
-            stats = jax.tree.map(lambda s: s * jnp.asarray(active, s.dtype),
-                                 stats)
         return stats
 
-    def round_payload(self, backend, state) -> RoundPayload:
-        m, d = self.cohort_size() or backend.num_clients, backend.dim
-        diag = self.covariance_type == "diag"
-        return RoundPayload(
-            uplink_floats=m * stats_payload_floats(self.k, d, diag),
-            downlink_floats=m * gmm_payload_floats(self.k, d, diag),
-            itemsize=dtype_itemsize(state.gmm.means.dtype))
+    # round_payload is inherited from DEMStrategy: under a sampler the
+    # driver's accounting view already reports num_clients == cohort
+    # size, so the per-round arithmetic stays cohort-sized for free.
 
     def finalize(self, state: FedEMState, n_rounds, converged,
                  comm: CommStats) -> FedEMResult:
@@ -192,11 +177,20 @@ class FedEMStrategy(DEMStrategy):
 
 
 def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
-              participation: float = 1.0,
-              local_epochs: int = 1) -> FedEMResult:
+              participation: float = 1.0, local_epochs: int = 1,
+              cohort: str = "cyclic", cohort_seed: int = 0,
+              stragglers=None) -> FedEMResult:
     """Run FedEM — the cfg-core behind ``repro.api.FedEM``, dispatching on
     the client input type through the federation runtime. Init strategies
-    and their resolution are DEM's (``config.init``)."""
+    and their resolution are DEM's (``config.init``).
+
+    ``participation < 1`` builds the driver-side cohort sampler
+    (``cohort``: "cyclic" — the historical deterministic window — or
+    "uniform" — seeded sampling without replacement from
+    ``cohort_seed``); at full participation no sampler is installed, so
+    the run reduces to DEM's full-population path bit for bit.
+    ``stragglers`` (e.g. :class:`repro.fed.cohort.ArrivalStragglers`)
+    drops each round's slowest arrivals."""
     sources = is_source_list(clients)
     if not sources and not isinstance(clients, ClientSplit):
         raise TypeError(
@@ -213,8 +207,16 @@ def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
         tol=config.resolve_tol("em"), reg_covar=config.reg_covar,
         participation=float(participation), local_epochs=int(local_epochs),
         n_clients=n_clients)
+    sampler = None
+    if strategy.participation < 1.0:
+        sampler = make_sampler(cohort, n_clients, strategy.cohort_size(),
+                               seed=cohort_seed)
+    elif cohort not in ("cyclic", "uniform"):
+        raise ValueError(
+            f"cohort sampler must be 'cyclic' or 'uniform', got {cohort!r}")
     return run_rounds(strategy, clients, key=key,
-                      max_rounds=config.resolve_max_iter("em"))
+                      max_rounds=config.resolve_max_iter("em"),
+                      sampler=sampler, stragglers=stragglers)
 
 
 # ----------------------------------------------------------------------
@@ -325,11 +327,21 @@ class FedKMeansStrategy:
 
     def round_payload(self, backend, state) -> RoundPayload:
         c, d = backend.num_clients, backend.dim
+        pop = getattr(backend, "population_clients", c)
+        # Init-phase traffic rides the ledger too (warm starts are not
+        # free): every scheme broadcasts the k·d round-0 centers to the
+        # population; the fed-kmeans warm start first collects each
+        # client's k local centers + k cluster sizes (Dennis et al.).
+        warm_up = pop * (self.k * d + self.k) \
+            if self.init == "fed-kmeans" else 0
         return RoundPayload(
             uplink_floats=c * label_payload_floats(self.k, d),
             downlink_floats=c * self.k * d,
             itemsize=dtype_itemsize(state.centers.dtype),
-            extra_uplink_floats=c)   # the post-rounds inertia scalars
+            # post-rounds inertia rescore (one scalar per population
+            # client) + the warm-start statistics
+            extra_uplink_floats=pop + warm_up,
+            extra_downlink_floats=pop * self.k * d)
 
     def finalize(self, state: FedKMeansState, n_rounds, converged,
                  comm: CommStats) -> FedKMeansResult:

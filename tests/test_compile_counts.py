@@ -136,3 +136,58 @@ class TestLoaderParity:
                             chunk_size=CHUNK)
         for a, b in zip(base, shuf):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestFederatedCompileCounts:
+    """Cohort membership is traced, cohort size is static: the jitted
+    round loop must hold ONE cache entry per (strategy, m) no matter how
+    many rounds run, which clients each round samples, or how the
+    sampler/stragglers are re-seeded (seeds are ``compare=False`` fields
+    that enter via traced keys)."""
+
+    def _split(self, seed=0):
+        from repro.core.partition import partition
+        rng = np.random.default_rng(7)
+        x = rng.normal(0, 2.0, (900, 3)).astype(np.float32)
+        y = rng.integers(0, 3, 900)
+        return partition(np.random.default_rng(seed), x, y, 12,
+                         "dirichlet", 0.5)
+
+    def test_reseeding_uniform_cohorts_never_retraces(self):
+        from repro.api import FedEM
+        import repro.fed.runtime as rt
+        split = self._split()
+        kw = dict(participation=0.25, cohort="uniform", init="separated",
+                  max_iter=8)
+        FedEM(2, cohort_seed=0, **kw).run(split, key=jax.random.key(0))
+        baseline = rt._iterate_jit._cache_size()
+        for seed in (1, 2, 3):
+            FedEM(2, cohort_seed=seed, **kw).run(split,
+                                                 key=jax.random.key(seed))
+        assert rt._iterate_jit._cache_size() == baseline
+
+    def test_cyclic_cohorts_share_one_entry_across_keys(self):
+        from repro.api import FedEM
+        import repro.fed.runtime as rt
+        split = self._split()
+        kw = dict(participation=0.25, init="separated", max_iter=8)
+        FedEM(2, **kw).run(split, key=jax.random.key(0))
+        baseline = rt._iterate_jit._cache_size()
+        for seed in (4, 5):
+            FedEM(2, **kw).run(split, key=jax.random.key(seed))
+        assert rt._iterate_jit._cache_size() == baseline
+
+    def test_straggler_reseed_never_retraces(self):
+        from repro.api import FedEM
+        from repro.fed import ArrivalStragglers
+        import repro.fed.runtime as rt
+        split = self._split()
+        kw = dict(participation=0.5, cohort="uniform", init="separated",
+                  max_iter=8)
+        FedEM(2, stragglers=ArrivalStragglers(0.25, seed=0), **kw).run(
+            split, key=jax.random.key(0))
+        baseline = rt._iterate_jit._cache_size()
+        for seed in (1, 2):
+            FedEM(2, stragglers=ArrivalStragglers(0.25, seed=seed),
+                  **kw).run(split, key=jax.random.key(0))
+        assert rt._iterate_jit._cache_size() == baseline

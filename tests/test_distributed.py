@@ -100,7 +100,10 @@ def test_sharded_fedem_fits_with_cohort_ledger(sharded_results):
     round, diag stats for k=3, d=3: 3 + 9 + 9 + 2 floats each)."""
     r = sharded_results
     assert r["fedem_ll"] > r["central_ll"] - 0.5, r
-    assert r["fedem_uplink"] == r["fedem_rounds"] * 8 * (3 + 9 + 9 + 2), r
+    # per-round cohort traffic + the one-shot fed-kmeans warm start the
+    # whole population uplinks before round 0 (16 * (k*d + k) floats)
+    assert r["fedem_uplink"] == \
+        r["fedem_rounds"] * 8 * (3 + 9 + 9 + 2) + 16 * (9 + 3), r
     assert r["fedem_itemsize"] == 4
 
 
@@ -111,4 +114,7 @@ def test_sharded_fed_kmeans_recovers_centers(sharded_results):
     per client, once."""
     r = sharded_results
     assert r["km_center_err"] < 0.5, r
-    assert r["km_uplink"] == r["km_rounds"] * 16 * (3 + 9 + 1) + 16, r
+    # per-round label stats + the rescore scalar per client + the
+    # fed-kmeans warm-start parameter uplink (16 * (k*d + k))
+    assert r["km_uplink"] == \
+        r["km_rounds"] * 16 * (3 + 9 + 1) + 16 + 16 * (9 + 3), r

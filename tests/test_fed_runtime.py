@@ -8,6 +8,7 @@ as frozen references: the runtime's generic driver must reproduce them to
 the bit, so results are compared with ``assert_array_equal``, never
 ``allclose``.
 """
+import dataclasses
 from functools import partial
 
 import jax
@@ -17,15 +18,18 @@ import pytest
 
 from repro.api import DEM, FedEM, FedKMeans, FitConfig, fit_federated
 from repro.core.dem import dem, dem_cfg, max_separated_centers
-from repro.core.em import (e_step_stats, host_em_loop, init_from_means,
-                           m_step)
+from repro.core.em import (SufficientStats, e_step_stats, host_em_loop,
+                           init_from_means, m_step)
 from repro.core.fedgen import (aggregate_cfg, fedgengmm_cfg,
                                train_locals_cfg, train_locals_sources_cfg)
 from repro.core.gmm import GMM
 from repro.core.kmeans import kmeans
 from repro.core.partition import partition
-from repro.fed import (CommStats, RoundPayload, label_payload_floats,
-                       make_backend, run_rounds, stats_payload_floats)
+from repro.fed import (ArrivalStragglers, CommStats, CyclicSampler,
+                       RoundPayload, UniformSampler, label_payload_floats,
+                       make_backend, make_sampler, run_rounds,
+                       stats_payload_floats)
+from repro.fed.strategies import FedEMStrategy
 from repro.data.sources import ArraySource, ConcatSource
 from conftest import planted_gmm_data
 
@@ -226,6 +230,11 @@ class TestFedEM:
         m = max(1, round(0.5 * c))
         per_round = m * stats_payload_floats(k, d, True)
         assert fr.comm.uplink_floats == fr.comm.rounds * per_round
+        # per-round downlink is cohort-sized too; the init broadcast
+        # touches the whole population exactly once
+        gmm_floats = k + k * d + k * d
+        assert fr.comm.downlink_floats == \
+            fr.comm.rounds * m * gmm_floats + c * gmm_floats
         assert fr.comm.rounds == int(fr.n_rounds)
         assert bool(jnp.all(jnp.isfinite(fr.global_gmm.means)))
 
@@ -288,7 +297,21 @@ class TestFedKMeans:
         # + c: the post-rounds inertia rescore ships one scalar per client
         assert res.comm.uplink_floats == \
             res.comm.rounds * c * label_payload_floats(k, d) + c
-        assert res.comm.downlink_floats == res.comm.rounds * c * k * d
+        # + c·k·d: the round-0 center broadcast (init traffic rides the
+        # ledger since the cohort-execution PR)
+        assert res.comm.downlink_floats == \
+            res.comm.rounds * c * k * d + c * k * d
+
+    def test_warm_start_init_traffic_is_charged(self, split):
+        """The fed-kmeans warm start used to ride the ledger for free;
+        now it charges each client's k local centers + k sizes uplink on
+        top of the separated-init baseline."""
+        c, k, d = split.data.shape[0], 3, split.data.shape[-1]
+        warm = FedKMeans(k, init="fed-kmeans", max_iter=50).run(
+            split, key=jax.random.key(2))
+        assert warm.comm.uplink_floats == \
+            warm.comm.rounds * c * label_payload_floats(k, d) + c \
+            + c * (k * d + k)
 
     def test_separated_init_iterates(self, split):
         """Cold-start centers need several rounds — the iterative rounds
@@ -344,9 +367,28 @@ class TestCommLedger:
                  max_iter=20).run(split, key=jax.random.key(1))
         per_round = k + k * d + k * d * d + 2
         assert dr.comm.uplink_floats == dr.comm.rounds * c * per_round
-        # downlink broadcasts the full-covariance parameter block
+        # downlink broadcasts the full-covariance parameter block every
+        # round plus once for the round-0 init model
         assert dr.comm.downlink_floats == \
-            dr.comm.rounds * c * (k + k * d + k * d * d)
+            (dr.comm.rounds + 1) * c * (k + k * d + k * d * d)
+
+    def test_dem_init_phase_traffic_pinned(self, split):
+        """Init-phase accounting (the 'warm starts ride free' debt):
+        fed-kmeans init adds each client's k·d local centers + k sizes
+        to the uplink; every init scheme adds one population-wide model
+        broadcast to the downlink."""
+        c, k, d = split.data.shape[0], 3, split.data.shape[-1]
+        sep = DEM(k, init="separated", max_iter=15).run(
+            split, key=jax.random.key(1))
+        warm = DEM(k, init="fed-kmeans", max_iter=15).run(
+            split, key=jax.random.key(1))
+        per_up = stats_payload_floats(k, d, True)
+        assert sep.comm.uplink_floats == sep.comm.rounds * c * per_up
+        assert warm.comm.uplink_floats == \
+            warm.comm.rounds * c * per_up + c * (k * d + k)
+        gmm_floats = k + k * d + k * d
+        assert sep.comm.downlink_floats == \
+            (sep.comm.rounds + 1) * c * gmm_floats
 
     def test_payload_bytes_and_total_mb_are_dtype_aware(self):
         s = CommStats(rounds=2, uplink_floats=1000, downlink_floats=500)
@@ -360,6 +402,12 @@ class TestCommLedger:
     def test_round_payload_totals(self):
         p = RoundPayload(uplink_floats=10, downlink_floats=4, itemsize=8)
         assert p.totals(3) == CommStats(3, 30, 12, 8)
+        # once-per-run extras (rescore uplink, init-broadcast downlink)
+        # are added exactly once, independent of the round count
+        p2 = RoundPayload(uplink_floats=10, downlink_floats=4, itemsize=8,
+                          extra_uplink_floats=7, extra_downlink_floats=9)
+        assert p2.totals(3) == CommStats(3, 37, 21, 8)
+        assert p2.totals(5) == CommStats(5, 57, 29, 8)
 
     def test_run_ledgers_carry_f32_itemsize(self, split):
         dr = DEM(2, init="separated", max_iter=10).run(
@@ -437,3 +485,231 @@ class TestRuntimeDispatch:
                             key=jax.random.key(0))
         assert bool(jnp.all(jnp.isfinite(res.global_gmm.means)))
         assert res.comm.rounds == int(res.n_rounds) <= 10
+
+    def test_fit_federated_custom_strategy_takes_sampler(self, split):
+        """The driver's cohort seam is reachable for custom strategies:
+        any iterative strategy runs under a sampler unchanged, with the
+        ledger resized to the cohort."""
+        from repro.core.dem import DEMStrategy
+        c = split.data.shape[0]
+        strat = DEMStrategy(k=2, init="separated", tol=1e-3)
+        res = fit_federated(split, strategy=strat, max_rounds=10,
+                            sampler=CyclicSampler(c, 2),
+                            key=jax.random.key(0))
+        assert bool(jnp.all(jnp.isfinite(res.global_gmm.means)))
+        k, d = 2, split.data.shape[-1]
+        assert res.comm.uplink_floats == \
+            res.comm.rounds * 2 * stats_payload_floats(k, d, True)
+
+
+# ----------------------------------------------------------------------
+# Cohort execution: sample-then-train (this PR's tentpole)
+# ----------------------------------------------------------------------
+
+@partial(dataclasses.dataclass, frozen=True)
+class _ZeroMaskFedEM(FedEMStrategy):
+    """Verbatim frozen copy of the PR-6 FedEM participation path:
+    train-all + zero-mask (every client computes, non-members multiply
+    their stats by 0; host-path non-members short-circuit to exact-zero
+    stats). The cohort-execution rewrite must reproduce it to the bit."""
+
+    def _zero_stats(self, gmm):
+        dt = gmm.means.dtype
+        return SufficientStats(jnp.zeros(gmm.weights.shape, dt),
+                               jnp.zeros(gmm.means.shape, dt),
+                               jnp.zeros(gmm.covs.shape, dt),
+                               jnp.zeros((), dt), jnp.zeros((), dt))
+
+    def local_step(self, state, x, w, idx):
+        active = None
+        if self.participation < 1.0:
+            c, m = self.n_clients, self.cohort_size()
+            start = (state.rnd * m) % c
+            active = ((idx - start) % c) < m
+            if self.host and not active:
+                return self._zero_stats(state.gmm)
+        gmm = state.gmm
+        stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
+        for _ in range(self.local_epochs - 1):
+            gmm = m_step(stats, state.reg_covar)
+            stats = e_step_stats(gmm, x, w, self.backend, self.chunk)
+        if active is not None and not self.host:
+            stats = jax.tree.map(
+                lambda s: s * jnp.asarray(active, s.dtype), stats)
+        return stats
+
+
+def _fedem_strategy(cls, k, cfg, sources, participation, local_epochs,
+                    n_clients):
+    from repro.core.dem import _resolve_init
+    return cls(
+        k=k, covariance_type=cfg.covariance_type, backend=cfg.backend,
+        chunk=cfg.resolve_chunk(source=sources),
+        init=_resolve_init(cfg.init, sources), host=sources,
+        tol=cfg.resolve_tol("em"), reg_covar=cfg.reg_covar,
+        participation=participation, local_epochs=local_epochs,
+        n_clients=n_clients)
+
+
+class TestCohortBitIdentity:
+    """Cyclic-cohort FedEM (gather m, compute m, scatter-sum into C
+    slots) == the PR-6 train-all + zero-mask path, to the bit, on both
+    single-process backends. The scatter-sum reduction exists exactly
+    for this: f32 addition is order-sensitive, and scattering the cohort
+    payloads back into their population slots before the sum reproduces
+    the historical summation tree."""
+
+    def test_split_matches_zero_mask_frozen(self, split):
+        cfg = FitConfig(max_iter=30)
+        frozen = _fedem_strategy(_ZeroMaskFedEM, 3, cfg, False, 0.5, 2,
+                                 split.data.shape[0])
+        base = run_rounds(frozen, split, key=jax.random.key(4),
+                          max_rounds=30)
+        new = FedEM(3, participation=0.5, local_epochs=2,
+                    max_iter=30).run(split, key=jax.random.key(4))
+        assert_same_gmm(base.global_gmm, new.global_gmm)
+        np.testing.assert_array_equal(np.asarray(base.log_likelihood),
+                                      np.asarray(new.log_likelihood))
+        assert int(base.n_rounds) == int(new.n_rounds)
+        assert bool(base.converged) == bool(new.converged)
+
+    def test_sources_match_zero_mask_frozen(self, shards):
+        cfg = FitConfig(max_iter=12, init="separated")
+        frozen = _fedem_strategy(_ZeroMaskFedEM, 3, cfg, True, 0.5, 2,
+                                 len(shards))
+        base = run_rounds(frozen, shards, key=jax.random.key(4),
+                          max_rounds=12)
+        new = FedEM(3, participation=0.5, local_epochs=2, init="separated",
+                    max_iter=12).run(shards, key=jax.random.key(4))
+        assert_same_gmm(base.global_gmm, new.global_gmm)
+        assert int(base.n_rounds) == int(new.n_rounds)
+
+
+class TestCohortSampler:
+    def test_cyclic_is_the_historical_window(self):
+        s = CyclicSampler(num_clients=10, cohort_size=4)
+        key = jax.random.key(0)
+        for rnd in range(7):
+            got = np.asarray(s.cohort(key, rnd))
+            start = (rnd * 4) % 10
+            want = np.sort((start + np.arange(4)) % 10)
+            np.testing.assert_array_equal(got, want)
+
+    def test_cyclic_covers_every_client_within_a_cycle(self):
+        s = CyclicSampler(num_clients=10, cohort_size=4)
+        seen = set()
+        for rnd in range(5):   # period = 10 / gcd(10, 4) = 5
+            seen.update(np.asarray(s.cohort(jax.random.key(0), rnd)))
+        assert seen == set(range(10))
+
+    def test_uniform_is_sorted_unique_in_range_and_deterministic(self):
+        s = UniformSampler(num_clients=50, cohort_size=8, seed=3)
+        key = jax.random.key(3)
+        cohorts = [np.asarray(s.cohort(key, rnd)) for rnd in range(6)]
+        for c in cohorts:
+            assert c.shape == (8,)
+            assert len(set(c.tolist())) == 8
+            assert (np.sort(c) == c).all()
+            assert c.min() >= 0 and c.max() < 50
+        again = [np.asarray(s.cohort(key, rnd)) for rnd in range(6)]
+        for a, b in zip(cohorts, again):
+            np.testing.assert_array_equal(a, b)
+        # different rounds draw different cohorts (fold_in on rnd)
+        assert any((a != b).any() for a, b in zip(cohorts[:-1], cohorts[1:]))
+
+    def test_uniform_cohort_fedem_fits(self, data, split):
+        x, _, _ = data
+        fr = FedEM(3, participation=0.5, cohort="uniform", cohort_seed=5,
+                   init="separated", max_iter=40).run(
+            split, key=jax.random.key(6))
+        assert float(fr.global_gmm.score(jnp.asarray(x))) > -8.0
+        m = max(1, round(0.5 * split.data.shape[0]))
+        k, d = 3, split.data.shape[-1]
+        assert fr.comm.uplink_floats == \
+            fr.comm.rounds * m * stats_payload_floats(k, d, True)
+
+    def test_sampler_validation(self):
+        with pytest.raises(ValueError, match="cohort_size"):
+            CyclicSampler(num_clients=5, cohort_size=6)
+        with pytest.raises(ValueError, match="cohort_size"):
+            UniformSampler(num_clients=5, cohort_size=0)
+        with pytest.raises(ValueError, match="cyclic"):
+            make_sampler("random", 10, 2)
+        with pytest.raises(ValueError, match="cohort"):
+            FedEM(3, cohort="shuffled")
+
+    def test_sampler_backend_size_mismatch_rejected(self, split):
+        from repro.core.dem import DEMStrategy
+        strat = DEMStrategy(k=2, init="separated")
+        with pytest.raises(ValueError, match="sized for"):
+            run_rounds(strat, split, key=jax.random.key(0), max_rounds=5,
+                       sampler=CyclicSampler(split.data.shape[0] + 1, 2))
+
+    def test_one_shot_rejects_sampler_and_stragglers(self, split):
+        from repro.core.fedgen import FedGenStrategy
+        strat = FedGenStrategy(config=FitConfig(), k_clients=2,
+                               k_global=2, h=10)
+        with pytest.raises(ValueError, match="one-shot"):
+            run_rounds(strat, split, key=jax.random.key(0),
+                       sampler=CyclicSampler(split.data.shape[0], 2))
+        with pytest.raises(ValueError, match="one-shot"):
+            run_rounds(strat, split, key=jax.random.key(0),
+                       stragglers=ArrivalStragglers(0.5))
+
+
+class TestStragglers:
+    def test_drop_mask_keeps_exactly_n_keep(self):
+        pol = ArrivalStragglers(drop_frac=0.3, seed=0)
+        cohort = jnp.arange(10, dtype=jnp.int32)
+        for rnd in range(5):
+            mask = np.asarray(pol.drop_mask(jax.random.key(0), rnd, cohort))
+            assert mask.shape == (10,)
+            assert set(mask.tolist()) <= {0.0, 1.0}
+            assert mask.sum() == pol.n_keep(10) == 7
+
+    def test_at_least_one_survivor(self):
+        pol = ArrivalStragglers(drop_frac=0.99)
+        mask = np.asarray(pol.drop_mask(jax.random.key(0), 0,
+                                        jnp.arange(3, dtype=jnp.int32)))
+        assert mask.sum() >= 1
+
+    def test_deterministic_and_keyed_by_client_id(self):
+        pol = ArrivalStragglers(drop_frac=0.5, seed=2)
+        key = jax.random.key(2)
+        cohort = jnp.asarray([3, 7, 11, 20], jnp.int32)
+        m1 = np.asarray(pol.drop_mask(key, 4, cohort))
+        m2 = np.asarray(pol.drop_mask(key, 4, cohort))
+        np.testing.assert_array_equal(m1, m2)
+
+    def test_zero_drop_frac_is_a_bitwise_noop(self, split):
+        """drop_frac=0 keeps everyone: weights are exact 1.0, and
+        multiplying by 1.0 is an IEEE identity — the run must equal the
+        no-policy run to the bit."""
+        base = FedEM(3, participation=0.5, init="separated",
+                     max_iter=20).run(split, key=jax.random.key(6))
+        wired = FedEM(3, participation=0.5, init="separated", max_iter=20,
+                      stragglers=ArrivalStragglers(0.0)).run(
+            split, key=jax.random.key(6))
+        assert_same_gmm(base.global_gmm, wired.global_gmm)
+        assert int(base.n_rounds) == int(wired.n_rounds)
+
+    def test_fedem_survives_drops_on_all_backends(self, data, split,
+                                                  shards):
+        """Dropping 1/3 of each cohort still fits: the M-step
+        renormalizes by the surviving wsum (the reweight rule), and the
+        host path skips dropped sources' E-steps entirely."""
+        x, _, _ = data
+        xj = jnp.asarray(x)
+        pol = ArrivalStragglers(drop_frac=0.34, seed=7)
+        for clients in (split, shards):
+            fr = FedEM(3, participation=0.67, init="separated",
+                       max_iter=40, stragglers=pol).run(
+                clients, key=jax.random.key(8))
+            assert bool(jnp.all(jnp.isfinite(fr.global_gmm.means)))
+            assert float(fr.global_gmm.score(xj)) > -8.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="drop_frac"):
+            ArrivalStragglers(drop_frac=1.0)
+        with pytest.raises(ValueError, match="drop_frac"):
+            ArrivalStragglers(drop_frac=-0.1)

@@ -251,3 +251,30 @@ class TestEngineValidation:
 
         with pytest.raises(ValueError, match="no blocks"):
             streaming_reduce(lambda xb: jnp.sum(xb), Hollow(), 2)
+
+
+class TestPrefetchDepthDefault:
+    """PREFETCH_DEPTH is auto-sized at import (DESIGN.md §7): 0 on hosts
+    without a spare core for the producer thread, 2 otherwise, with
+    REPRO_PREFETCH_DEPTH as the explicit override."""
+
+    def test_heuristic_tracks_core_count(self, monkeypatch):
+        from repro.data import sources
+        monkeypatch.delenv("REPRO_PREFETCH_DEPTH", raising=False)
+        for cpus, want in ((1, 0), (2, 0), (3, 2), (16, 2), (None, 0)):
+            monkeypatch.setattr(sources.os, "cpu_count", lambda c=cpus: c)
+            assert sources.default_prefetch_depth() == want
+
+    def test_env_override_wins(self, monkeypatch):
+        from repro.data import sources
+        monkeypatch.setattr(sources.os, "cpu_count", lambda: 16)
+        monkeypatch.setenv("REPRO_PREFETCH_DEPTH", "0")
+        assert sources.default_prefetch_depth() == 0
+        monkeypatch.setenv("REPRO_PREFETCH_DEPTH", "5")
+        assert sources.default_prefetch_depth() == 5
+
+    def test_negative_override_rejected(self, monkeypatch):
+        from repro.data import sources
+        monkeypatch.setenv("REPRO_PREFETCH_DEPTH", "-1")
+        with pytest.raises(ValueError, match="REPRO_PREFETCH_DEPTH"):
+            sources.default_prefetch_depth()
