@@ -15,13 +15,14 @@ def main() -> None:
     quick = os.environ.get("BENCH_FULL", "0") != "1"
     from benchmarks import (ablation_h, fed_bench, fig2_global_fit,
                             fig3_anomaly, fig4_clients, fig5_constrained,
-                            kernel_bench, streaming_bench, table4_comm)
-    # streaming_bench / fed_bench also refresh the machine-readable
-    # trajectory files (BENCH_streaming.json / BENCH_comm.json) when run
-    # standalone in full mode.
+                            kernel_bench, serve_bench, streaming_bench,
+                            table4_comm)
+    # streaming_bench / fed_bench / serve_bench also refresh the
+    # machine-readable trajectory files (BENCH_streaming.json /
+    # BENCH_comm.json / BENCH_serve.json) when run standalone in full mode.
     modules = [fig2_global_fit, table4_comm, fig3_anomaly, fig4_clients,
                fig5_constrained, ablation_h, kernel_bench, streaming_bench,
-               fed_bench]
+               fed_bench, serve_bench]
     print("name,us_per_call,derived")
     ok = True
     for mod in modules:

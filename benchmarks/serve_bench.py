@@ -1,0 +1,266 @@
+"""Serving-engine latency/throughput/swap-pause — the DESIGN.md §10
+continuous-batching claims as a tracked artifact.
+
+A fitted diagonal GMM serves a stream of mixed-size scoring requests
+through ``repro.serve.ScoringEngine``. The **sweep** section times each
+slot-pool geometry (slots x rows_per_slot) on the SAME request stream,
+reporting per-request submit-to-retire latency (p50/p99) and throughput
+(requests/s and rows/s) — the batch-size/slot-count trade the one
+compiled slab shape buys. The **swap** section re-runs the stream and
+hot-swaps a second model mid-flight: it reports the drain-and-install
+admission pause (``ScoringEngine.swap_pauses``) and proves the
+protocol's consistency guarantee by COUNTING — every submitted request
+must retire, tagged with exactly one of the two versions.
+
+In full mode (standalone ``python benchmarks/serve_bench.py``) the
+results are written to ``BENCH_serve.json`` (repo root):
+
+    {"backend", "setting": {d, k, requests, rows_total},
+     "sweep": [{slots, rows_per_slot, p50_ms, p99_ms, requests_per_s,
+                rows_per_s, seconds}],
+     "swap": {slots, rows_per_slot, swaps, pause_ms_mean, pause_ms_max,
+              submitted, completed, dropped, versions_seen}}
+
+Full mode FAILS (RuntimeError) if any request is dropped across the
+mid-stream swap, if results arrive tagged with a version other than the
+two that served, or if the best geometry's p99 latency exceeds
+``P99_LIMIT_MS`` — the "bounded tail under continuous batching" claim,
+guarded. Quick (CI) mode scales down and prints rows only; ``--dry-run``
+shrinks to a tiny stream and *validates the report schema* instead of
+recording timings — that is what the CI bench-smoke lane runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.api import GMMEstimator
+from repro.serve import ScoreConfig, ScoreRequest, ScoringEngine
+
+D, K = 8, 5
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+# (slots, rows_per_slot) geometries swept on the same request stream
+SWEEP_FULL = ((1, 256), (4, 256), (8, 256), (4, 1024), (8, 1024))
+SWEEP_DRY = ((1, 32), (2, 32))
+# request-size mix: mostly small online batches, a heavy tail that
+# streams through its slot across micro-batches
+REQ_SIZES_FULL = (16, 64, 200, 512, 3000)
+REQ_SIZES_DRY = (4, 16, 40)
+N_REQS_FULL, N_REQS_DRY = 400, 24
+ARRIVALS_PER_STEP = 4          # open-loop-ish: submissions trickle in
+P99_LIMIT_MS = 2000.0          # generous CPU bound; the guard is the tail
+                               # staying bounded, not a specific machine
+
+SWEEP_FIELDS = ("slots", "rows_per_slot", "p50_ms", "p99_ms",
+                "requests_per_s", "rows_per_s", "seconds")
+SWAP_FIELDS = ("slots", "rows_per_slot", "swaps", "pause_ms_mean",
+               "pause_ms_max", "submitted", "completed", "dropped",
+               "versions_seen")
+
+
+def validate_report(report: dict) -> None:
+    """Schema gate for the tracked JSON; raises ValueError listing every
+    violation rather than stopping at the first."""
+    problems = []
+    for field in ("backend", "setting", "sweep", "swap"):
+        if field not in report:
+            problems.append(f"missing top-level field {field!r}")
+    setting = report.get("setting", {})
+    for field in ("d", "k", "requests", "rows_total"):
+        if not isinstance(setting.get(field), int):
+            problems.append(f"setting.{field} must be an int")
+    sweep = report.get("sweep", [])
+    if not isinstance(sweep, list) or not sweep:
+        problems.append("sweep must be a non-empty list")
+        sweep = []
+    for i, row in enumerate(sweep):
+        for field in ("slots", "rows_per_slot"):
+            if not isinstance(row.get(field), int) or row.get(field) < 1:
+                problems.append(f"sweep[{i}].{field} must be a positive "
+                                f"int, got {row.get(field)!r}")
+        for field in ("p50_ms", "p99_ms", "requests_per_s", "rows_per_s",
+                      "seconds"):
+            v = row.get(field)
+            if not isinstance(v, (int, float)) or v < 0:
+                problems.append(f"sweep[{i}].{field} must be a "
+                                f"non-negative number, got {v!r}")
+        if isinstance(row.get("p50_ms"), float) and \
+                isinstance(row.get("p99_ms"), float) and \
+                row["p99_ms"] < row["p50_ms"]:
+            problems.append(f"sweep[{i}]: p99_ms < p50_ms")
+    swap = report.get("swap", {})
+    for field in ("swaps", "submitted", "completed", "dropped"):
+        v = swap.get(field)
+        if not isinstance(v, int) or v < 0:
+            problems.append(f"swap.{field} must be a non-negative int, "
+                            f"got {v!r}")
+    for field in ("pause_ms_mean", "pause_ms_max"):
+        v = swap.get(field)
+        if not isinstance(v, (int, float)) or v < 0:
+            problems.append(f"swap.{field} must be a non-negative "
+                            f"number, got {v!r}")
+    if not isinstance(swap.get("versions_seen"), list):
+        problems.append("swap.versions_seen must be a list")
+    if problems:
+        raise ValueError("BENCH_serve.json schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def _fit_models(rng: np.random.Generator):
+    """Two distinct fitted models over the same features — the serving
+    model and the mid-stream replacement."""
+    x = np.concatenate([rng.normal(m, 1.0, (600, D))
+                        for m in np.linspace(0.0, 8.0, K)]
+                       ).astype(np.float32)
+    gmm_a = GMMEstimator(k=K, seed=0).fit(x).gmm_
+    gmm_b = GMMEstimator(k=K, seed=3).fit(x[::2] + 0.2).gmm_
+    return gmm_a, gmm_b
+
+
+def _request_stream(rng: np.random.Generator, sizes, n_reqs: int):
+    picks = rng.choice(len(sizes), size=n_reqs)
+    return [ScoreRequest(i, rng.normal(0.0, 4.0, (sizes[p], D)))
+            for i, p in enumerate(picks)]
+
+
+def _drive(eng: ScoringEngine, reqs, install_at=None, new_model=None):
+    """Trickle the stream in (ARRIVALS_PER_STEP per micro-batch),
+    optionally installing ``new_model`` after ``install_at`` submissions
+    -> (results, wall_seconds)."""
+    results, submitted = [], 0
+    t0 = time.time()
+    while submitted < len(reqs) or eng.pending_requests:
+        for _ in range(ARRIVALS_PER_STEP):
+            if submitted < len(reqs):
+                eng.submit(reqs[submitted])
+                submitted += 1
+        if install_at is not None and submitted >= install_at:
+            eng.install(new_model, 2)
+            install_at = None
+        results.extend(eng.step())
+    return results, time.time() - t0
+
+
+def _sweep_row(gmm, reqs, slots: int, rows_per_slot: int) -> dict:
+    eng = ScoringEngine(gmm, ScoreConfig(slots=slots,
+                                         rows_per_slot=rows_per_slot))
+    _drive(eng, reqs[: 2 * slots])                 # warmup: compile
+    eng2 = ScoringEngine(gmm, ScoreConfig(slots=slots,
+                                          rows_per_slot=rows_per_slot))
+    results, secs = _drive(eng2, reqs)
+    lat_ms = np.array([r.latency_s for r in results]) * 1e3
+    rows_total = int(sum(r.num_rows for r in results))
+    return {
+        "slots": slots,
+        "rows_per_slot": rows_per_slot,
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "requests_per_s": round(len(results) / secs, 2),
+        "rows_per_s": round(rows_total / secs, 1),
+        "seconds": round(secs, 3),
+    }
+
+
+def _swap_section(gmm_a, gmm_b, reqs, slots: int,
+                  rows_per_slot: int) -> dict:
+    eng = ScoringEngine(gmm_a, ScoreConfig(slots=slots,
+                                           rows_per_slot=rows_per_slot),
+                        version=1)
+    results, _ = _drive(eng, reqs, install_at=len(reqs) // 2,
+                        new_model=gmm_b)
+    pauses_ms = [p * 1e3 for p in eng.swap_pauses]
+    return {
+        "slots": slots,
+        "rows_per_slot": rows_per_slot,
+        "swaps": eng.swaps,
+        "pause_ms_mean": round(float(np.mean(pauses_ms)), 3) if pauses_ms
+        else 0.0,
+        "pause_ms_max": round(float(np.max(pauses_ms)), 3) if pauses_ms
+        else 0.0,
+        "submitted": len(reqs),
+        "completed": len(results),
+        "dropped": len(reqs) - len(results),
+        "versions_seen": sorted({r.model_version for r in results}),
+    }
+
+
+def run(quick: bool = True, dry_run: bool = False) -> list[str]:
+    sweep_cfgs = SWEEP_DRY if dry_run else SWEEP_FULL
+    sizes = REQ_SIZES_DRY if dry_run else REQ_SIZES_FULL
+    n_reqs = N_REQS_DRY if dry_run else (
+        N_REQS_FULL // 4 if quick else N_REQS_FULL)
+    rng = np.random.default_rng(0)
+    gmm_a, gmm_b = _fit_models(rng)
+    reqs = _request_stream(rng, sizes, n_reqs)
+
+    report = {
+        "backend": jax.default_backend(),
+        "setting": {"d": D, "k": K, "requests": n_reqs,
+                    "rows_total": int(sum(r.num_rows for r in reqs)),
+                    "request_sizes": list(sizes),
+                    "arrivals_per_step": ARRIVALS_PER_STEP},
+        "sweep": [],
+        "swap": {},
+    }
+    rows = []
+    for slots, rps in sweep_cfgs:
+        row = _sweep_row(gmm_a, reqs, slots, rps)
+        report["sweep"].append(row)
+        rows.append(f"serve/slots{slots}x{rps}/req{n_reqs}d{D}K{K},"
+                    f"{row['seconds'] / max(n_reqs, 1) * 1e6:.0f},"
+                    f"p50={row['p50_ms']}ms p99={row['p99_ms']}ms "
+                    f"{row['requests_per_s']}req/s "
+                    f"{row['rows_per_s']:.0f}rows/s")
+
+    swap_slots, swap_rps = sweep_cfgs[-1]
+    swap = _swap_section(gmm_a, gmm_b, reqs, swap_slots, swap_rps)
+    report["swap"] = swap
+    rows.append(f"serve/hot_swap/slots{swap_slots}x{swap_rps},"
+                f"{swap['pause_ms_mean'] * 1e3:.0f},"
+                f"pause_max={swap['pause_ms_max']}ms "
+                f"dropped={swap['dropped']} "
+                f"versions={swap['versions_seen']}")
+
+    validate_report(report)
+    if not dry_run:
+        # hard guards: the consistency claim and the bounded tail
+        if swap["dropped"] != 0:
+            raise RuntimeError(
+                f"hot swap dropped {swap['dropped']} of "
+                f"{swap['submitted']} requests — the drain-and-install "
+                f"protocol guarantees zero")
+        if not set(swap["versions_seen"]) <= {1, 2}:
+            raise RuntimeError(
+                f"results tagged with unknown model versions: "
+                f"{swap['versions_seen']} (expected a subset of [1, 2])")
+        best_p99 = min(row["p99_ms"] for row in report["sweep"])
+        if best_p99 > P99_LIMIT_MS:
+            raise RuntimeError(
+                f"serving tail latency unbounded: best-geometry p99 is "
+                f"{best_p99:.1f}ms (guard: <= {P99_LIMIT_MS}ms)")
+    if dry_run:
+        rows.append("# dry-run: report schema OK, numbers are placeholders")
+        return rows
+    if not quick:
+        JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--dry-run", action="store_true",
+                        help="tiny-stream schema-validation mode (CI "
+                             "bench-smoke lane): runs the sweep and the "
+                             "mid-stream swap, validates the report "
+                             "schema, writes nothing")
+    cli = parser.parse_args()
+    for r in run(quick=cli.dry_run, dry_run=cli.dry_run):
+        print(r)
+    if not cli.dry_run:
+        print(f"# wrote {JSON_PATH}")

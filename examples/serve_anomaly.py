@@ -1,58 +1,111 @@
-"""Serve a small transformer with batched requests + the FedGenGMM
-activation monitor (the paper's technique as a first-class serving
-feature): each serving shard fits a local GMM over the hidden-state
-features of its traffic; ONE communication round builds the global
-monitor; incoming batches are scored online.
+"""Train federated, publish per round, serve with hot model swap — the
+paper's anomaly-detection story (§5.4) end to end on the §10 serving
+engine.
+
+A trainer thread runs distributed EM (``DEM``) over out-of-core clients
+and PUBLISHES the global model after every communication round
+(a delegating strategy wrapper + ``repro.serve.ModelStore``). The main
+thread serves a stream of scoring requests through
+``repro.api.Scorer``: each newly published round hot-swaps in between
+batches — no request is dropped, and every batch of scores carries the
+version (= round) of the model that produced it. The last batches,
+scored by the converged model, separate in-distribution traffic from
+out-of-distribution traffic.
 
     PYTHONPATH=src python examples/serve_anomaly.py
 """
+import tempfile
+import threading
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import decode_step, init_params, prefill_forward
-from repro.monitor import FedGMMMonitor, MonitorConfig
+from repro.api import Scorer, fit_federated
+from repro.core.dem import DEMStrategy
+from repro.data.sources import ArraySource
+from repro.serve import ModelStore
 
-cfg = get_config("internlm2-1.8b", "smoke")
-params = init_params(jax.random.key(0), cfg)
+D, K, CLIENTS = 6, 3, 4
+
 rng = np.random.default_rng(0)
+mus = rng.normal(0, 5, (K, D)).astype(np.float32)
 
-# ---- 1. batched serving: prefill + a few decode steps ----
-B, S = 8, 48
-prompt = jnp.asarray(rng.zipf(1.5, (B, S)).clip(0, 99), jnp.int32)
-prefill = jax.jit(lambda p, b: prefill_forward(p, cfg, b, capacity=S + 16))
-step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+# ---- 1. out-of-core clients: heterogeneous slices of one mixture ----
+clients = []
+for c in range(CLIENTS):
+    weights = rng.dirichlet(np.full(K, 0.5))
+    y = rng.choice(K, 3000, p=weights)
+    clients.append(ArraySource(
+        (mus[y] + rng.normal(0, 0.7, (3000, D))).astype(np.float32)))
 
-t0 = time.time()
-logits, cache = prefill(params, {"tokens": prompt})
-tok = jnp.argmax(logits, -1).astype(jnp.int32)
-generated = [tok]
-for i in range(8):
-    logits, cache = step(params, cache, tok, jnp.asarray(S + i, jnp.int32))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    generated.append(tok)
-print(f"served {B} requests, 8 tokens each, in {time.time() - t0:.1f}s "
-      f"(includes compile)")
-print("sample continuation:", [int(g[0]) for g in generated])
 
-# ---- 2. federated anomaly monitor over 4 serving shards ----
-mon = FedGMMMonitor(cfg, MonitorConfig(k_local=2, k_global=4, h=50))
-for shard in range(4):
-    for _ in range(4):
-        traffic = rng.zipf(1.5, (8, 32)).clip(0, 99)
-        mon.observe(shard, params, {"tokens": jnp.asarray(traffic,
-                                                          jnp.int32)})
-mon.aggregate()  # <- the single communication round
+class PublishEachRound:
+    """Delegating strategy wrapper: identical federation math, plus one
+    ``store.publish`` of the new global model after every server
+    combine — the trainer side of the §10 hot-swap protocol."""
 
-id_batch = {"tokens": jnp.asarray(rng.zipf(1.5, (16, 32)).clip(0, 99),
-                                  jnp.int32)}
-ood_batch = {"tokens": jnp.asarray(
-    rng.integers(400, cfg.vocab_size, (16, 32)), jnp.int32)}
-print(f"in-distribution anomaly score: "
-      f"{float(np.median(mon.score(params, id_batch))):.2f}")
-print(f"out-of-distribution score:     "
-      f"{float(np.median(mon.score(params, ood_batch))):.2f}  "
-      f"(higher = flagged)")
+    def __init__(self, strategy, store):
+        self._strategy = strategy
+        self._store = store
+        self._round = 0
+
+    def __getattr__(self, name):
+        return getattr(self._strategy, name)
+
+    def server_combine(self, state, total):
+        state = self._strategy.server_combine(state, total)
+        self._round += 1
+        self._store.publish(state.gmm, {"round": self._round})
+        time.sleep(0.3)   # stand-in for real client/network round latency
+        return state
+
+
+with tempfile.TemporaryDirectory() as root:
+    store = ModelStore(root)
+
+    # fit_federated's strategy seam takes any FederationStrategy — the
+    # wrapper rides the same runtime as the named "dem" strategy
+    base = DEMStrategy(k=K, covariance_type="diag", backend="auto",
+                       chunk=None, init="separated", host=True,
+                       tol=1e-4, reg_covar=1e-6)
+
+    def train():
+        fit_federated(clients, strategy=PublishEachRound(base, store),
+                      key=jax.random.key(0))
+
+    trainer = threading.Thread(target=train)
+    trainer.start()
+
+    # ---- 2. serve while training: hot swap as each round lands ----
+    while store.latest_version() is None:   # wait for round 1
+        time.sleep(0.01)
+    scorer = Scorer.from_checkpoint(root, "anomaly", slots=4,
+                                    rows_per_slot=256)
+
+    id_rows = lambda: (mus[rng.choice(K, 256)]
+                       + rng.normal(0, 0.7, (256, D))).astype(np.float32)
+    served = []
+    while trainer.is_alive() or store.latest_version() > max(
+            (v for v, _ in served), default=0):
+        scores = scorer.score(id_rows())
+        served.append((scorer.model_version, float(np.median(scores))))
+        time.sleep(0.005)
+    trainer.join()
+
+    versions = [v for v, _ in served]
+    print(f"served {len(served)} batches across model versions "
+          f"{sorted(set(versions))} (hot-swapped {len(set(versions)) - 1} "
+          f"times, zero requests dropped)")
+    print("median anomaly score by round:",
+          [f"v{v}:{s:.2f}" for v, s in served[:: max(1, len(served) // 6)]])
+
+    # ---- 3. the converged detector: ID vs OOD traffic ----
+    ood = rng.normal(14.0, 1.0, (256, D)).astype(np.float32)
+    id_score = float(np.median(scorer.score(id_rows())))
+    ood_score = float(np.median(scorer.score(ood)))
+    print(f"in-distribution anomaly score:  {id_score:.2f}   (model "
+          f"v{scorer.model_version})")
+    print(f"out-of-distribution score:      {ood_score:.2f}   "
+          f"(higher = flagged)")
+    assert ood_score > id_score

@@ -17,15 +17,18 @@ baselines :class:`DEM`, :class:`FedEM`, :class:`FedKMeans` — all run on
 the §9 federation runtime and return results carrying a dtype-aware
 communication ledger; :func:`fit_federated` is the ``strategy=`` seam
 (named strategies or a custom ``repro.fed.FederationStrategy``).
-``score`` / ``log_prob`` / ``bic`` are the matching model-level scorers.
-Everything below this package (``repro.core.*`` entry points included) is
-internal; ``tests/test_api_surface.py`` snapshots this surface so drift
-fails CI.
+``score`` / ``log_prob`` / ``bic`` are the matching model-level scorers,
+and :class:`Scorer` is the serving facade — score rows against the
+latest *published* global model (hot-swapping as new rounds land) via
+the §10 continuous-batching engine. Everything below this package
+(``repro.core.*`` entry points included) is internal;
+``tests/test_api_surface.py`` snapshots this surface so drift fails CI.
 """
 from repro.core.config import DEFAULT_SOURCE_CHUNK, FitConfig
 from repro.api.estimators import (DEM, FedEM, FedGenGMM, FedKMeans,
                                   GMMEstimator, KMeansEstimator, bic,
                                   fit_federated, log_prob, score)
+from repro.api.serving import Scorer
 
 __all__ = [
     "FitConfig",
@@ -39,5 +42,6 @@ __all__ = [
     "score",
     "log_prob",
     "bic",
+    "Scorer",
     "DEFAULT_SOURCE_CHUNK",
 ]

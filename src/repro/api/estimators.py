@@ -211,6 +211,10 @@ class GMMEstimator:
     def fit(self, data, *, sample_weight=None,
             init_gmm: Optional[GMM] = None,
             key: Optional[jax.Array] = None) -> "GMMEstimator":
+        """Fit on a resident ``(N, d)`` array or a :class:`DataSource`
+        (out-of-core). ``sample_weight`` is per-row (resident data only);
+        ``init_gmm`` warm-starts EM (exclusive with ``k_candidates``);
+        ``key`` overrides the config's seed policy. Returns ``self``."""
         kind = _classify(data, "GMMEstimator.fit", ("array", "source"))
         _check_weights(kind, sample_weight,
                        "GMMEstimator.fit over a DataSource")
@@ -237,12 +241,18 @@ class GMMEstimator:
         return self.gmm_
 
     def score(self, data, sample_weight=None) -> jax.Array:
+        """Average per-row log-likelihood of ``data`` (array or
+        :class:`DataSource`) under the fitted model — a scalar."""
         return score(self._fitted(), data, sample_weight, self.config)
 
     def log_prob(self, data) -> jax.Array:
+        """Per-row mixture log density under the fitted model -> (N,)."""
         return log_prob(self._fitted(), data, self.config)
 
     def bic(self, data, sample_weight=None) -> jax.Array:
+        """Bayesian information criterion of the fitted model on ``data``
+        (lower is better) — the model-selection score behind
+        ``k_candidates``."""
         return bic(self._fitted(), data, sample_weight, self.config)
 
 
@@ -266,6 +276,9 @@ class KMeansEstimator:
 
     def fit(self, data, *, sample_weight=None,
             key: Optional[jax.Array] = None) -> "KMeansEstimator":
+        """Fit on a resident ``(N, d)`` array or a :class:`DataSource`.
+        ``sample_weight`` is per-row (resident data only); ``key``
+        overrides the config's seed policy. Returns ``self``."""
         kind = _classify(data, "KMeansEstimator.fit", ("array", "source"))
         _check_weights(kind, sample_weight,
                        "KMeansEstimator.fit over a DataSource")
@@ -278,18 +291,23 @@ class KMeansEstimator:
 
     @property
     def centers_(self):
+        """Fitted ``(k, d)`` cluster centers (best restart)."""
         if self.result_ is None:
             raise RuntimeError("estimator is not fitted; call fit() first")
         return self.result_.centers
 
     @property
     def assignments_(self):
+        """Per-row cluster index ``(N,)`` — None after a DataSource fit
+        (the only O(N) output is skipped out-of-core)."""
         if self.result_ is None:
             raise RuntimeError("estimator is not fitted; call fit() first")
         return self.result_.assignments
 
     @property
     def inertia_(self):
+        """Weighted sum of squared distances to the assigned centers
+        (the quantity ``n_init`` restarts minimize)."""
         if self.result_ is None:
             raise RuntimeError("estimator is not fitted; call fit() first")
         return self.result_.inertia
@@ -343,6 +361,9 @@ class FedGenGMM:
         self.result_: Optional[FedGenResult] = None
 
     def run(self, clients, *, key: Optional[jax.Array] = None) -> FedGenResult:
+        """Run the one-shot pipeline over a :class:`ClientSplit` (vmapped
+        residents) or a list of per-client :class:`DataSource`\\ s
+        (streamed) -> :class:`repro.core.fedgen.FedGenResult`."""
         _classify(clients, "FedGenGMM.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
         self.result_ = fedgengmm_cfg(
@@ -353,6 +374,7 @@ class FedGenGMM:
 
     @property
     def global_gmm_(self) -> GMM:
+        """The merged-and-refit global mixture from the last ``run``."""
         if self.result_ is None:
             raise RuntimeError("runner has no result; call run() first")
         return self.result_.global_gmm
@@ -380,6 +402,9 @@ class DEM:
         self.result_: Optional[DEMResult] = None
 
     def run(self, clients, *, key: Optional[jax.Array] = None) -> DEMResult:
+        """Run distributed EM to convergence (or ``max_iter`` rounds)
+        over a :class:`ClientSplit` or list of per-client
+        :class:`DataSource`\\ s -> :class:`repro.core.dem.DEMResult`."""
         _classify(clients, "DEM.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
         self.result_ = dem_cfg(key, clients, self.config, self.k)
@@ -387,6 +412,7 @@ class DEM:
 
     @property
     def global_gmm_(self) -> GMM:
+        """The converged global mixture from the last ``run``."""
         if self.result_ is None:
             raise RuntimeError("runner has no result; call run() first")
         return self.result_.global_gmm
@@ -440,6 +466,9 @@ class FedEM:
         self.result_: Optional[FedEMResult] = None
 
     def run(self, clients, *, key: Optional[jax.Array] = None) -> FedEMResult:
+        """Run federated EM under the configured participation/cohort/
+        straggler policy -> :class:`repro.fed.strategies.FedEMResult`
+        (with the cohort-sized communication ledger)."""
         _classify(clients, "FedEM.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
         self.result_ = fedem_cfg(key, clients, self.config, self.k,
@@ -452,6 +481,7 @@ class FedEM:
 
     @property
     def global_gmm_(self) -> GMM:
+        """The final broadcast mixture from the last ``run``."""
         if self.result_ is None:
             raise RuntimeError("runner has no result; call run() first")
         return self.result_.global_gmm
@@ -480,6 +510,8 @@ class FedKMeans:
 
     def run(self, clients, *,
             key: Optional[jax.Array] = None) -> FedKMeansResult:
+        """Run federated k-means to center convergence (or the round
+        budget) -> :class:`repro.fed.strategies.FedKMeansResult`."""
         _classify(clients, "FedKMeans.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
         self.result_ = fed_kmeans_cfg(key, clients, self.config, self.k)
@@ -487,6 +519,7 @@ class FedKMeans:
 
     @property
     def centers_(self):
+        """The final ``(k, d)`` global centers from the last ``run``."""
         if self.result_ is None:
             raise RuntimeError("runner has no result; call run() first")
         return self.result_.centers

@@ -1,0 +1,122 @@
+"""The serving facade: :class:`Scorer` — score rows against a published
+global model without touching the engine plumbing (DESIGN.md §10).
+
+``repro.serve`` exposes the full streaming machinery (slot pools,
+micro-batches, hot swap); :class:`Scorer` is the two-line version for
+callers that just have rows to score::
+
+    from repro.api import Scorer
+
+    scorer = Scorer.from_checkpoint("runs/models")   # latest version
+    anomaly = scorer.score(x)                        # (n,) float32
+
+A ``Scorer`` built with ``follow=True`` (the default for
+``from_checkpoint``) keeps watching the model store: when the federation
+runtime publishes a new round's global model, the next ``score`` call is
+served by it — the drain-and-install swap guarantees every batch is
+scored by exactly one model version, reported in
+:attr:`Scorer.model_version`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.gmm import GMM
+from repro.serve.engine import ScoringEngine
+from repro.serve.model_store import ModelStore
+from repro.serve.types import ScoreConfig, ScoreRequest
+
+
+class Scorer:
+    """Batch-in / scores-out facade over the continuous-batching engine.
+
+    - ``gmm``: the model to serve (any :class:`repro.core.gmm.GMM` — a
+      fitted estimator's ``gmm_``, a federated result's ``global_gmm_``,
+      or a loaded checkpoint).
+    - ``mode``: ``"log_prob"`` (per-row mixture log density),
+      ``"anomaly"`` (its negation — higher = more anomalous, the paper's
+      §5.4 detector) or ``"responsibilities"`` (per-row posterior over
+      the K components).
+    - ``slots`` / ``rows_per_slot`` / ``backend`` / ``poll_every``:
+      engine knobs, validated by :class:`repro.serve.ScoreConfig`.
+    - ``version``: tag reported for this model (a store-backed scorer
+      tracks the published version instead).
+
+    Prefer :meth:`from_checkpoint` when the model lives in a versioned
+    store directory published by the training loop.
+    """
+
+    def __init__(self, gmm: GMM, mode: str = "log_prob", *,
+                 slots: int = 8, rows_per_slot: int = 512,
+                 backend: str = "auto", poll_every: int = 1,
+                 version: Union[int, str] = "v0", _store=None):
+        config = ScoreConfig(mode=mode, slots=slots,
+                             rows_per_slot=rows_per_slot, backend=backend,
+                             poll_every=poll_every)
+        self._engine = ScoringEngine(gmm, config, version=version,
+                                     store=_store)
+        self._next_rid = 0
+
+    @classmethod
+    def from_checkpoint(cls, root, mode: str = "log_prob", *,
+                        version: Optional[int] = None, follow: bool = True,
+                        **knobs) -> "Scorer":
+        """Build a scorer from a versioned model-store directory (the one
+        the training side publishes into with
+        ``repro.serve.ModelStore.publish`` or
+        ``repro.checkpoint.publish_checkpoint``).
+
+        - ``version=None`` serves the latest published model; an int pins
+          a specific version.
+        - ``follow=True`` (only valid with ``version=None``) keeps the
+          subscription attached: newly published models hot-swap in
+          between batches.
+        - ``**knobs`` are the :class:`Scorer` engine knobs
+          (``slots=...``, ``backend=...``, ...).
+
+        Raises :class:`FileNotFoundError` when nothing has been published
+        under ``root`` yet.
+        """
+        store = ModelStore(root)
+        if version is not None:
+            published = store.load(version)
+            follow = False
+        else:
+            published = store.latest()
+            if published is None:
+                raise FileNotFoundError(
+                    f"no published model under {str(root)!r}")
+        return cls(published.gmm, mode,
+                   version=published.version,
+                   _store=store if follow else None, **knobs)
+
+    @property
+    def model_version(self) -> Union[int, str]:
+        """Version tag of the model currently being served."""
+        return self._engine.version
+
+    @property
+    def gmm(self) -> GMM:
+        """The currently served model."""
+        return self._engine.gmm
+
+    @property
+    def engine(self) -> ScoringEngine:
+        """The underlying :class:`repro.serve.ScoringEngine`, for callers
+        that want the streaming interface (``submit`` / ``step``)."""
+        return self._engine
+
+    def score(self, rows) -> np.ndarray:
+        """Score one batch of rows -> per-row scores, row-aligned with the
+        input: ``(n,)`` f32 for log_prob/anomaly, ``(n, K)`` f32 for
+        responsibilities. Polls the attached store first, so a
+        store-following scorer always serves the newest published model
+        (check :attr:`model_version` for which one that was)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._engine.submit(ScoreRequest(rid, np.asarray(rows)))
+        results = self._engine.drain()
+        (result,) = [r for r in results if r.rid == rid]
+        return result.scores

@@ -1,2 +1,6 @@
-from repro.checkpoint.store import load_checkpoint, save_checkpoint
-__all__ = ["load_checkpoint", "save_checkpoint"]
+from repro.checkpoint.store import (latest_version, leaf_spec,
+                                    load_checkpoint, load_published,
+                                    publish_checkpoint, save_checkpoint)
+
+__all__ = ["load_checkpoint", "save_checkpoint", "publish_checkpoint",
+           "latest_version", "load_published", "leaf_spec"]

@@ -1,12 +1,42 @@
 """Minimal pytree checkpointing: flat-key npz + json metadata (no external
-deps; sufficient for CPU-scale training and the examples)."""
+deps; sufficient for CPU-scale training and the examples) — plus the
+**versioned publish/subscribe seam** the serving engine hot-swaps on
+(DESIGN.md §10).
+
+Two layers:
+
+- :func:`save_checkpoint` / :func:`load_checkpoint` — one named
+  checkpoint, caller-chosen path. ``load_checkpoint`` restores into the
+  structure of a ``like`` pytree and raises :class:`ValueError` naming
+  the offending flat key on a missing leaf or a shape mismatch (a real
+  exception, not an ``assert`` — the check survives ``python -O``).
+- :func:`publish_checkpoint` / :func:`latest_version` /
+  :func:`load_published` — a monotonically versioned stream of models in
+  one directory. Publishing is **atomic for a single publisher** (the
+  federation server): payload files are written to hidden temp names and
+  ``os.replace``-d into place, and the ``LATEST`` pointer file is
+  replaced last, so a subscriber that reads ``LATEST`` never observes a
+  version whose payload is missing or half-written. Subscribers poll
+  ``latest_version`` cheaply (one small file read) —
+  ``repro.serve.ModelStore`` is the consumer.
+
+Extended float dtypes (bf16 et al.) are stored as f32 in the npz (npz has
+no portable bfloat16) and cast back to the target leaf dtype on restore;
+bf16 -> f32 -> bf16 is exact, so the round trip is lossless.
+"""
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 
 import jax
 import numpy as np
+
+# Version v of a published stream lives at <root>/model-<v:06d>.{npz,json};
+# <root>/LATEST holds {"version": v, "stem": "model-<v:06d>"}.
+LATEST_NAME = "LATEST"
+_STEM_FMT = "model-{:06d}"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -25,7 +55,29 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return flat
 
 
+def leaf_spec(tree) -> dict[str, dict]:
+    """Flat-key -> {"shape", "dtype"} table of a pytree's leaves, with the
+    ORIGINAL dtypes (bf16 stays "bfloat16" even though the npz stores
+    f32). Published alongside every versioned checkpoint so a subscriber
+    can rebuild a ``like`` template without out-of-band shape knowledge."""
+    spec = {}
+    for key, leaf in _flatten_specs(tree):
+        arr = np.asarray(leaf)
+        spec[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    return spec
+
+
+def _flatten_specs(tree):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        yield key, leaf
+
+
 def save_checkpoint(path: str, params, metadata: dict | None = None):
+    """Write ``params`` (any pytree) to ``<path>.npz`` (+ ``<path>.json``
+    when ``metadata`` is given). Leaves are flattened to ``/``-joined key
+    paths; extended float dtypes are stored as f32 (see module note)."""
     p = Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     np.savez_compressed(p.with_suffix(".npz"), **_flatten(params))
@@ -34,7 +86,15 @@ def save_checkpoint(path: str, params, metadata: dict | None = None):
 
 
 def load_checkpoint(path: str, like):
-    """Restore into the structure of ``like`` (a params pytree)."""
+    """Restore ``<path>.npz`` into the structure of ``like`` (a params
+    pytree) -> ``(params, metadata)``.
+
+    Every leaf is cast to the dtype of the corresponding ``like`` leaf
+    (the bf16 round-trip contract). Raises :class:`ValueError` naming the
+    flat pytree key when the checkpoint is missing a leaf ``like``
+    expects, or when a stored leaf's shape does not match — both are real
+    exceptions (the historical bare ``assert`` vanished under
+    ``python -O`` and the KeyError on a missing leaf was opaque)."""
     p = Path(path)
     data = np.load(p.with_suffix(".npz"))
     flat_like, tdef = jax.tree_util.tree_flatten_with_path(like)
@@ -42,11 +102,92 @@ def load_checkpoint(path: str, like):
     for path_k, leaf in flat_like:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in path_k)
+        if key not in data.files:
+            raise ValueError(
+                f"checkpoint {p.with_suffix('.npz')} is missing pytree "
+                f"leaf {key!r}; stored leaves: {sorted(data.files)}")
         arr = data[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape} but the "
+                f"template expects {leaf.shape} "
+                f"(checkpoint: {p.with_suffix('.npz')})")
         leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
     meta = {}
     if p.with_suffix(".json").exists():
         meta = json.loads(p.with_suffix(".json").read_text())
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves), meta
+
+
+# ----------------------------------------------------------------------
+# Versioned publish/subscribe (the serving hot-swap seam)
+# ----------------------------------------------------------------------
+
+def latest_version(root: str) -> int | None:
+    """Highest published version in ``root``, or None when nothing has
+    been published yet. One small-file read in the normal case — cheap
+    enough to poll between serving micro-batches. A missing ``LATEST``
+    pointer (e.g. a publisher crash between the payload and pointer
+    renames) falls back to scanning the published payloads, so a torn
+    pointer can never wedge the stream or recycle a version number."""
+    pointer = Path(root) / LATEST_NAME
+    try:
+        return int(json.loads(pointer.read_text())["version"])
+    except FileNotFoundError:
+        versions = [int(p.stem.split("-")[-1])
+                    for p in Path(root).glob("model-*.npz")]
+        return max(versions) if versions else None
+
+
+def publish_checkpoint(root: str, params, metadata: dict | None = None) -> int:
+    """Publish ``params`` as the next version of the stream in ``root``
+    and return the new version number (1-based, monotonic).
+
+    Write order is the atomicity protocol: the npz and json payloads land
+    under hidden temp names, each is ``os.replace``-d to its final name,
+    and the ``LATEST`` pointer is replaced last — so a subscriber that
+    learns about version v through ``LATEST`` can always read v's files.
+    Single-publisher by design (the federation server owns the stream);
+    the json metadata automatically gains ``version`` and a ``leaves``
+    shape/dtype table (:func:`leaf_spec`) so subscribers can rebuild a
+    ``like`` template with no out-of-band knowledge."""
+    rootp = Path(root)
+    rootp.mkdir(parents=True, exist_ok=True)
+    version = (latest_version(root) or 0) + 1
+    stem = _STEM_FMT.format(version)
+    meta = dict(metadata or {})
+    meta["version"] = version
+    meta["leaves"] = leaf_spec(params)
+
+    tmp = rootp / f".tmp-{stem}"
+    np.savez_compressed(tmp.with_suffix(".npz"), **_flatten(params))
+    tmp.with_suffix(".json").write_text(json.dumps(meta, indent=2))
+    os.replace(tmp.with_suffix(".npz"), (rootp / stem).with_suffix(".npz"))
+    os.replace(tmp.with_suffix(".json"), (rootp / stem).with_suffix(".json"))
+
+    ptr_tmp = rootp / (".tmp-" + LATEST_NAME)
+    ptr_tmp.write_text(json.dumps({"version": version, "stem": stem}))
+    os.replace(ptr_tmp, rootp / LATEST_NAME)
+    return version
+
+
+def load_published(root: str, like, version: int | None = None):
+    """Load one version of a published stream -> ``(params, metadata,
+    version)``, restoring into the structure/dtypes of ``like`` exactly
+    like :func:`load_checkpoint`. ``version=None`` loads the latest;
+    raises :class:`FileNotFoundError` when the stream is empty and
+    :class:`ValueError` when the named version was never published."""
+    if version is None:
+        version = latest_version(root)
+        if version is None:
+            raise FileNotFoundError(
+                f"no published checkpoint under {root!r} (no "
+                f"{LATEST_NAME} pointer)")
+    stem = Path(root) / _STEM_FMT.format(version)
+    if not stem.with_suffix(".npz").exists():
+        raise ValueError(
+            f"version {version} was never published under {root!r} "
+            f"(latest is {latest_version(root)})")
+    params, meta = load_checkpoint(str(stem), like)
+    return params, meta, int(version)

@@ -446,6 +446,10 @@ def log_prob_chunked(gmm: GMM, x: jax.Array,
     delegate unconditionally like every other engine entry point. Accepts a
     :class:`DataSource` (the per-row *output* is still O(N), but only 4
     bytes a row — the (N, K) block never exists).
+
+    Every path runs the ONE jitted block (``_log_prob_block_jit``), which
+    is row-wise bit-stable across batch shapes — so chunked, full-batch
+    and the serving engine's padded-slab scores are bit-identical.
     """
     backend = resolve_backend(backend, fused_supported=gmm.is_diagonal)
     if isinstance(x, DataSource):
@@ -454,9 +458,10 @@ def log_prob_chunked(gmm: GMM, x: jax.Array,
             resolve_source_chunk(chunk_size))
         return lp
     if chunk_size is None:
-        return _log_prob_block(gmm, x, backend)
+        return _log_prob_block_jit(gmm, x, backend)
     _, lp = streaming_map_reduce(
-        lambda xb: ((), _log_prob_block(gmm, xb, backend)), (x,), chunk_size)
+        lambda xb: ((), _log_prob_block_jit(gmm, xb, backend)), (x,),
+        chunk_size)
     return lp
 
 

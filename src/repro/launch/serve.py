@@ -4,10 +4,13 @@ monitoring of the served traffic.
 
 Batching model: slot-synchronous static batching — up to ``max_batch``
 requests are padded to a common prompt length, prefilled together, then
-decoded in lockstep until every request hits its token budget (per-request
-early EOS masks it out of the loss-of-interest but the slot runs on; this
-is the simple scheduler — continuous batching would reuse slots mid-flight
-and is left as a documented extension point).
+decoded in lockstep until every request hits its token budget
+(per-request early EOS masks it out of the loss-of-interest but the slot
+runs on). This is deliberately the simple scheduler for the transformer
+demo; the repo's real continuous-batching engine — free slots reused
+mid-flight, one compiled slab shape, hot model swap — is
+``repro.serve.ScoringEngine`` (DESIGN.md §10), which serves the paper's
+GMM scoring/anomaly path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --variant smoke --requests 12 --max-new 8

@@ -1,0 +1,38 @@
+"""repro.serve — the production-shaped GMM scoring engine (DESIGN.md §10).
+
+The seam the paper's deployment story needs between "a fitted global
+model" and "a stream of scoring requests":
+
+- :class:`ScoringEngine` — continuous batching over a fixed slot pool
+  (one compiled slab shape, donated buffers) with drain-and-install hot
+  model swap;
+- :class:`ModelStore` — the versioned publish/subscribe watcher over
+  ``repro.checkpoint.store``, so the federation runtime publishes a new
+  global model each round and a live engine picks it up without dropping
+  a request;
+- :class:`ScoreConfig` / :class:`ScoreRequest` / :class:`ScoreResult` —
+  the one configuration and the request/response pair (every result
+  echoes the version of the model that scored it).
+
+The public-facing entry is ``repro.api.Scorer`` (this package sits below
+the facade, next to ``repro.core``); ``examples/serve_anomaly.py`` is
+the end-to-end train -> publish -> serve walk, and
+``benchmarks/serve_bench.py`` tracks latency/QPS/swap-pause in
+``BENCH_serve.json``.
+"""
+from repro.serve.engine import ScoringEngine
+from repro.serve.model_store import ModelStore, PublishedModel
+from repro.serve.slots import SlotPool
+from repro.serve.types import (SCORE_MODES, ScoreConfig, ScoreRequest,
+                               ScoreResult)
+
+__all__ = [
+    "ScoringEngine",
+    "ModelStore",
+    "PublishedModel",
+    "SlotPool",
+    "ScoreConfig",
+    "ScoreRequest",
+    "ScoreResult",
+    "SCORE_MODES",
+]

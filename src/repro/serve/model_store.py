@@ -1,0 +1,141 @@
+"""The hot-swap model watcher: a GMM-typed publish/subscribe view over
+the versioned checkpoint stream in ``repro.checkpoint.store``
+(DESIGN.md §10).
+
+The federation runtime (or anything that produces a new global model)
+calls :meth:`ModelStore.publish` — one atomic versioned checkpoint per
+round. The serving engine holds the subscriber half: it calls
+:meth:`ModelStore.poll` between micro-batches, which returns a newly
+published model exactly once (and always jumps to the *latest* version —
+a server that fell behind skips intermediates rather than replaying
+them). Shapes and dtypes ride in the published metadata
+(``checkpoint.store.leaf_spec``), so a subscriber needs no out-of-band
+template: a store directory is self-describing.
+
+Publisher and subscriber can be different processes on one filesystem —
+the atomicity lives in ``publish_checkpoint``'s write-then-rename
+protocol, not in this class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from repro.checkpoint.store import (latest_version, load_published,
+                                    publish_checkpoint)
+from repro.core.gmm import GMM
+
+# GMM.tree_flatten order -> the flat checkpoint keys (weights, means,
+# covs). Pinned here so a template can be rebuilt from metadata alone.
+_GMM_LEAF_KEYS = ("0", "1", "2")
+
+
+def _gmm_template(leaves: dict) -> GMM:
+    """Zero-filled GMM with the shapes/dtypes a published checkpoint's
+    ``leaves`` metadata describes — the ``like`` pytree the loader
+    restores into (this is what preserves bf16 leaves through the f32
+    npz storage)."""
+    missing = [k for k in _GMM_LEAF_KEYS if k not in leaves]
+    if missing:
+        raise ValueError(
+            f"published checkpoint is not a GMM: metadata is missing "
+            f"leaf keys {missing} (has {sorted(leaves)})")
+    w, mu, cov = (jnp.zeros(tuple(leaves[k]["shape"]),
+                            jnp.dtype(leaves[k]["dtype"]))
+                  for k in _GMM_LEAF_KEYS)
+    return GMM(w, mu, cov)
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishedModel:
+    """One published global model: its monotonic ``version``, the
+    restored :class:`GMM`, and the publisher's metadata dict (which
+    includes ``version`` and the ``leaves`` shape table)."""
+
+    version: int
+    gmm: GMM
+    metadata: dict
+
+
+class ModelStore:
+    """One directory = one versioned stream of global GMMs.
+
+    - ``publish(gmm, metadata)`` -> new version number (atomic; the
+      single publisher is whoever owns the training loop).
+    - ``poll()`` -> a :class:`PublishedModel` the first time a version
+      newer than anything this store object has returned appears, else
+      None — the engine's between-micro-batches check.
+    - ``latest()`` / ``load(version)`` -> explicit reads (``latest``
+      returns None on an empty stream; ``load`` raises on a version that
+      was never published).
+
+    The seen-version cursor is per ``ModelStore`` instance (each
+    subscriber tracks its own progress); the directory itself is the
+    shared truth.
+    """
+
+    def __init__(self, root: Union[str, Path]):
+        self.root = str(root)
+        self._seen = 0
+
+    def publish(self, gmm: GMM, metadata: Optional[dict] = None) -> int:
+        """Publish a new global model -> its version (1-based,
+        monotonic). ``metadata`` (e.g. the federation round, the
+        training loglik) is stored in the version's json alongside the
+        auto-generated ``version``/``leaves`` entries."""
+        if not isinstance(gmm, GMM):
+            raise TypeError(
+                f"ModelStore publishes repro.core.gmm.GMM models, got "
+                f"{type(gmm).__name__}")
+        return publish_checkpoint(self.root, gmm, metadata)
+
+    def latest_version(self) -> Optional[int]:
+        """Highest published version, or None on an empty stream (one
+        small-file read; safe to call every micro-batch)."""
+        return latest_version(self.root)
+
+    def load(self, version: Optional[int] = None) -> PublishedModel:
+        """Load one version (None = latest) -> :class:`PublishedModel`.
+        Advances this subscriber's seen-cursor, so a later ``poll`` only
+        fires on something newer still."""
+        meta_path = self._meta_path(version)
+        meta = json.loads(meta_path.read_text())
+        like = _gmm_template(meta["leaves"])
+        gmm, meta, v = load_published(self.root, like,
+                                      meta["version"])
+        self._seen = max(self._seen, v)
+        return PublishedModel(v, gmm, meta)
+
+    def latest(self) -> Optional[PublishedModel]:
+        """The newest published model, or None on an empty stream."""
+        if self.latest_version() is None:
+            return None
+        return self.load(None)
+
+    def poll(self) -> Optional[PublishedModel]:
+        """Return the newest published model IF it is newer than
+        anything this subscriber has seen, else None. Always jumps to
+        the latest version (intermediate versions published since the
+        last poll are skipped, not replayed)."""
+        v = self.latest_version()
+        if v is None or v <= self._seen:
+            return None
+        return self.load(v)
+
+    def _meta_path(self, version: Optional[int]) -> Path:
+        from repro.checkpoint.store import _STEM_FMT
+        if version is None:
+            version = self.latest_version()
+            if version is None:
+                raise FileNotFoundError(
+                    f"no published model under {self.root!r}")
+        path = Path(self.root) / (_STEM_FMT.format(version) + ".json")
+        if not path.exists():
+            raise ValueError(
+                f"version {version} was never published under "
+                f"{self.root!r} (latest is {self.latest_version()})")
+        return path

@@ -1,0 +1,112 @@
+"""Request/response types and the one scoring configuration of the
+serving engine (DESIGN.md §10).
+
+A scoring request is a batch of feature rows; a response is the per-row
+scores plus the version tag of the model that produced them. Everything
+here is host-side plumbing — the device-facing contract (one static
+``(slots, rows_per_slot, d)`` slab shape) lives in
+:class:`~repro.serve.slots.SlotPool` and the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+
+#: Scoring modes: per-row mixture log density, per-row anomaly score
+#: (its negation — higher = more anomalous, the paper's §5.4 detector),
+#: or per-row posterior responsibilities (an (n, K) block per request).
+SCORE_MODES = ("log_prob", "anomaly", "responsibilities")
+
+#: Engine backends mirror the training engine's dispatch
+#: (``repro.core.config.resolve_backend``): "auto" picks the fused Pallas
+#: ``gmm_logpdf`` kernel on TPU and the pure-jnp reference elsewhere.
+SERVE_BACKENDS = ("auto", "reference", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreConfig:
+    """The one validated serving configuration (frozen/hashable).
+
+    - ``mode``: ``"log_prob"`` (per-row mixture log density, f32, shape
+      ``(n,)`` per request), ``"anomaly"`` (its negation, same shape) or
+      ``"responsibilities"`` (posterior ``(n, K)`` block per request).
+    - ``slots``: size of the fixed slot pool — how many requests can be
+      in flight at once. The hot path compiles ONCE per
+      ``(slots, rows_per_slot, d, K, mode, backend)``.
+    - ``rows_per_slot``: rows a slot feeds the scoring step per
+      micro-batch. Requests longer than this stream through their slot
+      over multiple micro-batches (the continuous-batching contract);
+      shorter ones are zero-padded to the static shape.
+    - ``backend``: kernel dispatch, as in training ("auto" = fused Pallas
+      ``gmm_logpdf`` on TPU, pure-jnp reference on CPU).
+    - ``poll_every``: poll the attached model store every this many
+      micro-batches (1 = every step); purely a host-side cadence knob.
+
+    Validation happens here, once, at construction — the engine trusts
+    its config.
+    """
+
+    mode: str = "log_prob"
+    slots: int = 8
+    rows_per_slot: int = 512
+    backend: str = "auto"
+    poll_every: int = 1
+
+    def __post_init__(self):
+        if self.mode not in SCORE_MODES:
+            raise ValueError(
+                f"mode must be one of {SCORE_MODES}, got {self.mode!r}")
+        if self.backend not in SERVE_BACKENDS:
+            raise ValueError(
+                f"backend must be one of {SERVE_BACKENDS}, "
+                f"got {self.backend!r}")
+        for name in ("slots", "rows_per_slot", "poll_every"):
+            v = getattr(self, name)
+            if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"{name} must be a positive int, got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreRequest:
+    """One scoring request: ``rid`` (caller-chosen id, echoed in the
+    result) and ``rows`` — an ``(n, d)`` float array of feature rows
+    (``n >= 0``; ``d`` must match the served model's feature dim, checked
+    at submit). Rows are captured as a NumPy f32 array at construction so
+    a request is immutable host data."""
+
+    rid: int
+    rows: np.ndarray
+
+    def __post_init__(self):
+        rows = np.asarray(self.rows, dtype=np.float32)
+        if rows.ndim != 2:
+            raise ValueError(
+                f"request rows must be (n, d), got shape {rows.shape}")
+        object.__setattr__(self, "rows", rows)
+
+    @property
+    def num_rows(self) -> int:
+        """Number of feature rows in this request."""
+        return self.rows.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreResult:
+    """One completed request: per-row ``scores`` (``(n,)`` f32 for
+    log_prob/anomaly, ``(n, K)`` f32 for responsibilities, row-aligned
+    with the request), the ``model_version`` tag of the model that scored
+    EVERY row (the hot-swap protocol guarantees a request never spans two
+    models), and wall-clock ``latency_s`` from submit to retirement."""
+
+    rid: int
+    scores: np.ndarray
+    model_version: Union[int, str]
+    latency_s: float
+
+    @property
+    def num_rows(self) -> int:
+        """Number of scored rows (equals the request's row count)."""
+        return self.scores.shape[0]

@@ -11,17 +11,25 @@ Fails on:
   ``.gitignore``, which only guards *untracked* files: ``git add -f``,
   IDE auto-stage, or bytecode committed before the ignore rule all slip
   straight past it.
-- upward imports — any module under ``repro.core`` or ``repro.fed``
-  importing ``repro.api`` at module top. The facade sits ABOVE the core
-  and the federation runtime (DESIGN.md §8/§9); the deprecation shims
-  lazily import it at call time, and a module-level import would close
-  an import cycle that only surfaces as an opaque partially-initialized-
-  module error depending on which package a user imports first.
+- upward imports — any module under ``repro.core``, ``repro.fed`` or
+  ``repro.serve`` importing ``repro.api`` at module top. The facade sits
+  ABOVE the core, the federation runtime and the serving engine
+  (DESIGN.md §8/§9/§10); the deprecation shims lazily import it at call
+  time, and a module-level import would close an import cycle that only
+  surfaces as an opaque partially-initialized-module error depending on
+  which package a user imports first.
+- missing public docstrings — every public def/class (and public method)
+  in the facade (``repro.api``) and the serving package (``repro.serve``)
+  must carry a docstring, including the defs the facade RE-EXPORTS in its
+  ``__all__`` from lower layers (e.g. ``FitConfig`` lives in
+  ``repro.core.config`` but is public surface). These two packages ARE
+  the documentation users hit first; an undocumented name there is a doc
+  regression, caught here rather than in review.
 
-Pure stdlib (the import guard is an AST walk, no repro import) and no
-test collection here — the companion ``pytest --collect-only`` gate
-needs the real dependency stack and runs as its own CI step (see
-.github/workflows/ci.yml).
+Pure stdlib (the import and docstring guards are AST walks, no repro
+import) and no test collection here — the companion
+``pytest --collect-only`` gate needs the real dependency stack and runs
+as its own CI step (see .github/workflows/ci.yml).
 """
 from __future__ import annotations
 
@@ -34,8 +42,13 @@ BYTECODE_SUFFIXES = (".pyc", ".pyo")
 
 # Packages that must never import the facade at module top (the facade
 # imports THEM).
-LAYERED_PACKAGES = ("src/repro/core", "src/repro/fed")
+LAYERED_PACKAGES = ("src/repro/core", "src/repro/fed", "src/repro/serve")
 FORBIDDEN_PREFIX = "repro.api"
+
+# Packages whose public names must all carry docstrings (the user-facing
+# doc surface), and the source root for resolving their re-exports.
+DOC_PACKAGES = ("src/repro/api", "src/repro/serve")
+SRC_ROOT = "src"
 
 
 def tracked_files(repo_root: Path) -> list[str]:
@@ -83,6 +96,86 @@ def import_cycle_violations(repo_root: Path) -> list[str]:
     return bad
 
 
+def _undocumented_defs(tree: ast.Module, rel: str) -> list[str]:
+    """Public top-level defs/classes and public methods without a
+    docstring. Leading-underscore names (dunders included) are internal
+    by convention; assignments (constants) cannot carry docstrings and
+    are skipped."""
+    bad = []
+
+    def check(node, prefix=""):
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                continue
+            name = prefix + child.name
+            if not child.name.startswith("_") and \
+                    ast.get_docstring(child) is None:
+                bad.append(f"{rel}:{child.lineno} {name}")
+            if isinstance(child, ast.ClassDef):
+                check(child, name + ".")
+
+    check(tree)
+    return bad
+
+
+def _exported_names(init_tree: ast.Module) -> tuple[list[str], dict]:
+    """(__all__ entries, imported-name -> source module) of a package
+    ``__init__``."""
+    exported, origins = [], {}
+    for node in init_tree.body:
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+            if "__all__" in targets and isinstance(node.value,
+                                                   (ast.List, ast.Tuple)):
+                exported = [elt.value for elt in node.value.elts
+                            if isinstance(elt, ast.Constant)]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                origins[alias.asname or alias.name] = (node.module,
+                                                       alias.name)
+    return exported, origins
+
+
+def docstring_violations(repo_root: Path) -> list[str]:
+    """Public names in the doc-surface packages without docstrings —
+    both the defs that live there and the lower-layer defs their
+    ``__init__.__all__`` re-exports."""
+    bad = []
+    seen_files = set()
+    for pkg in DOC_PACKAGES:
+        for path in sorted((repo_root / pkg).rglob("*.py")):
+            seen_files.add(path)
+            tree = ast.parse(path.read_text(), filename=str(path))
+            bad.extend(_undocumented_defs(tree,
+                                          str(path.relative_to(repo_root))))
+        init = repo_root / pkg / "__init__.py"
+        if not init.exists():
+            continue
+        exported, origins = _exported_names(ast.parse(init.read_text()))
+        for name in exported:
+            if name not in origins:
+                continue
+            module, src_name = origins[name]
+            mod_path = repo_root / SRC_ROOT / Path(*module.split("."))
+            mod_path = (mod_path / "__init__.py"
+                        if mod_path.is_dir()
+                        else mod_path.with_suffix(".py"))
+            if not mod_path.exists() or mod_path in seen_files:
+                continue  # in-package origin already scanned above
+            mod_tree = ast.parse(mod_path.read_text())
+            for node in mod_tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)) \
+                        and node.name == src_name \
+                        and ast.get_docstring(node) is None:
+                    bad.append(
+                        f"{mod_path.relative_to(repo_root)}:{node.lineno} "
+                        f"{src_name} (re-exported by {pkg}/__init__.py)")
+    return sorted(set(bad))
+
+
 def main() -> int:
     repo_root = Path(__file__).resolve().parent.parent
     bad = bytecode_violations(tracked_files(repo_root))
@@ -98,9 +191,17 @@ def main() -> int:
         for c in cycles:
             print(f"  {c}")
         return 1
+    undocumented = docstring_violations(repo_root)
+    if undocumented:
+        print("public names without docstrings (repro.api / repro.serve "
+              "are the user-facing doc surface):")
+        for u in undocumented:
+            print(f"  {u}")
+        return 1
     print(f"hygiene OK: no bytecode among {len(tracked_files(repo_root))} "
-          f"tracked files; no repro.core/repro.fed module imports "
-          f"repro.api at module top")
+          f"tracked files; no repro.core/fed/serve module imports "
+          f"repro.api at module top; every public repro.api/repro.serve "
+          f"name is documented")
     return 0
 
 
