@@ -33,6 +33,18 @@ carries the wall-clock-vs-cohort-size curve and the m=32 speedup; full
 mode FAILS (RuntimeError) if sampling a 32-cohort is not at least 5x
 faster per round than masking all 1000 — the tentpole claim, guarded.
 
+Full and dry modes also stage the **privacy benchmark** (DESIGN.md §11,
+"uplink transforms"): utility vs epsilon under an EQUAL total (eps,
+delta) budget for the one-shot release (FedGen spends the whole budget
+on its single round, ``GaussianDP(rounds=1)``) against the iterative
+strategies (DEM / FedEM deplete the same budget across their round
+budget, ``GaussianDP(rounds=R)`` — the Huang et al. depletion problem
+the paper cites). The ``privacy`` section carries one utility-vs-epsilon
+curve per strategy with the ledger's realized ``epsilon_spent`` per
+point, plus the no-DP baseline utilities; full mode FAILS (RuntimeError)
+if FedGen's one-shot utility at eps=1 regresses below the committed
+floor.
+
 Quick (CI) mode scales down and prints rows only; ``--dry-run`` shrinks
 to tiny N / capped rounds and *validates the report schema* instead of
 recording timings — that is what the CI bench-smoke lane runs.
@@ -49,7 +61,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import (DEM, FedEM, FedGenGMM, FedKMeans, FitConfig, score)
+from repro.api import (DEM, DPConfig, FedEM, FedGenGMM, FedKMeans,
+                       FitConfig, score)
+from repro.fed import GaussianDP
 from repro.core.em import SufficientStats, e_step_stats, m_step
 from repro.core.partition import partition
 from repro.fed import CyclicSampler, run_rounds
@@ -69,6 +83,18 @@ POP_FULL = dict(clients=1_000, n=50_000, cohorts=(8, 32, 128, 1_000),
 POP_DRY = dict(clients=48, n=960, cohorts=(4, 16, 48), guard_m=16,
                rounds=2)
 POP_MIN_SPEEDUP = 5.0
+
+# privacy benchmark: utility vs epsilon under equal TOTAL (eps, delta)
+# budgets — one-shot FedGen (rounds=1) vs iterative DEM/FedEM depleting
+# the budget across their round budget
+PRIV_FULL = dict(n=8_000, epsilons=(0.25, 1.0, 4.0), rounds=30,
+                 delta=1e-5)
+PRIV_DRY = dict(n=512, epsilons=(1.0,), rounds=3, delta=1e-5)
+PRIV_STRATEGIES = ("fedgen", "dem", "fedem")
+# committed floor for FedGen's one-shot utility at eps=1 on the full
+# setting (avg loglik on the training union; measured 3.03 on the CPU
+# backend — regenerate deliberately when the mechanism changes)
+FEDGEN_EPS1_FLOOR = 2.5
 
 
 def validate_report(report: dict) -> None:
@@ -108,6 +134,8 @@ def validate_report(report: dict) -> None:
                                 f"non-negative number, got {v!r}")
     if "population" in report:
         _validate_population(report["population"], problems)
+    if "privacy" in report:
+        _validate_privacy(report["privacy"], problems)
     if problems:
         raise ValueError("BENCH_comm.json schema violations:\n  "
                          + "\n  ".join(problems))
@@ -140,6 +168,60 @@ def _validate_population(section: dict, problems: list[str]) -> None:
         problems.append("population.guard_cohort_size must be an int")
     if not isinstance(section.get("guard_speedup"), (int, float)):
         problems.append("population.guard_speedup must be a number")
+
+
+def _validate_privacy(section: dict, problems: list[str]) -> None:
+    for field in ("n", "rounds_budget"):
+        v = section.get(field)
+        if not isinstance(v, int) or v < 1:
+            problems.append(f"privacy.{field} must be a positive int, "
+                            f"got {v!r}")
+    delta = section.get("delta")
+    if not isinstance(delta, float) or not 0.0 < delta < 1.0:
+        problems.append(f"privacy.delta must be a float in (0, 1), "
+                        f"got {delta!r}")
+    epsilons = section.get("epsilons")
+    if (not isinstance(epsilons, list) or not epsilons
+            or not all(isinstance(e, (int, float)) and e > 0
+                       for e in epsilons)):
+        problems.append("privacy.epsilons must be a non-empty list of "
+                        "positive numbers")
+        epsilons = []
+    baseline = section.get("baseline", {})
+    curves = section.get("curves", {})
+    for name in PRIV_STRATEGIES:
+        if not isinstance(baseline.get(name), (int, float)):
+            problems.append(f"privacy.baseline.{name} must be a number "
+                            "(no-DP utility)")
+        curve = curves.get(name)
+        if not isinstance(curve, list) or len(curve) != len(epsilons):
+            problems.append(f"privacy.curves.{name} must have one point "
+                            f"per epsilon ({len(epsilons)})")
+            continue
+        for i, pt in enumerate(curve):
+            e = pt.get("epsilon")
+            if not isinstance(e, (int, float)) or e <= 0:
+                problems.append(f"privacy.curves.{name}[{i}].epsilon must "
+                                f"be a positive number, got {e!r}")
+            if not isinstance(pt.get("value"), (int, float)):
+                problems.append(f"privacy.curves.{name}[{i}].value must "
+                                "be a number")
+            spent = pt.get("epsilon_spent")
+            if not isinstance(spent, (int, float)) or spent < 0:
+                problems.append(f"privacy.curves.{name}[{i}]"
+                                f".epsilon_spent must be a non-negative "
+                                f"number, got {spent!r}")
+            elif isinstance(e, (int, float)) and spent > e * (1 + 1e-6):
+                problems.append(f"privacy.curves.{name}[{i}] overspends "
+                                f"the accountant: epsilon_spent {spent!r} "
+                                f"> budget {e!r}")
+            r = pt.get("rounds")
+            if not isinstance(r, int) or r < 1:
+                problems.append(f"privacy.curves.{name}[{i}].rounds must "
+                                f"be a positive int, got {r!r}")
+    for field in ("guard_floor", "guard_value"):
+        if not isinstance(section.get(field), (int, float)):
+            problems.append(f"privacy.{field} must be a number")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,6 +327,76 @@ def run_population(dry_run: bool = False) -> tuple[dict, list[str]]:
     return section, rows
 
 
+def run_privacy(dry_run: bool = False) -> tuple[dict, list[str]]:
+    """Utility vs epsilon under an equal TOTAL (eps, delta) budget:
+    one-shot FedGen (``GaussianDP(rounds=1)`` via the ``dp=`` sugar)
+    against iterative DEM / FedEM whose per-round release gets
+    ``eps / rounds_budget`` so the accountant depletes the same total.
+    DP sensitivities assume features in the unit cube, so this section
+    plants its mixture inside [0, 1]^d."""
+    p = PRIV_DRY if dry_run else PRIV_FULL
+    n, rounds, delta = p["n"], p["rounds"], p["delta"]
+    rng = np.random.default_rng(7)
+    mus = rng.uniform(0.2, 0.8, (K, D)).astype(np.float32)
+    y = rng.integers(0, K, n)
+    x = np.clip(mus[y] + rng.normal(0, 0.05, (n, D)), 0.0, 1.0)
+    x = x.astype(np.float32)
+    split = partition(np.random.default_rng(8), x, y, CLIENTS,
+                      "dirichlet", ALPHA)
+    xj = jnp.asarray(x)
+    cfg = FitConfig(max_iter=rounds)
+    key = jax.random.key(11)
+
+    def loglik(gmm):
+        return float(score(gmm, xj, config=cfg))
+
+    def runners(dp_cfg, t_iter):
+        return {
+            "fedgen": lambda: FedGenGMM(k_clients=K, k_global=K, h=40,
+                                        config=cfg, dp=dp_cfg).run(
+                split, key=jax.random.fold_in(key, 0)),
+            "dem": lambda: DEM(K, config=cfg, transform=t_iter).run(
+                split, key=jax.random.fold_in(key, 1)),
+            "fedem": lambda: FedEM(K, participation=0.5, local_epochs=1,
+                                   config=cfg, transform=t_iter).run(
+                split, key=jax.random.fold_in(key, 2)),
+        }
+
+    section = {"n": n, "delta": float(delta), "rounds_budget": rounds,
+               "alpha": ALPHA, "scheme": "dirichlet",
+               "epsilons": [float(e) for e in p["epsilons"]],
+               "baseline": {},
+               "curves": {name: [] for name in PRIV_STRATEGIES}}
+    rows = []
+    for name, runner in runners(None, None).items():
+        section["baseline"][name] = round(loglik(runner().global_gmm), 5)
+    for eps in section["epsilons"]:
+        dp_cfg = DPConfig(epsilon=eps, delta=float(delta))
+        t_iter = GaussianDP(epsilon=eps, delta=float(delta), rounds=rounds)
+        for name, runner in runners(dp_cfg, t_iter).items():
+            res = runner()
+            pt = {"epsilon": eps,
+                  "epsilon_spent": round(float(res.comm.epsilon_spent), 6),
+                  "rounds": int(res.comm.rounds),
+                  "value": round(loglik(res.global_gmm), 5)}
+            section["curves"][name].append(pt)
+            rows.append(f"fed_priv/{name}/eps{eps:g}/N{n},"
+                        f"{pt['rounds']}r spent={pt['epsilon_spent']:.3f} "
+                        f"avg_loglik={pt['value']:.4f} "
+                        f"(no-DP {section['baseline'][name]:.4f})")
+    fedgen_curve = section["curves"]["fedgen"]
+    guard_pt = next((pt for pt in fedgen_curve if pt["epsilon"] == 1.0),
+                    fedgen_curve[-1])
+    section["guard_floor"] = FEDGEN_EPS1_FLOOR
+    section["guard_value"] = guard_pt["value"]
+    if not dry_run and guard_pt["value"] < FEDGEN_EPS1_FLOOR:
+        raise RuntimeError(
+            f"one-shot DP release regressed: FedGen utility at "
+            f"eps={guard_pt['epsilon']:g} is {guard_pt['value']:.4f}, "
+            f"below the committed floor {FEDGEN_EPS1_FLOOR}")
+    return section, rows
+
+
 def _ledger_row(metric: str, value: float, comm, seconds: float) -> dict:
     return {
         "metric": metric,
@@ -315,6 +467,9 @@ def run(quick: bool = True, dry_run: bool = False) -> list[str]:
         section, pop_rows = run_population(dry_run=dry_run)
         report["population"] = section
         rows.extend(pop_rows)
+        priv, priv_rows = run_privacy(dry_run=dry_run)
+        report["privacy"] = priv
+        rows.extend(priv_rows)
     validate_report(report)
     if dry_run:
         rows.append("# dry-run: report schema OK, numbers are placeholders")

@@ -16,7 +16,11 @@ The federated runners — one-shot :class:`FedGenGMM` and the iterative
 baselines :class:`DEM`, :class:`FedEM`, :class:`FedKMeans` — all run on
 the §9 federation runtime and return results carrying a dtype-aware
 communication ledger; :func:`fit_federated` is the ``strategy=`` seam
-(named strategies or a custom ``repro.fed.FederationStrategy``).
+(named strategies or a custom ``repro.fed.FederationStrategy``), and its
+``transform=`` keyword installs an uplink transform
+(``repro.fed.transforms`` §11: DP, quantization, secure-agg masking) —
+:class:`DPConfig` is the FitConfig-style budget sugar FedGenGMM takes
+directly (``FedGenGMM(..., dp=DPConfig(epsilon=1.0))``).
 ``score`` / ``log_prob`` / ``bic`` are the matching model-level scorers,
 and :class:`Scorer` is the serving facade — score rows against the
 latest *published* global model (hot-swapping as new rounds land) via
@@ -25,6 +29,7 @@ the §10 continuous-batching engine. Everything below this package
 ``tests/test_api_surface.py`` snapshots this surface so drift fails CI.
 """
 from repro.core.config import DEFAULT_SOURCE_CHUNK, FitConfig
+from repro.core.privacy import DPConfig
 from repro.api.estimators import (DEM, FedEM, FedGenGMM, FedKMeans,
                                   GMMEstimator, KMeansEstimator, bic,
                                   fit_federated, log_prob, score)
@@ -32,6 +37,7 @@ from repro.api.serving import Scorer
 
 __all__ = [
     "FitConfig",
+    "DPConfig",
     "GMMEstimator",
     "KMeansEstimator",
     "FedGenGMM",

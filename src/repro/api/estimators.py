@@ -40,7 +40,9 @@ from repro.core.fedgen import FedGenResult, fedgengmm_cfg
 from repro.core.gmm import GMM
 from repro.core.kmeans import KMeansResult, kmeans_fit_cfg
 from repro.core.partition import ClientSplit
+from repro.core.privacy import DPConfig
 from repro.fed.runtime import FederationStrategy, run_rounds
+from repro.fed.transforms import GaussianDP
 from repro.fed.strategies import (FedEMResult, FedKMeansResult,
                                   _resolve_fedkmeans_init, fed_kmeans_cfg,
                                   fedem_cfg)
@@ -334,6 +336,7 @@ class FedGenGMM:
                  k_global: Optional[int] = None,
                  k_candidates: Optional[Sequence[int]] = None,
                  h: int = 100, synthetic: str = "auto",
+                 dp: Optional[DPConfig] = None, transform=None,
                  config: Optional[FitConfig] = None, **overrides):
         if k_clients is None and k_candidates is None:
             raise ValueError("pass k_clients (fixed local K) or "
@@ -352,6 +355,19 @@ class FedGenGMM:
             _as_int(kc, "k_candidates entry") for kc in k_candidates))
         self.h = _as_int(h, "h")
         self.synthetic = synthetic
+        if dp is not None and transform is not None:
+            raise ValueError(
+                "pass dp (a DPConfig, sugar for a one-shot GaussianDP "
+                "uplink transform) OR transform (any PayloadTransform), "
+                "not both")
+        if dp is not None:
+            if not isinstance(dp, DPConfig):
+                raise TypeError(
+                    f"dp must be a DPConfig, got {type(dp).__name__}")
+            transform = GaussianDP(epsilon=float(dp.epsilon),
+                                   delta=float(dp.delta), rounds=1,
+                                   min_count=float(dp.min_count))
+        self.transform = transform
         self.config = _make_config(config, overrides)
         if self.config.init not in ("auto", "kmeans"):
             raise ValueError(
@@ -369,7 +385,7 @@ class FedGenGMM:
         self.result_ = fedgengmm_cfg(
             key, clients, self.config, k_clients=self.k_clients,
             k_global=self.k_global, k_candidates=self.k_candidates,
-            h=self.h, synthetic=self.synthetic)
+            h=self.h, synthetic=self.synthetic, transform=self.transform)
         return self.result_
 
     @property
@@ -391,9 +407,10 @@ class DEM:
     rounds. Returns a :class:`repro.core.dem.DEMResult`.
     """
 
-    def __init__(self, k: int, *, config: Optional[FitConfig] = None,
-                 **overrides):
+    def __init__(self, k: int, *, transform=None,
+                 config: Optional[FitConfig] = None, **overrides):
         self.k = _as_int(k, "k")
+        self.transform = transform
         self.config = _make_config(config, overrides)
         # one copy of the strategy rule: construction-time validation
         # delegates to the core resolver (input-type resolution of "auto"
@@ -407,7 +424,8 @@ class DEM:
         :class:`DataSource`\\ s -> :class:`repro.core.dem.DEMResult`."""
         _classify(clients, "DEM.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
-        self.result_ = dem_cfg(key, clients, self.config, self.k)
+        self.result_ = dem_cfg(key, clients, self.config, self.k,
+                               transform=self.transform)
         return self.result_
 
     @property
@@ -445,7 +463,7 @@ class FedEM:
 
     def __init__(self, k: int, *, participation: float = 1.0,
                  local_epochs: int = 1, cohort: str = "cyclic",
-                 cohort_seed: int = 0, stragglers=None,
+                 cohort_seed: int = 0, stragglers=None, transform=None,
                  config: Optional[FitConfig] = None, **overrides):
         self.k = _as_int(k, "k")
         if not 0.0 < float(participation) <= 1.0:
@@ -459,6 +477,7 @@ class FedEM:
         self.cohort = cohort
         self.cohort_seed = _as_int(cohort_seed, "cohort_seed", minimum=0)
         self.stragglers = stragglers
+        self.transform = transform
         self.config = _make_config(config, overrides)
         # same strategy rule as DEM: validate the init scheme name now,
         # resolve "auto" per input type at run()
@@ -476,7 +495,8 @@ class FedEM:
                                  local_epochs=self.local_epochs,
                                  cohort=self.cohort,
                                  cohort_seed=self.cohort_seed,
-                                 stragglers=self.stragglers)
+                                 stragglers=self.stragglers,
+                                 transform=self.transform)
         return self.result_
 
     @property
@@ -501,9 +521,10 @@ class FedKMeans:
     :class:`repro.fed.strategies.FedKMeansResult`.
     """
 
-    def __init__(self, k: int, *, config: Optional[FitConfig] = None,
-                 **overrides):
+    def __init__(self, k: int, *, transform=None,
+                 config: Optional[FitConfig] = None, **overrides):
         self.k = _as_int(k, "k")
+        self.transform = transform
         self.config = _make_config(config, overrides)
         _resolve_fedkmeans_init(self.config.init)
         self.result_: Optional[FedKMeansResult] = None
@@ -514,7 +535,8 @@ class FedKMeans:
         budget) -> :class:`repro.fed.strategies.FedKMeansResult`."""
         _classify(clients, "FedKMeans.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
-        self.result_ = fed_kmeans_cfg(key, clients, self.config, self.k)
+        self.result_ = fed_kmeans_cfg(key, clients, self.config, self.k,
+                                      transform=self.transform)
         return self.result_
 
     @property
@@ -532,7 +554,7 @@ _STRATEGY_RUNNERS = {"fedgen": FedGenGMM, "dem": DEM, "fedem": FedEM,
 
 def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
                   config: Optional[FitConfig] = None, max_rounds=None,
-                  sampler=None, stragglers=None, **kwargs):
+                  sampler=None, stragglers=None, transform=None, **kwargs):
     """THE strategy seam for FitConfig-driven federated runs (§9).
 
     ``strategy`` is either a name — ``"fedgen"`` | ``"dem"`` | ``"fedem"``
@@ -548,6 +570,14 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
     (``participation=...``, ``cohort=...``, ``stragglers=...`` for
     FedEM). Scenario PRs plug in HERE: a new baseline is one strategy
     class, not a new entry-point family.
+
+    ``transform`` installs an uplink :class:`repro.fed.PayloadTransform`
+    (§11) — :class:`~repro.fed.GaussianDP`,
+    :class:`~repro.fed.StochasticQuantize`,
+    :class:`~repro.fed.PairwiseMask`, a :class:`~repro.fed.Compose` of
+    them, or anything implementing the protocol — applied to every
+    client's payload before the server aggregate, on every backend and
+    for named and custom strategies alike.
     """
     if isinstance(strategy, str):
         if strategy not in _STRATEGY_RUNNERS:
@@ -566,6 +596,8 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
                 "... with cohort='cyclic'|'uniform')")
         if stragglers is not None:
             kwargs["stragglers"] = stragglers
+        if transform is not None:
+            kwargs["transform"] = transform
         runner = _STRATEGY_RUNNERS[strategy](config=config, **kwargs)
         return runner.run(clients, key=key)
     if not isinstance(strategy, FederationStrategy):
@@ -583,4 +615,5 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
             else cfg.resolve_max_iter("em")
     key = _resolve_key(key, cfg)
     return run_rounds(strategy, clients, key=key, max_rounds=max_rounds,
-                      sampler=sampler, stragglers=stragglers)
+                      sampler=sampler, stragglers=stragglers,
+                      transform=transform)

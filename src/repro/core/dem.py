@@ -297,7 +297,8 @@ class DEMStrategy:
                          comm)
 
 
-def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int) -> DEMResult:
+def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
+            transform=None) -> DEMResult:
     """Run DEM — the cfg-core behind ``repro.api.DEM``, dispatching on the
     client input type (:class:`ClientSplit` vs list of
     :class:`DataSource`) through the federation runtime. The init strategy
@@ -315,7 +316,8 @@ def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int) -> DEMResult:
         init=_resolve_init(config.init, sources), host=sources,
         tol=config.resolve_tol("em"), reg_covar=config.reg_covar)
     return run_rounds(strategy, clients, key=key,
-                      max_rounds=config.resolve_max_iter("em"))
+                      max_rounds=config.resolve_max_iter("em"),
+                      transform=transform)
 
 
 def dem(key: jax.Array, split: ClientSplit, k: int, init: int = 3,

@@ -277,7 +277,14 @@ class FedGenStrategy:
         k_local_train, k_agg = jax.random.split(key)
         return {"k_local": k_local_train, "k_agg": k_agg}
 
-    def run_once(self, state: dict, backend) -> dict:
+    def run_once(self, state: dict, backend, transform=None, tparams=None,
+                 tkey=None) -> dict:
+        """The single communication round. With an uplink ``transform``
+        installed (``run_rounds(transform=...)``, §11) every client's
+        parameter-block payload ``(gmm, n_c)`` is transformed before the
+        server sees it — for :class:`~repro.fed.transforms.GaussianDP`
+        that is the paper-§4.4 one-shot DP release, the whole budget
+        spent in this one round."""
         if backend.kind == "sources":
             local_results = train_locals_sources_cfg(
                 state["k_local"], backend.sources, self.config,
@@ -308,6 +315,20 @@ class FedGenStrategy:
                 "FedGenStrategy runs ClientSplit or source-list clients; "
                 "the mesh variant is repro.distributed.fedgen_sharded")
 
+        if transform is not None:
+            # the uplink seam for the one-shot round: each client's
+            # (gmm, n_c) block is transformed under the same shared
+            # round key the iterative driver hands out (round 0); the
+            # transform derives its per-client streams itself
+            members = jnp.arange(len(local_gmms))
+            rkey = jax.random.fold_in(tkey, 0)
+            sizes_list = [float(n) for n in list(sizes)]
+            released = []
+            for i, (g, n) in enumerate(zip(local_gmms, sizes_list)):
+                wire = transform.apply(rkey, tparams, (g, n), i, members)
+                released.append(transform.finish(wire)[0])
+            local_gmms = released
+
         res, synth = aggregate_cfg(
             state["k_agg"], local_gmms, sizes, self.config, h=self.h,
             k_global=self.k_global, k_candidates=self.k_candidates,
@@ -334,7 +355,8 @@ def fedgengmm_cfg(key: jax.Array, clients, config: FitConfig,
                   k_global: Optional[int] = None,
                   k_candidates: Optional[Sequence[int]] = None,
                   h: int = 100,
-                  synthetic: str = "auto") -> FedGenResult:
+                  synthetic: str = "auto",
+                  transform=None) -> FedGenResult:
     """Run the full one-shot pipeline — the cfg-core behind
     ``repro.api.FedGenGMM``, a thin wrapper building a
     :class:`FedGenStrategy` and handing it to the federation runtime
@@ -364,7 +386,8 @@ def fedgengmm_cfg(key: jax.Array, clients, config: FitConfig,
         config=config, k_clients=k_clients, k_global=k_global,
         k_candidates=None if k_candidates is None else tuple(k_candidates),
         h=h, synthetic=synthetic)
-    return run_rounds(strategy, clients, key=key, max_rounds=1)
+    return run_rounds(strategy, clients, key=key, max_rounds=1,
+                      transform=transform)
 
 
 def fedgengmm(key: jax.Array, split: ClientSplit,

@@ -18,64 +18,80 @@ We use the analytic Gaussian mechanism calibration sigma =
 sqrt(2 ln(1.25/delta)) * sensitivity / epsilon (composition across the
 three releases by simple epsilon-splitting). Variances are re-clipped to
 stay positive; weights are re-projected to the simplex.
+
+Since §11 the mechanism itself lives in ``repro.fed.transforms.
+GaussianDP`` — the uplink-transform seam every strategy shares — and the
+entry points here are the thin GMM-parameter spellings kept for direct
+use: :func:`privatize_gmm` / :func:`privatize_clients` release one
+client's (or every client's) fitted parameters under a :class:`DPConfig`
+budget, exactly as before the seam existed.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.gmm import GMM
+from repro.fed.transforms import GaussianDP
 
 
-class DPConfig(NamedTuple):
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """The (epsilon, delta) budget of one DP release, validated at
+    construction (FitConfig-style): ``epsilon > 0``, ``delta`` in
+    (0, 1), ``min_count > 0`` — the floor on per-component effective
+    counts that bounds the mean/variance sensitivities."""
+
     epsilon: float = 1.0
     delta: float = 1e-5
     min_count: float = 8.0   # floor on per-component effective counts
 
+    def __post_init__(self):
+        if not float(self.epsilon) > 0.0:
+            raise ValueError(
+                f"DPConfig.epsilon must be > 0, got {self.epsilon}")
+        if not 0.0 < float(self.delta) < 1.0:
+            raise ValueError(
+                f"DPConfig.delta must be in (0, 1), got {self.delta}")
+        if not float(self.min_count) > 0.0:
+            raise ValueError(
+                f"DPConfig.min_count must be > 0, got {self.min_count}")
+
 
 def gaussian_sigma(sensitivity: float, epsilon: float, delta: float) -> float:
+    """Analytic Gaussian mechanism calibration (host-side closed form):
+    ``sigma = sqrt(2 ln(1.25/delta)) * sensitivity / epsilon``."""
     return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / epsilon
+
+
+def _transform(dp: DPConfig) -> GaussianDP:
+    """One-shot (rounds=1) transform carrying this budget."""
+    return GaussianDP(epsilon=float(dp.epsilon), delta=float(dp.delta),
+                      rounds=1, min_count=float(dp.min_count))
 
 
 def privatize_gmm(key: jax.Array, gmm: GMM, n_samples: float,
                   dp: DPConfig) -> GMM:
     """Release a (epsilon, delta)-DP view of one client's GMM parameters.
 
-    Assumes diagonal covariance and features in [0,1]^d."""
-    assert gmm.is_diagonal, "DP release supports diagonal covariance"
-    k, d = gmm.means.shape
-    eps_each = dp.epsilon / 3.0
-    kw, km, kv = jax.random.split(key, 3)
-
-    # effective per-component counts (for sensitivity of means/vars)
-    counts = jnp.maximum(gmm.weights * n_samples, dp.min_count)
-
-    # weights: histogram of proportions
-    sig_w = gaussian_sigma(math.sqrt(2.0) / max(n_samples, 1.0), eps_each,
-                           dp.delta)
-    w = gmm.weights + sig_w * jax.random.normal(kw, (k,))
-    w = jnp.maximum(w, 1e-4)
-    w = w / jnp.sum(w)
-
-    # means: coordinates bounded by [0,1]
-    sig_m = gaussian_sigma(math.sqrt(d), eps_each, dp.delta)
-    mu = gmm.means + (sig_m / counts[:, None]) * \
-        jax.random.normal(km, (k, d))
-    mu = jnp.clip(mu, 0.0, 1.0)
-
-    # variances: bounded by [0, 1/4] coordinate-wise for [0,1] data
-    sig_v = gaussian_sigma(math.sqrt(d) / 4.0, eps_each, dp.delta)
-    var = gmm.covs + (sig_v / counts[:, None]) * \
-        jax.random.normal(kv, (k, d))
-    var = jnp.clip(var, 1e-5, 0.25)
-
-    return GMM(w, mu, var)
+    Assumes diagonal covariance (a full covariance raises ValueError)
+    and features in [0,1]^d. Delegates to the §11 transform
+    (:class:`repro.fed.transforms.GaussianDP`) — the same mechanism the
+    runtime applies when ``run_rounds(transform=...)`` is installed."""
+    if not gmm.is_diagonal:
+        raise ValueError(
+            f"DP release supports diagonal covariance; this GMM carries "
+            f"a 'full' covariance (covs shape {tuple(gmm.covs.shape)})")
+    t = _transform(dp)
+    released, _ = t.apply(key, t.traced(), (gmm, n_samples), 0, None)
+    return released
 
 
 def privatize_clients(key: jax.Array, gmms: list[GMM], sizes,
                       dp: DPConfig) -> list[GMM]:
+    """Per-client DP release of a list of fitted GMMs (one budget each;
+    client ``i`` draws from ``fold_in(key, i)``)."""
     return [privatize_gmm(jax.random.fold_in(key, i), g, float(n), dp)
             for i, (g, n) in enumerate(zip(gmms, sizes))]

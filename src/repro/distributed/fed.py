@@ -129,7 +129,8 @@ def dem_sharded(mesh, key, data, mask, k: int, init_centers,
                 reg_covar: float = 1e-6,
                 estep_backend: str = "auto",
                 chunk_size: int | None = None,
-                config: FitConfig | None = None) -> tuple[GMM, jax.Array]:
+                config: FitConfig | None = None,
+                transform=None) -> tuple[GMM, jax.Array]:
     """Distributed EM over the mesh: one psum of sufficient statistics per
     EM round (the iterative baseline's communication pattern).
 
@@ -159,7 +160,8 @@ def dem_sharded(mesh, key, data, mask, k: int, init_centers,
                            reg_covar=cfg.reg_covar)
     res = run_rounds(strategy, (data, mask), mesh=mesh,
                      state0=strategy.state_from_gmm(gmm0, dtype=data.dtype),
-                     max_rounds=cfg.resolve_max_iter("em"))
+                     max_rounds=cfg.resolve_max_iter("em"),
+                     transform=transform)
     return res.global_gmm, res.n_rounds
 
 
@@ -167,7 +169,8 @@ def fedem_sharded(mesh, key, data, mask, k: int, *,
                   participation: float = 1.0, local_epochs: int = 1,
                   cohort: str = "cyclic", cohort_seed: int = 0,
                   stragglers=None, init_centers=None,
-                  config: FitConfig | None = None) -> FedEMResult:
+                  config: FitConfig | None = None,
+                  transform=None) -> FedEMResult:
     """Iterative federated EM (Tian et al.) over the mesh: DEM's psum
     pattern with the partial-participation / local-epochs knobs. Under
     ``participation < 1`` the driver samples a cohort per round
@@ -202,11 +205,13 @@ def fedem_sharded(mesh, key, data, mask, k: int, *,
     return run_rounds(strategy, (data, mask), key=key, mesh=mesh,
                       state0=state0,
                       max_rounds=cfg.resolve_max_iter("em"),
-                      sampler=sampler, stragglers=stragglers)
+                      sampler=sampler, stragglers=stragglers,
+                      transform=transform)
 
 
 def fed_kmeans_sharded(mesh, key, data, mask, k: int, *,
-                       config: FitConfig | None = None) -> FedKMeansResult:
+                       config: FitConfig | None = None,
+                       transform=None) -> FedKMeansResult:
     """Iterative federated k-means (Garst et al.) over the mesh: one psum
     of per-center label statistics (counts, sums, inertia) per round —
     the same collective as DEM with responsibilities replaced by hard
@@ -219,4 +224,5 @@ def fed_kmeans_sharded(mesh, key, data, mask, k: int, *,
         init=_resolve_fedkmeans_init(cfg.init), host=False,
         tol=cfg.resolve_tol("kmeans"))
     return run_rounds(strategy, (data, mask), key=key, mesh=mesh,
-                      max_rounds=cfg.resolve_max_iter("kmeans"))
+                      max_rounds=cfg.resolve_max_iter("kmeans"),
+                      transform=transform)

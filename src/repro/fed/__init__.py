@@ -5,7 +5,10 @@ One :class:`~repro.fed.runtime.FederationStrategy` protocol and one
 algorithm: FedGenGMM and DEM (defined next to their numerics in
 ``repro.core.fedgen`` / ``repro.core.dem``) plus the iterative baselines
 FedEM and FedKMeans (``repro.fed.strategies``). The ledger
-(``repro.fed.ledger``) is the one copy of the communication accounting.
+(``repro.fed.ledger``) is the one copy of the communication accounting,
+and the uplink-transform seam (``repro.fed.transforms``, §11) is the one
+place DP noise, quantization, and secure-aggregation masking enter the
+client->server payload.
 
 ``strategies`` is loaded lazily (PEP 562): it imports ``repro.core.dem``
 for the shared init machinery, and ``repro.core`` imports this package's
@@ -19,6 +22,9 @@ from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
 from repro.fed.runtime import (FederationStrategy, SplitClients,
                                SourceClients, ShardedClients, make_backend,
                                run_rounds)
+from repro.fed.transforms import (Compose, GaussianDP, Identity,
+                                  PairwiseMask, PayloadTransform,
+                                  StochasticQuantize)
 
 _LAZY = {
     "FedEMStrategy": "repro.fed.strategies",
@@ -35,6 +41,8 @@ __all__ = [
     "label_payload_floats", "payload_floats", "stats_payload_floats",
     "FederationStrategy", "SplitClients", "SourceClients", "ShardedClients",
     "make_backend", "run_rounds",
+    "PayloadTransform", "Identity", "GaussianDP", "StochasticQuantize",
+    "PairwiseMask", "Compose",
     *sorted(_LAZY),
 ]
 

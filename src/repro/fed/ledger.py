@@ -24,7 +24,7 @@ This module is deliberately repro-free (jax + stdlib only): it sits below
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -41,19 +41,35 @@ class CommStats(NamedTuple):
     the float counts convertible to wire volume; it defaults to 4 so
     pre-§9 call sites constructing ``CommStats(rounds, up, down)`` keep
     their meaning.
+
+    Uplink and downlink directions need not share a dtype: an uplink
+    transform (``repro.fed.transforms``, §11) can quantize the
+    client->server payload to int8 while the server broadcast stays
+    float32.  ``uplink_itemsize`` / ``downlink_itemsize`` override
+    ``itemsize`` per direction when set (None = inherit), so the byte
+    accounting stays honest under asymmetric wires.  ``epsilon_spent``
+    is the cumulative privacy budget the run consumed (transform's
+    per-round spend x realized rounds; 0.0 for non-DP runs).
     """
     rounds: int
     uplink_floats: int       # client -> server payload (total floats)
     downlink_floats: int     # server -> client payload (total floats)
     itemsize: int = 4        # bytes per payload element (dtype-aware)
+    uplink_itemsize: Optional[int] = None    # override for the uplink
+    downlink_itemsize: Optional[int] = None  # override for the downlink
+    epsilon_spent: float = 0.0  # cumulative DP budget consumed
 
     @property
     def uplink_bytes(self) -> int:
-        return self.uplink_floats * self.itemsize
+        size = self.itemsize if self.uplink_itemsize is None \
+            else self.uplink_itemsize
+        return self.uplink_floats * size
 
     @property
     def downlink_bytes(self) -> int:
-        return self.downlink_floats * self.itemsize
+        size = self.itemsize if self.downlink_itemsize is None \
+            else self.downlink_itemsize
+        return self.downlink_floats * size
 
     @property
     def payload_bytes(self) -> int:
@@ -84,6 +100,10 @@ class RoundPayload(NamedTuple):
     #                                 round loop — the init-phase model /
     #                                 center broadcast that warm starts
     #                                 used to ride for free, added once
+    uplink_itemsize: Optional[int] = None    # transform-aware uplink
+    #                                          dtype (None = itemsize)
+    downlink_itemsize: Optional[int] = None  # broadcast dtype override
+    epsilon_per_round: float = 0.0  # DP budget one round spends
 
     def totals(self, rounds: int) -> CommStats:
         return CommStats(
@@ -92,7 +112,10 @@ class RoundPayload(NamedTuple):
             + self.extra_uplink_floats,
             downlink_floats=rounds * self.downlink_floats
             + self.extra_downlink_floats,
-            itemsize=self.itemsize)
+            itemsize=self.itemsize,
+            uplink_itemsize=self.uplink_itemsize,
+            downlink_itemsize=self.downlink_itemsize,
+            epsilon_spent=rounds * self.epsilon_per_round)
 
 
 # ----------------------------------------------------------------------

@@ -126,6 +126,27 @@ def _weight_bcast(w, s):
     return w.reshape(w.shape + (1,) * (s.ndim - 1)).astype(s.dtype)
 
 
+def _wrap_step(local_step, state, transform, tparams, tkey, members):
+    """Per-client step with the uplink transform (§11) applied between
+    ``local_step`` and the reduce. Every client's ``apply`` receives the
+    SAME round key (``fold_in(key(seed), round)``) — identically on every
+    backend — and derives its own streams from it: value-level transforms
+    fold in the client index (split and source runs draw the same
+    per-client noise), pairwise masking folds in the sorted pair (both
+    endpoints of a pair must derive the SAME stream, which is exactly why
+    the driver must not pre-fold the client index here). With no
+    transform this is exactly the historical step (bit-identity
+    preserved)."""
+    if transform is None:
+        return lambda x, w, i: local_step(state, x, w, i)
+
+    def step(x, w, i):
+        payload = local_step(state, x, w, i)
+        return transform.apply(tkey, tparams, payload, i, members)
+
+    return step
+
+
 @jax.tree_util.register_pytree_node_class
 class SplitClients:
     """Resident padded clients: ``data (C, N, d)``, ``mask (C, N)``."""
@@ -162,12 +183,16 @@ class SplitClients:
     def population_clients(self) -> int:
         return self.num_clients
 
-    def reduce_clients(self, local_step, state, cohort=None, weights=None):
+    def reduce_clients(self, local_step, state, cohort=None, weights=None,
+                       transform=None, tparams=None, tkey=None):
+        """Vmap the per-client step over the (cohort) slab, apply the
+        uplink ``transform`` (if any) per client, and tree-sum."""
         c = self.data.shape[0]
+        members = jnp.arange(c) if cohort is None else cohort
+        step = _wrap_step(local_step, state, transform, tparams, tkey,
+                          members)
         if cohort is None:
-            idx = jnp.arange(c)
-            per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
-                self.data, self.mask, idx)
+            per = jax.vmap(step)(self.data, self.mask, members)
             if weights is not None:
                 per = jax.tree.map(
                     lambda s: s * _weight_bcast(weights, s), per)
@@ -176,7 +201,7 @@ class SplitClients:
         # the sampled clients. The indices are traced (no retrace when
         # membership changes) and m is static (one compiled shape for
         # all rounds).
-        per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+        per = jax.vmap(step)(
             jnp.take(self.data, cohort, axis=0),
             jnp.take(self.mask, cohort, axis=0), cohort)
         if weights is not None:
@@ -220,20 +245,27 @@ class SourceClients:
     def population_clients(self) -> int:
         return self.num_clients
 
-    def reduce_clients(self, local_step, state, cohort=None, weights=None):
+    def reduce_clients(self, local_step, state, cohort=None, weights=None,
+                       transform=None, tparams=None, tkey=None):
+        """Host-loop the per-client step over the (cohort) streams,
+        apply the uplink ``transform`` (if any) per client, and sum."""
         if cohort is None:
             members = range(len(self.sources))
+            members_arr = jnp.arange(len(self.sources))
         else:
             # ascending order (samplers sort), so the f32 summation
             # order matches the historical full-population loop
             members = [int(i) for i in np.asarray(cohort)]
+            members_arr = jnp.asarray(np.asarray(cohort))
+        step = _wrap_step(local_step, state, transform, tparams, tkey,
+                          members_arr)
         w = None if weights is None else np.asarray(weights)
         per = []
         for pos, i in enumerate(members):
             if w is not None and w[pos] == 0.0:
                 continue  # missed the deadline: the (possibly
                 #           out-of-core) E-step never runs
-            p = local_step(state, self.sources[i], None, i)
+            p = step(self.sources[i], None, i)
             if w is not None and w[pos] != 1.0:
                 p = jax.tree.map(
                     lambda s: s * jnp.asarray(w[pos], s.dtype), p)
@@ -282,14 +314,23 @@ class ShardedClients:
     def population_clients(self) -> int:
         return self.num_clients
 
-    def reduce_clients(self, local_step, state, cohort=None, weights=None):
+    def reduce_clients(self, local_step, state, cohort=None, weights=None,
+                       transform=None, tparams=None, tkey=None):
+        """Per-shard vmap of the per-client step (with the uplink
+        ``transform``, if any, applied per client — its key and traced
+        knobs ride the shard_map replicated), then ONE psum."""
         axis = self.axis
         c = self.data.shape[0]
+        # the transform key/params enter shard_fn as replicated operands
+        # (shard_map wants operands explicit, not closed over)
+        tk = jnp.zeros((), jnp.int32) if tkey is None else tkey
+        tp = () if tparams is None else tparams
 
         if cohort is None:
-            def shard_fn(state, idx_s, w_s, data_s, mask_s):
-                per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
-                    data_s, mask_s, idx_s)
+            def shard_fn(state, idx_s, w_s, data_s, mask_s, tk_r, tp_r):
+                step = _wrap_step(local_step, state, transform, tp_r,
+                                  tk_r, jnp.arange(c))
+                per = jax.vmap(step)(data_s, mask_s, idx_s)
                 if weights is not None:
                     per = jax.tree.map(
                         lambda s: s * _weight_bcast(w_s, s), per)
@@ -300,9 +341,10 @@ class ShardedClients:
             w = jnp.ones((c,)) if weights is None else weights
             fn = shard_map(shard_fn, mesh=self.mesh,
                            in_specs=(P(), P(axis), P(axis), P(axis),
-                                     P(axis)),
+                                     P(axis), P(), P()),
                            out_specs=P(), check_rep=False)
-            return fn(state, jnp.arange(c), w, self.data, self.mask)
+            return fn(state, jnp.arange(c), w, self.data, self.mask,
+                      tk, tp)
 
         # Cohort execution: the cohort (and its weights) are replicated;
         # each shard gathers the cohort members IT owns from its local
@@ -312,11 +354,14 @@ class ShardedClients:
         m = cohort.shape[0]
         per_shard = c // self.mesh.shape[axis]
 
-        def shard_fn(state, idx_s, cohort_r, w_r, data_s, mask_s):
+        def shard_fn(state, idx_s, cohort_r, w_r, data_s, mask_s, tk_r,
+                     tp_r):
             local = cohort_r - idx_s[0]
             owned = (local >= 0) & (local < per_shard)
             safe = jnp.clip(local, 0, per_shard - 1)
-            per = jax.vmap(lambda x, w, i: local_step(state, x, w, i))(
+            step = _wrap_step(local_step, state, transform, tp_r, tk_r,
+                              cohort_r)
+            per = jax.vmap(step)(
                 jnp.take(data_s, safe, axis=0),
                 jnp.take(mask_s, safe, axis=0), cohort_r)
             gate = owned.astype(w_r.dtype) * w_r
@@ -327,9 +372,11 @@ class ShardedClients:
 
         w = jnp.ones((m,)) if weights is None else weights
         fn = shard_map(shard_fn, mesh=self.mesh,
-                       in_specs=(P(), P(axis), P(), P(), P(axis), P(axis)),
+                       in_specs=(P(), P(axis), P(), P(), P(axis), P(axis),
+                                 P(), P()),
                        out_specs=P(), check_rep=False)
-        return fn(state, jnp.arange(c), cohort, w, self.data, self.mask)
+        return fn(state, jnp.arange(c), cohort, w, self.data, self.mask,
+                  tk, tp)
 
 
 def make_backend(clients, mesh=None, axis: str = "data"):
@@ -357,12 +404,19 @@ def make_backend(clients, mesh=None, axis: str = "data"):
 # The round driver
 # ----------------------------------------------------------------------
 
-def _round(strategy, state, backend, cohort=None, weights=None):
-    """One full round: client updates -> summed uplink -> server combine.
-    ``cohort``/``weights`` come from the driver's sampler and straggler
-    policy (None = full participation, everyone on time)."""
+def _round(strategy, state, backend, cohort=None, weights=None,
+           transform=None, tparams=None, rkey=None):
+    """One full round: client updates -> (transformed) uplink -> reduce
+    -> transform ``finish`` -> server combine. ``cohort``/``weights``
+    come from the driver's sampler and straggler policy (None = full
+    participation, everyone on time); ``transform``/``tparams``/``rkey``
+    from the driver's uplink-transform seam (§11; ``rkey`` is already
+    folded per round)."""
     total = backend.reduce_clients(strategy.local_step, state, cohort,
-                                   weights)
+                                   weights, transform=transform,
+                                   tparams=tparams, tkey=rkey)
+    if transform is not None:
+        total = transform.finish(total)
     return strategy.server_combine(state, total)
 
 
@@ -391,23 +445,27 @@ def _cohort_and_weights(sampler, stragglers, backend, skey, dkey, rnd):
 
 
 @partial(jax.jit, static_argnames=("strategy", "max_rounds", "sampler",
-                                   "stragglers"))
+                                   "stragglers", "transform"))
 def _iterate_jit(strategy, backend, state0, max_rounds: int,
-                 sampler=None, stragglers=None, skey=None, dkey=None):
+                 sampler=None, stragglers=None, transform=None,
+                 skey=None, dkey=None, tkey=None, tparams=None):
     """Resident-client round loop as ONE jitted ``lax.while_loop`` —
     bootstrap round, then iterate while ``keep_going``. Structurally the
     pre-§9 ``_dem_loop``: same state transitions, same cond arithmetic,
     so re-landed strategies reproduce their history bit for bit. The
-    strategy, sampler and straggler policy are static arguments (hashable
-    frozen dataclasses); numeric knobs that sweep (tol, reg_covar) ride
-    in ``state0`` as traced leaves and the sampler/straggler PRNG keys
-    (``skey``/``dkey``) are traced, so sweeping knobs or reseeding the
-    cohort draw does not recompile."""
+    strategy, sampler, straggler policy and uplink transform are static
+    arguments (hashable frozen dataclasses); numeric knobs that sweep
+    (tol, reg_covar, the transform's epsilon/delta) ride in ``state0`` /
+    ``tparams`` as traced leaves and the sampler/straggler/transform
+    PRNG keys (``skey``/``dkey``/``tkey``) are traced, so sweeping knobs
+    or reseeding does not recompile."""
 
     def one_round(state, rnd):
         cohort, weights = _cohort_and_weights(sampler, stragglers, backend,
                                               skey, dkey, rnd)
-        return _round(strategy, state, backend, cohort, weights)
+        rkey = None if transform is None else jax.random.fold_in(tkey, rnd)
+        return _round(strategy, state, backend, cohort, weights,
+                      transform, tparams, rkey)
 
     def cond(carry):
         state, it = carry
@@ -442,9 +500,33 @@ class _CohortView:
         return self._backend.dim
 
 
+_TRANSFORM_METHODS = ("apply", "finish", "traced", "wire_itemsize",
+                      "epsilon_per_round")
+
+
+def _validate_transform(transform):
+    """Duck-type + hashability check of a transform before it becomes a
+    static jit argument (an unhashable transform would raise deep inside
+    jit with a far worse message)."""
+    missing = [m for m in _TRANSFORM_METHODS
+               if not callable(getattr(transform, m, None))]
+    if missing:
+        raise TypeError(
+            f"transform {type(transform).__name__} is missing "
+            f"{missing}; see repro.fed.transforms.PayloadTransform")
+    try:
+        hash(transform)
+    except TypeError as e:
+        raise TypeError(
+            f"transform {type(transform).__name__} must be hashable "
+            f"(frozen dataclass) to ride the jitted round loop as a "
+            f"static argument") from e
+
+
 def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
                state0=None, max_rounds: int = 1, mesh=None,
-               axis: str = "data", sampler=None, stragglers=None):
+               axis: str = "data", sampler=None, stragglers=None,
+               transform=None):
     """Run a :class:`FederationStrategy` to convergence — THE round loop.
 
     Owns everything that used to be copy-pasted per algorithm: the client
@@ -465,10 +547,29 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
     (:class:`ArrivalStragglers`) drops the round's slowest arrivals to
     exact-zero contribution. Both are driver-owned and strategy-agnostic:
     any iterative strategy runs under them unchanged (one-shot strategies
-    reject them — there is no round structure to sample)."""
+    reject them — there is no round structure to sample).
+
+    ``transform`` (a ``repro.fed.transforms`` :class:`PayloadTransform`,
+    §11) is applied to every client's uplink between ``local_step`` and
+    the backend reduce — DP noise, stochastic quantization, secure-agg
+    masking, or a :class:`~repro.fed.transforms.Compose` of them. The
+    transform is a static argument; its seed and swept knobs (epsilon,
+    delta) enter as traced leaves, so re-seeding or re-budgeting never
+    recompiles. The ledger picks up the transform's uplink dtype and
+    cumulative ``epsilon_spent``."""
     backend = make_backend(clients, mesh, axis)
     one_shot = getattr(strategy, "one_shot", False)
-    skey = dkey = None
+    skey = dkey = tkey = tparams = None
+    if transform is not None:
+        _validate_transform(transform)
+        if one_shot and getattr(transform, "additive_only", False):
+            raise ValueError(
+                f"{type(transform).__name__} masks only cancel in an "
+                f"additive aggregate; a one-shot strategy's server reads "
+                f"each client payload individually, so the combination "
+                f"is meaningless")
+        tkey = jax.random.key(int(getattr(transform, "seed", 0)))
+        tparams = transform.traced()
     if sampler is not None:
         if one_shot:
             raise ValueError(
@@ -489,7 +590,12 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
         state0 = strategy.init_state(key, backend)
 
     if one_shot:
-        state = strategy.run_once(state0, backend)
+        if transform is not None:
+            state = strategy.run_once(state0, backend,
+                                      transform=transform,
+                                      tparams=tparams, tkey=tkey)
+        else:
+            state = strategy.run_once(state0, backend)
         rounds, n_rounds, converged = 1, jnp.asarray(1), True
     elif backend.host:
         def host_round(state, rnd):
@@ -497,7 +603,10 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
                 sampler, stragglers, backend, skey, dkey, rnd)
             if cohort is not None:
                 cohort = np.asarray(cohort)
-            return _round(strategy, state, backend, cohort, weights)
+            rkey = None if transform is None \
+                else jax.random.fold_in(tkey, rnd)
+            return _round(strategy, state, backend, cohort, weights,
+                          transform, tparams, rkey)
 
         state = host_round(state0, 0)
         it = 1
@@ -509,7 +618,8 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
     else:
         state, n_rounds = _iterate_jit(strategy, backend, state0,
                                        max_rounds, sampler, stragglers,
-                                       skey, dkey)
+                                       transform, skey, dkey, tkey,
+                                       tparams)
         rounds = int(n_rounds)
         converged = bool(strategy.converged(state))
 
@@ -523,5 +633,12 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
     ledger_backend = backend if sampler is None \
         else _CohortView(backend, sampler.cohort_size)
     payload = strategy.round_payload(ledger_backend, state)
+    if transform is not None:
+        # transform-aware ledger: the uplink direction carries the wire
+        # dtype the transform produced, and the accountant's per-round
+        # spend scales by the realized rounds into epsilon_spent
+        payload = payload._replace(
+            uplink_itemsize=transform.wire_itemsize(payload.itemsize),
+            epsilon_per_round=float(transform.epsilon_per_round()))
     comm = payload.totals(rounds)
     return strategy.finalize(state, n_rounds, converged, comm)

@@ -179,7 +179,7 @@ class FedEMStrategy(DEMStrategy):
 def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
               participation: float = 1.0, local_epochs: int = 1,
               cohort: str = "cyclic", cohort_seed: int = 0,
-              stragglers=None) -> FedEMResult:
+              stragglers=None, transform=None) -> FedEMResult:
     """Run FedEM — the cfg-core behind ``repro.api.FedEM``, dispatching on
     the client input type through the federation runtime. Init strategies
     and their resolution are DEM's (``config.init``).
@@ -216,7 +216,8 @@ def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
             f"cohort sampler must be 'cyclic' or 'uniform', got {cohort!r}")
     return run_rounds(strategy, clients, key=key,
                       max_rounds=config.resolve_max_iter("em"),
-                      sampler=sampler, stragglers=stragglers)
+                      sampler=sampler, stragglers=stragglers,
+                      transform=transform)
 
 
 # ----------------------------------------------------------------------
@@ -363,7 +364,7 @@ def _resolve_fedkmeans_init(init: str) -> str:
 
 
 def fed_kmeans_cfg(key: jax.Array, clients, config: FitConfig,
-                   k: int) -> FedKMeansResult:
+                   k: int, transform=None) -> FedKMeansResult:
     """Run iterative federated k-means — the cfg-core behind
     ``repro.api.FedKMeans``, dispatching on the client input type through
     the federation runtime."""
@@ -378,4 +379,5 @@ def fed_kmeans_cfg(key: jax.Array, clients, config: FitConfig,
         init=_resolve_fedkmeans_init(config.init), host=sources,
         tol=config.resolve_tol("kmeans"))
     return run_rounds(strategy, clients, key=key,
-                      max_rounds=config.resolve_max_iter("kmeans"))
+                      max_rounds=config.resolve_max_iter("kmeans"),
+                      transform=transform)

@@ -1,0 +1,570 @@
+"""Uplink payload transforms: DP noise, quantization and secure-agg
+masking as ONE seam on the federation runtime (DESIGN.md §11).
+
+Every federated algorithm in this repo ships a per-client *payload*
+pytree from ``local_step`` into a backend reduce (vmap tree-sum, source
+host loop, or shard_map psum).  A :class:`PayloadTransform` intercepts
+exactly that edge: the driver applies it to every client's uplink
+*between* ``local_step`` and the reduce, and applies the transform's
+``finish`` to the summed total *before* ``server_combine``.  DP noise,
+stochastic quantization and pairwise secure-aggregation masks are all
+instances of the same hook, so they compose (:class:`Compose`) and every
+strategy — DEM, FedEM, FedKMeans, one-shot FedGenGMM — gets them without
+writing a line of privacy code.
+
+Contract (the PR-7 sampler contract, restated for transforms):
+
+- transforms are **frozen hashable dataclasses** and ride the jitted
+  round loop as *static* arguments;
+- the PRNG ``seed`` and every numeric knob that sweeps (epsilon, delta,
+  min_count, rounds) are ``compare=False`` fields: two instances that
+  differ only in those fields are equal/hash-equal, so swapping them
+  adds **no jit cache entry**.  The seed enters the computation as a
+  traced PRNG key and the numeric knobs enter via ``traced()`` — a small
+  pytree of scalars the driver passes through jit as traced leaves;
+- ``apply`` must be traceable (it runs under vmap / shard_map for
+  resident clients) and is called once per client per round with the
+  round's SHARED key ``fold_in(key(seed), round)`` — the same on every
+  backend and for every client.  Each transform derives its own streams
+  from it: value-level transforms (DP noise, quantization) fold in the
+  client index, so split and source runs draw the same per-client
+  noise; pairwise masking folds in the *sorted pair* ``(lo, hi)``, so
+  both endpoints of a pair derive the SAME stream and their masks
+  cancel — the reason the driver hands over the shared key rather than
+  a pre-folded per-client one.
+
+This module is deliberately repro-free (jax + stdlib only, like
+``cohort.py``/``ledger.py``): it sits below the runtime, which sits
+below ``repro.core``, so payload families (GMM parameter blocks, EM
+``SufficientStats``) are recognized structurally (duck-typed) rather
+than by importing their classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+# Post-noise projection constants of the analytic Gaussian release
+# (migrated from repro.core.privacy): weights floor before simplex
+# re-normalization; variance window for features normalized to [0,1]^d
+# (coordinate-wise variance of [0,1] data is at most 1/4).
+WEIGHT_FLOOR = 1e-4
+VAR_MIN = 1e-5
+VAR_MAX = 0.25
+
+
+@runtime_checkable
+class PayloadTransform(Protocol):
+    """The uplink-transform contract (duck-typed; frozen hashable
+    dataclasses are the idiom — a transform rides jit as a static arg).
+
+    - ``traced() -> pytree`` — the sweepable numeric knobs as a small
+      pytree of scalars.  The driver passes it through jit as traced
+      leaves, so changing epsilon/delta/... never retraces (the fields
+      themselves are ``compare=False`` and MUST NOT be read inside
+      ``apply`` — only ``params`` may be).
+    - ``apply(key, params, payload, idx, members) -> wire`` — transform
+      ONE client's uplink payload; traceable.  ``key`` is the round's
+      SHARED key (derive per-client streams via ``fold_in(key, idx)``,
+      pair streams via the sorted pair).  ``idx`` is the client's
+      global index, ``members`` the (m,) array of this round's
+      participating client indices (the full population when no sampler
+      is installed) — what pairwise masking needs to pair against.
+    - ``finish(total) -> payload`` — server-side inverse applied to the
+      reduced total before ``server_combine`` (drop mask channels,
+      identity for value-level transforms).
+    - ``wire_itemsize(itemsize) -> int`` — bytes per uplink element
+      after the transform (int8 quantization -> 1); feeds the ledger's
+      asymmetric ``uplink_itemsize``.
+    - ``epsilon_per_round() -> float`` — privacy budget spent per round
+      (0 for non-DP transforms); the driver multiplies by the realized
+      round count into ``CommStats.epsilon_spent``.
+    """
+
+    def traced(self) -> Any:
+        """Sweepable numeric knobs as a pytree of scalars (traced by jit)."""
+        ...
+
+    def apply(self, key, params, payload, idx, members):
+        """Transform ONE client's uplink payload (traceable)."""
+        ...
+
+    def finish(self, total):
+        """Server-side inverse on the reduced total (before combine)."""
+        ...
+
+    def wire_itemsize(self, itemsize: int) -> int:
+        """Bytes per uplink element after the transform (ledger feed)."""
+        ...
+
+    def epsilon_per_round(self) -> float:
+        """Privacy budget one round spends (0 for non-DP transforms)."""
+        ...
+
+
+# ----------------------------------------------------------------------
+# Payload-family detection (structural: this module imports no repro.core)
+# ----------------------------------------------------------------------
+
+def _is_gmm(p) -> bool:
+    return hasattr(p, "weights") and hasattr(p, "means") and hasattr(p,
+                                                                     "covs")
+
+
+def _is_gmm_release(p) -> bool:
+    """FedGenGMM's one-shot uplink: a ``(gmm, n_samples)`` pair."""
+    return isinstance(p, tuple) and len(p) == 2 and _is_gmm(p[0])
+
+
+def _is_stats(p) -> bool:
+    """EM ``SufficientStats``-shaped payload (DEM / FedEM uplink)."""
+    return all(hasattr(p, f) for f in ("s0", "s1", "s2"))
+
+
+def _require_diagonal(covs, what: str):
+    if covs.ndim != 2:
+        raise ValueError(
+            f"GaussianDP supports diagonal covariance; got a 'full' "
+            f"covariance {what} (covs.ndim={covs.ndim})")
+
+
+# ----------------------------------------------------------------------
+# Projection helpers (shared with core/privacy.py, property-tested)
+# ----------------------------------------------------------------------
+
+def project_simplex(w, floor: float = WEIGHT_FLOOR):
+    """Re-project noised mixture weights to the simplex: floor at
+    ``floor`` (every component keeps positive mass) and renormalize."""
+    w = jnp.maximum(w, floor)
+    return w / jnp.sum(w)
+
+
+def clip_variances(var, lo: float = VAR_MIN, hi: float = VAR_MAX):
+    """Clip noised diagonal variances into the feasible window for
+    features normalized to [0,1]^d (variance of [0,1] data <= 1/4)."""
+    return jnp.clip(var, lo, hi)
+
+
+def gaussian_sigma(sensitivity, epsilon, delta):
+    """Analytic Gaussian mechanism calibration (traced arithmetic):
+    ``sigma = sqrt(2 ln(1.25/delta)) * sensitivity / epsilon``."""
+    return jnp.sqrt(2.0 * jnp.log(1.25 / delta)) * sensitivity / epsilon
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    """The no-op transform: the wire payload IS the local payload.
+
+    Exists so pipelines can be configured uniformly (``transform=
+    Identity()`` vs ``transform=None``) and as the bit-identity anchor:
+    a run under ``Identity`` is ``assert_array_equal`` to a run with no
+    transform installed (pinned in tests/test_fed_transforms.py)."""
+
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    def traced(self):
+        """No sweepable knobs: an empty pytree."""
+        return ()
+
+    def apply(self, key, params, payload, idx, members):
+        """Return the payload unchanged."""
+        return payload
+
+    def finish(self, total):
+        """Return the reduced total unchanged."""
+        return total
+
+    def wire_itemsize(self, itemsize: int) -> int:
+        """The payload dtype is untouched."""
+        return itemsize
+
+    def epsilon_per_round(self) -> float:
+        """No privacy budget is spent."""
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianDP:
+    """Per-client analytic Gaussian mechanism on the uplink, with a
+    per-round epsilon accountant.
+
+    The mechanism is the one ``repro.core.privacy`` introduced for the
+    one-shot FedGenGMM release (paper §4.4's future work), absorbed into
+    the transform seam so it now composes with EVERY strategy:
+
+    - a ``(gmm, n_samples)`` payload (FedGenGMM's one-shot uplink) gets
+      the three-way split parameter release: noised weights re-projected
+      to the simplex, noised means clipped to [0,1], noised variances
+      clipped to [``VAR_MIN``, ``VAR_MAX``] — features are assumed
+      normalized to [0,1]^d (paper §5.1) so sensitivities are closed
+      forms;
+    - a ``SufficientStats`` payload (DEM / FedEM uplink) gets the same
+      three-way split across the s0 / s1 / s2 releases with replace-one
+      sensitivities sqrt(2), sqrt(2d), sqrt(2d) (responsibilities on the
+      simplex, coordinates and their squares in [0,1]).  ``loglik`` and
+      ``wsum`` are convergence telemetry, not model payload, and ride
+      un-noised — a deployment would drop them from the wire entirely;
+    - anything else (e.g. FedKMeans label statistics) raises TypeError —
+      add a branch before relying on it.
+
+    **Accountant**: the instance carries the TOTAL budget ``(epsilon,
+    delta)`` and the round budget ``rounds`` it is split over (simple
+    composition: each round spends ``epsilon/rounds, delta/rounds``).
+    One-shot FedGen uses ``rounds=1`` — the whole budget in one release —
+    while iterative strategies deplete it across their round budget; the
+    driver multiplies :meth:`epsilon_per_round` by the realized round
+    count into ``CommStats.epsilon_spent``, so an over-budget run is
+    visible in the ledger rather than silent.
+
+    Every numeric field is ``compare=False``: epsilon/delta/... enter
+    the jitted loop via :meth:`traced`, so sweeping the budget never
+    retraces (pinned in tests/test_compile_counts.py)."""
+
+    epsilon: float = dataclasses.field(default=1.0, compare=False)
+    delta: float = dataclasses.field(default=1e-5, compare=False)
+    rounds: int = dataclasses.field(default=1, compare=False)
+    min_count: float = dataclasses.field(default=8.0, compare=False)
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    def __post_init__(self):
+        if not float(self.epsilon) > 0.0:
+            raise ValueError(f"epsilon must be > 0, got {self.epsilon}")
+        if not 0.0 < float(self.delta) < 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if int(self.rounds) < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if not float(self.min_count) > 0.0:
+            raise ValueError(
+                f"min_count must be > 0, got {self.min_count}")
+
+    def traced(self):
+        """Per-round budget as traced scalars: ``(eps_round, delta_round,
+        min_count)`` — the compare=False fields never reach the graph
+        directly."""
+        r = float(self.rounds)
+        return (float(self.epsilon) / r, float(self.delta) / r,
+                float(self.min_count))
+
+    def epsilon_per_round(self) -> float:
+        """Budget spent per realized round: ``epsilon / rounds``."""
+        return float(self.epsilon) / float(self.rounds)
+
+    def wire_itemsize(self, itemsize: int) -> int:
+        """Noise does not change the payload dtype."""
+        return itemsize
+
+    def finish(self, total):
+        """Value-level transform: the summed total needs no decoding."""
+        return total
+
+    def apply(self, key, params, payload, idx, members):
+        """Release an (eps_round, delta_round)-DP view of one client's
+        payload (dispatch on the payload family; see class docstring).
+        ``key`` is the shared round key; this client's draws come from
+        ``fold_in(key, idx)``, identically on every backend."""
+        key = jax.random.fold_in(key, idx)
+        eps_r, delta_r, min_count = params
+        if _is_gmm_release(payload):
+            gmm, n = payload
+            return self._release_gmm(key, gmm, n, eps_r, delta_r,
+                                     min_count), payload[1]
+        if _is_stats(payload):
+            return self._release_stats(key, payload, eps_r, delta_r)
+        raise TypeError(
+            f"GaussianDP knows GMM parameter payloads ((gmm, n_samples) "
+            f"pairs) and EM SufficientStats; got "
+            f"{type(payload).__name__}")
+
+    def _release_gmm(self, key, gmm, n, eps_r, delta_r, min_count):
+        _require_diagonal(gmm.covs, "parameter release")
+        k, d = gmm.means.shape
+        dtype = gmm.means.dtype
+        eps_each = eps_r / 3.0
+        kw, km, kv = jax.random.split(key, 3)
+        n = jnp.asarray(n, dtype)
+        counts = jnp.maximum(gmm.weights * n, min_count)
+
+        sig_w = gaussian_sigma(jnp.sqrt(2.0) / jnp.maximum(n, 1.0),
+                               eps_each, delta_r)
+        w = gmm.weights + jnp.asarray(sig_w, dtype) * \
+            jax.random.normal(kw, (k,), dtype)
+        w = project_simplex(w)
+
+        sig_m = gaussian_sigma(jnp.sqrt(float(d)), eps_each, delta_r)
+        mu = gmm.means + jnp.asarray(sig_m / counts[:, None], dtype) * \
+            jax.random.normal(km, (k, d), dtype)
+        mu = jnp.clip(mu, 0.0, 1.0)
+
+        sig_v = gaussian_sigma(jnp.sqrt(float(d)) / 4.0, eps_each, delta_r)
+        var = gmm.covs + jnp.asarray(sig_v / counts[:, None], dtype) * \
+            jax.random.normal(kv, (k, d), dtype)
+        var = clip_variances(var)
+        return type(gmm)(w, mu, var)
+
+    def _release_stats(self, key, stats, eps_r, delta_r):
+        _require_diagonal(stats.s2, "statistics release")
+        d = stats.s1.shape[-1]
+        dtype = stats.s1.dtype
+        eps_each = eps_r / 3.0
+        k0, k1, k2 = jax.random.split(key, 3)
+
+        sig0 = gaussian_sigma(jnp.sqrt(2.0), eps_each, delta_r)
+        s0 = stats.s0 + jnp.asarray(sig0, dtype) * \
+            jax.random.normal(k0, stats.s0.shape, dtype)
+        s0 = jnp.maximum(s0, 0.0)
+
+        sig1 = gaussian_sigma(jnp.sqrt(2.0 * d), eps_each, delta_r)
+        s1 = stats.s1 + jnp.asarray(sig1, dtype) * \
+            jax.random.normal(k1, stats.s1.shape, dtype)
+
+        sig2 = gaussian_sigma(jnp.sqrt(2.0 * d), eps_each, delta_r)
+        s2 = stats.s2 + jnp.asarray(sig2, dtype) * \
+            jax.random.normal(k2, stats.s2.shape, dtype)
+        s2 = jnp.maximum(s2, 0.0)
+        return stats._replace(s0=s0, s1=s1, s2=s2)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuantize:
+    """Seeded stochastic rounding of every float leaf to an int8/int16
+    grid (simulated compression: the wire carries ``bits``-bit integers
+    plus one scale scalar per leaf; the simulator ships the dequantized
+    values so the reduce stays a plain float sum).
+
+    Per leaf the grid is symmetric around zero with dynamic range
+    ``max|leaf|``: ``q = floor(x/scale + u)`` with ``u ~ U[0,1)`` —
+    unbiased (``E[q*scale] = x``) and seeded, so a re-run with the same
+    transform seed reproduces the same grid draws bit for bit.
+    ``wire_itemsize`` reports the honest uplink bytes (1 for int8, 2 for
+    int16); the per-leaf scale scalars ride the payload header and are
+    not counted.  ``bits`` is a *structural* field (it changes the grid
+    constants), so unlike the seed it participates in equality/hash."""
+
+    bits: int = 8
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    def __post_init__(self):
+        if self.bits not in (8, 16):
+            raise ValueError(
+                f"bits must be 8 or 16 (int8/int16 wire), got {self.bits}")
+
+    def traced(self):
+        """No sweepable knobs: an empty pytree."""
+        return ()
+
+    def epsilon_per_round(self) -> float:
+        """Quantization spends no privacy budget."""
+        return 0.0
+
+    def wire_itemsize(self, itemsize: int) -> int:
+        """The wire carries ``bits``-bit integers: 1 or 2 bytes/elem."""
+        return self.bits // 8
+
+    def finish(self, total):
+        """Dequantization already happened per client; the float sum is
+        the decoded aggregate."""
+        return total
+
+    def apply(self, key, params, payload, idx, members):
+        """Snap every float leaf of one client's payload to its seeded
+        stochastic-rounding grid (non-float leaves pass through).
+        ``key`` is the shared round key; this client's grid draws come
+        from ``fold_in(key, idx)``."""
+        key = jax.random.fold_in(key, idx)
+        qmax = float(2 ** (self.bits - 1) - 1)
+        leaves, treedef = jax.tree.flatten(payload)
+        out = []
+        for t, leaf in enumerate(leaves):
+            if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+                out.append(leaf)
+                continue
+            leaf = jnp.asarray(leaf)
+            lk = jax.random.fold_in(key, t)
+            scale = jnp.max(jnp.abs(leaf)) / qmax
+            safe = jnp.where(scale > 0.0, scale, 1.0)
+            u = jax.random.uniform(lk, leaf.shape, leaf.dtype)
+            q = jnp.clip(jnp.floor(leaf / safe + u), -qmax - 1.0, qmax)
+            out.append(jnp.where(scale > 0.0, q * safe, leaf))
+        return treedef.unflatten(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairwiseMask:
+    """Pairwise zero-sum secure-aggregation masks (Bonawitz et al.-style,
+    simulated).
+
+    Every *ordered* pair of participating clients ``(i, j)`` with
+    ``i < j`` shares a PRG stream seeded from the canonical pair key
+    ``fold_in(fold_in(key, i), j)``; client ``i`` adds the stream's
+    draws and client ``j`` subtracts the SAME draws, so the pair's
+    contributions cancel in the server sum.  Exact cancellation is only
+    possible in modular integer arithmetic (float addition rounds, so
+    ``(a+x) + (b-x) != a+b`` bitwise) — which is why real secure
+    aggregation quantizes to a fixed-point lattice and sums mod 2^32,
+    and why this simulation does the same: the wire channel carries
+    ``round(x * 2^fp_bits) + mask_i  (mod 2^32)`` per leaf as int32, and
+    the backend reduce's int32 wraparound sum (associative, order-free)
+    returns EXACTLY the summed fixed-point payload — the masks cancel
+    bit for bit THROUGH the real vmap/host/psum reduce paths (pinned in
+    tests/test_fed_transforms.py against an unmasked quantized sum).
+
+    The float payload rides alongside as the simulator's numeric ground
+    truth — ``finish`` hands exactly it to ``server_combine``, which is
+    what makes a masked run ``assert_array_equal`` to an unmasked run
+    (the bit-identity contract) while the modular channel demonstrates
+    the protocol.  ``wire_itemsize`` stays the payload's own (the wire
+    ships one int32 lattice element per payload element).
+
+    Caveats (documented limits of the simulation, DESIGN.md §11): masks
+    pair within the round's ``members``, so a straggler DROP after mask
+    agreement leaves its partners' masks uncancelled (real deployments
+    recover via secret sharing — out of scope); values outside the
+    ``2^31 / 2^fp_bits`` lattice range saturate; and the uplink is only
+    meaningfully protected when the server needs nothing but the SUM —
+    one-shot FedGen reads each parameter block individually, so the
+    runtime rejects the combination (``additive_only``)."""
+
+    fp_bits: int = 16
+    seed: int = dataclasses.field(default=0, compare=False)
+
+    # masking is only meaningful for additive aggregation; the one-shot
+    # driver refuses to install this transform (see FedGenStrategy)
+    additive_only = True
+
+    def __post_init__(self):
+        if not 0 <= int(self.fp_bits) <= 30:
+            raise ValueError(
+                f"fp_bits must be in [0, 30], got {self.fp_bits}")
+
+    def traced(self):
+        """No sweepable knobs: an empty pytree."""
+        return ()
+
+    def epsilon_per_round(self) -> float:
+        """Masking spends no privacy budget."""
+        return 0.0
+
+    def wire_itemsize(self, itemsize: int) -> int:
+        """One int32 lattice element replaces each payload element."""
+        return 4
+
+    def mask(self, key, payload, idx, members):
+        """Client ``idx``'s additive mask: a payload-shaped int32 pytree
+        ``sum_j sign(idx, j) * PRG(pair(idx, j))`` over ``members``
+        (mod 2^32).  Summed over all members the masks are EXACTLY zero
+        — integer wraparound addition is associative, so the reduction
+        order cannot matter."""
+        leaves, treedef = jax.tree.flatten(payload)
+        idx = jnp.asarray(idx)
+        members = jnp.asarray(members)
+        out = [self._mask_leaf(key, jnp.asarray(leaf), idx, members, t)
+               for t, leaf in enumerate(leaves)]
+        return treedef.unflatten(out)
+
+    def _mask_leaf(self, key, leaf, idx, members, t):
+        def one_pair(j):
+            lo = jnp.minimum(idx, j)
+            hi = jnp.maximum(idx, j)
+            pk = jax.random.fold_in(
+                jax.random.fold_in(jax.random.fold_in(key, lo), hi), t)
+            draw = jax.lax.bitcast_convert_type(
+                jax.random.bits(pk, leaf.shape, jnp.uint32), jnp.int32)
+            sign = jnp.where(idx == j, 0,
+                             jnp.where(idx < j, 1, -1)).astype(jnp.int32)
+            return sign * draw
+
+        return jnp.sum(jax.vmap(one_pair)(members), axis=0,
+                       dtype=jnp.int32)
+
+    def _lattice(self, leaf):
+        """Fixed-point int32 view of a float leaf (saturating at the
+        int32 range; non-float leaves are taken as integers)."""
+        leaf = jnp.asarray(leaf)
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf.astype(jnp.int32)
+        scaled = jnp.round(leaf * float(2 ** self.fp_bits))
+        lo, hi = float(-2**31), float(2**31 - 1)
+        return jnp.clip(scaled, lo, hi).astype(jnp.int32)
+
+    def apply(self, key, params, payload, idx, members):
+        """Wrap one client's payload with its masked modular channel:
+        ``{"payload": floats, "secagg": lattice(payload) + mask}``."""
+        masks = self.mask(key, payload, idx, members)
+        chan = jax.tree.map(
+            lambda leaf, m: self._lattice(leaf) + m, payload, masks)
+        return {"payload": payload, "secagg": chan}
+
+    def finish(self, total):
+        """Strip the (exactly cancelled) modular channel from the summed
+        total and hand the float aggregate to ``server_combine``."""
+        return total["payload"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose:
+    """Apply transforms left to right on the uplink and undo their
+    encodings right to left on the reduced total — e.g.
+    ``Compose((GaussianDP(...), StochasticQuantize(8), PairwiseMask()))``
+    is the realistic deployment: noise, then compress, then mask.
+
+    Stage ``t`` draws from ``fold_in(key, t)`` of the pipeline key; the
+    pipeline key is seeded from a deterministic combination of the member
+    seeds (:attr:`seed`), so re-seeding ANY member re-seeds the pipeline
+    without retracing.  ``wire_itemsize`` folds through the stages (the
+    last dtype-changing stage wins) and the per-round epsilon spends
+    add."""
+
+    transforms: tuple = ()
+
+    def __post_init__(self):
+        for t in self.transforms:
+            if not callable(getattr(t, "apply", None)):
+                raise TypeError(
+                    f"Compose members must be PayloadTransforms, got "
+                    f"{type(t).__name__}")
+
+    @property
+    def seed(self) -> int:
+        """Deterministic combination of the member seeds (ints hash
+        stably), so the driver's ``key(transform.seed)`` derivation
+        works unchanged."""
+        return hash(tuple(int(getattr(t, "seed", 0))
+                          for t in self.transforms)) & 0x7FFFFFFF
+
+    @property
+    def additive_only(self) -> bool:
+        """True when any member only makes sense under an additive
+        (summed) aggregate — e.g. :class:`PairwiseMask`."""
+        return any(getattr(t, "additive_only", False)
+                   for t in self.transforms)
+
+    def traced(self):
+        """Tuple of the members' traced knobs, in pipeline order."""
+        return tuple(t.traced() for t in self.transforms)
+
+    def epsilon_per_round(self) -> float:
+        """Per-round budget spends add across the stages."""
+        return sum(t.epsilon_per_round() for t in self.transforms)
+
+    def wire_itemsize(self, itemsize: int) -> int:
+        """Fold the per-stage dtype changes; the last change wins."""
+        for t in self.transforms:
+            itemsize = t.wire_itemsize(itemsize)
+        return itemsize
+
+    def apply(self, key, params, payload, idx, members):
+        """Chain the member ``apply``s left to right, stage ``t`` keyed
+        by ``fold_in(key, t)``."""
+        for t, (tr, pr) in enumerate(zip(self.transforms, params)):
+            payload = tr.apply(jax.random.fold_in(key, t), pr, payload,
+                               idx, members)
+        return payload
+
+    def finish(self, total):
+        """Undo the member encodings right to left."""
+        for tr in reversed(self.transforms):
+            total = tr.finish(total)
+        return total

@@ -17,6 +17,7 @@ from repro.api import (DEM, FedEM, FedGenGMM, FedKMeans, FitConfig,
 # The one public surface (DESIGN.md §8/§9). Sorted to make diffs readable.
 EXPECTED_EXPORTS = sorted([
     "FitConfig",
+    "DPConfig",
     "GMMEstimator",
     "KMeansEstimator",
     "FedGenGMM",

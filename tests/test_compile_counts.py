@@ -191,3 +191,60 @@ class TestFederatedCompileCounts:
             FedEM(2, stragglers=ArrivalStragglers(0.25, seed=seed),
                   **kw).run(split, key=jax.random.key(0))
         assert rt._iterate_jit._cache_size() == baseline
+
+    def test_transform_budget_sweep_never_retraces(self):
+        # the §11 contract: epsilon/delta/rounds/seed are compare=False
+        # and enter the graph as traced leaves, so a budget sweep holds
+        # ONE cache entry — the whole point of the static/traced split
+        from repro.api import DEM
+        from repro.fed import GaussianDP
+        import repro.fed.runtime as rt
+        split = self._split()
+        kw = dict(init="separated", max_iter=6)
+        DEM(2, transform=GaussianDP(epsilon=1.0, seed=0), **kw).run(
+            split, key=jax.random.key(0))
+        baseline = rt._iterate_jit._cache_size()
+        for eps, rounds, seed in ((0.5, 1, 1), (2.0, 6, 2), (8.0, 3, 3)):
+            DEM(2, transform=GaussianDP(epsilon=eps, rounds=rounds,
+                                        seed=seed), **kw).run(
+                split, key=jax.random.key(0))
+        assert rt._iterate_jit._cache_size() == baseline
+
+    def test_quantize_and_mask_reseed_never_retrace(self):
+        from repro.api import DEM
+        from repro.fed import PairwiseMask, StochasticQuantize
+        import repro.fed.runtime as rt
+        split = self._split()
+        kw = dict(init="separated", max_iter=6)
+        for make in (lambda s: StochasticQuantize(bits=8, seed=s),
+                     lambda s: PairwiseMask(seed=s)):
+            DEM(2, transform=make(0), **kw).run(split,
+                                                key=jax.random.key(0))
+            baseline = rt._iterate_jit._cache_size()
+            for seed in (1, 2):
+                DEM(2, transform=make(seed), **kw).run(
+                    split, key=jax.random.key(0))
+            assert rt._iterate_jit._cache_size() == baseline
+
+    def test_installing_a_transform_adds_at_most_one_entry(self):
+        # None -> Identity is a legitimate retrace (different static
+        # arg); swapping between transform FAMILIES is too — but each
+        # family holds exactly one entry
+        from repro.api import DEM
+        from repro.fed import GaussianDP, Identity
+        import repro.fed.runtime as rt
+        split = self._split()
+        kw = dict(init="separated", max_iter=6)
+        DEM(2, **kw).run(split, key=jax.random.key(0))
+        n0 = rt._iterate_jit._cache_size()
+        DEM(2, transform=Identity(), **kw).run(split,
+                                               key=jax.random.key(0))
+        n1 = rt._iterate_jit._cache_size()
+        assert n1 <= n0 + 1
+        DEM(2, transform=GaussianDP(), **kw).run(split,
+                                                 key=jax.random.key(0))
+        n2 = rt._iterate_jit._cache_size()
+        assert n2 <= n1 + 1
+        DEM(2, transform=GaussianDP(epsilon=5.0), **kw).run(
+            split, key=jax.random.key(0))
+        assert rt._iterate_jit._cache_size() == n2

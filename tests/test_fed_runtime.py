@@ -409,6 +409,23 @@ class TestCommLedger:
         assert p2.totals(3) == CommStats(3, 37, 21, 8)
         assert p2.totals(5) == CommStats(5, 57, 29, 8)
 
+    def test_asymmetric_uplink_downlink_itemsizes(self):
+        # int8-quantized uplink under a float32 broadcast: per-direction
+        # overrides keep the byte accounting honest without touching the
+        # float counts (the unit Table 4 compares)
+        s = CommStats(rounds=2, uplink_floats=1000, downlink_floats=500,
+                      itemsize=4, uplink_itemsize=1)
+        assert s.uplink_bytes == 1000 * 1
+        assert s.downlink_bytes == 500 * 4  # None -> inherit itemsize
+        assert s.payload_bytes == 1000 + 2000
+        p = RoundPayload(uplink_floats=10, downlink_floats=4,
+                         uplink_itemsize=1, epsilon_per_round=0.5)
+        t = p.totals(4)
+        assert t.uplink_bytes == 40 * 1 and t.downlink_bytes == 16 * 4
+        assert t.epsilon_spent == 2.0
+        # pre-transform constructors keep their meaning (defaults None/0)
+        assert CommStats(3, 30, 12, 8) == RoundPayload(10, 4, 8).totals(3)
+
     def test_run_ledgers_carry_f32_itemsize(self, split):
         dr = DEM(2, init="separated", max_iter=10).run(
             split, key=jax.random.key(0))

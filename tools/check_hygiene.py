@@ -48,6 +48,11 @@ FORBIDDEN_PREFIX = "repro.api"
 # Packages whose public names must all carry docstrings (the user-facing
 # doc surface), and the source root for resolving their re-exports.
 DOC_PACKAGES = ("src/repro/api", "src/repro/serve")
+# Single modules below the facade that are nonetheless user-facing doc
+# surface (their classes are constructed directly by users): the uplink
+# transforms ride `fit_federated(transform=...)` and every public name
+# there must be documented too.
+DOC_MODULES = ("src/repro/fed/transforms.py",)
 SRC_ROOT = "src"
 
 
@@ -144,6 +149,12 @@ def docstring_violations(repo_root: Path) -> list[str]:
     ``__init__.__all__`` re-exports."""
     bad = []
     seen_files = set()
+    for mod in DOC_MODULES:
+        path = repo_root / mod
+        seen_files.add(path)
+        tree = ast.parse(path.read_text(), filename=str(path))
+        bad.extend(_undocumented_defs(tree,
+                                      str(path.relative_to(repo_root))))
     for pkg in DOC_PACKAGES:
         for path in sorted((repo_root / pkg).rglob("*.py")):
             seen_files.add(path)
