@@ -45,6 +45,29 @@ point, plus the no-DP baseline utilities; full mode FAILS (RuntimeError)
 if FedGen's one-shot utility at eps=1 regresses below the committed
 floor.
 
+Full and dry modes also stage the **async benchmark** (DESIGN.md §12,
+"async federation"): wall-clock-to-target-loglik of the synchronous
+regime (``run_async`` at ``buffer_size = cohort_size, lookahead = 0`` —
+bit-identical to ``run_rounds``) against buffered staleness-weighted
+rounds (small buffer, deep lookahead, polynomial damping) on a
+1k-client Dirichlet population with heterogeneous per-client sizes.
+Both arms start from one shared model, run for real (the quality
+trajectory is the actual per-combine model, scored on the training
+union), and are placed on a **simulated federation clock**: one host
+time-shares all 1000 clients, so host wall-clock measures the
+simulator, not the federation — instead each client's update takes
+``local_rows / CLIENT_ROWS_PER_SEC`` of federation time (latency
+proportional to its data — the heterogeneous-sizes straggler model),
+clients run concurrently, the server is instantaneous, and a combine
+completes when ``buffer_size`` updates have ARRIVED. The same clock
+covers both arms: at ``buffer = cohort, lookahead = 0`` it degenerates
+to the synchronous barrier (each round gated by the slowest cohort
+member), which is exactly the tax the async runtime removes. The
+``async`` section records each arm's trajectory summary and the
+speedup to the common target (start + 90% of the sync arm's
+improvement). Full mode FAILS (RuntimeError) if the buffered arm is not
+at least 2x faster to target — the tentpole claim, guarded.
+
 Quick (CI) mode scales down and prints rows only; ``--dry-run`` shrinks
 to tiny N / capped rounds and *validates the report schema* instead of
 recording timings — that is what the CI bench-smoke lane runs.
@@ -53,6 +76,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import heapq
 import json
 import time
 from pathlib import Path
@@ -64,9 +88,10 @@ import numpy as np
 from repro.api import (DEM, DPConfig, FedEM, FedGenGMM, FedKMeans,
                        FitConfig, score)
 from repro.fed import GaussianDP
+from repro.core.dem import DEMStrategy
 from repro.core.em import SufficientStats, e_step_stats, m_step
 from repro.core.partition import partition
-from repro.fed import CyclicSampler, run_rounds
+from repro.fed import CyclicSampler, run_async, run_rounds
 from repro.fed.strategies import FedEMStrategy
 
 N_FULL, N_QUICK, N_DRY = 20_000, 4_000, 512
@@ -95,6 +120,29 @@ PRIV_STRATEGIES = ("fedgen", "dem", "fedem")
 # setting (avg loglik on the training union; measured 3.03 on the CPU
 # backend — regenerate deliberately when the mechanism changes)
 FEDGEN_EPS1_FLOOR = 2.5
+
+# async benchmark: sync regime (buffer = cohort, zero lookahead) vs
+# buffered staleness-weighted rounds on one 1k-client population.
+# cohort % buffer == 0 keeps every buffered combine a single-group
+# reduce (updates from one dispatch batch), so the async arm's combines
+# are genuinely ~buffer/cohort of the sync arm's per-combine client work.
+# The deep lookahead (in-flight window = buffer + lookahead = 256) is
+# the async design point: concurrency decoupled from combine size,
+# where the barrier pins sync concurrency to its cohort. Sync
+# time-to-target is approximately cohort-invariant (a bigger cohort
+# buys proportionally fewer rounds but each round's barrier waits on a
+# worse straggler), so the 64-cohort baseline is not a strawman.
+ASYNC_FULL = dict(clients=1_000, n=50_000, cohort=64, sync_rounds=40,
+                  buffer=16, lookahead=240, alpha=0.5, async_rounds=400)
+ASYNC_DRY = dict(clients=24, n=720, cohort=8, sync_rounds=3, buffer=4,
+                 lookahead=8, alpha=0.5, async_rounds=8)
+ASYNC_MIN_SPEEDUP = 2.0
+ASYNC_TARGET_FRACTION = 0.9
+# federation-clock latency model: a client's local step takes
+# local_rows / CLIENT_ROWS_PER_SEC seconds of federation time. The
+# absolute rate only fixes the unit — every reported speedup is a
+# ratio of clocks built from the same rate.
+CLIENT_ROWS_PER_SEC = 2_000.0
 
 
 def validate_report(report: dict) -> None:
@@ -136,6 +184,8 @@ def validate_report(report: dict) -> None:
         _validate_population(report["population"], problems)
     if "privacy" in report:
         _validate_privacy(report["privacy"], problems)
+    if "async" in report:
+        _validate_async(report["async"], problems)
     if problems:
         raise ValueError("BENCH_comm.json schema violations:\n  "
                          + "\n  ".join(problems))
@@ -222,6 +272,59 @@ def _validate_privacy(section: dict, problems: list[str]) -> None:
     for field in ("guard_floor", "guard_value"):
         if not isinstance(section.get(field), (int, float)):
             problems.append(f"privacy.{field} must be a number")
+
+
+def _validate_async(section: dict, problems: list[str]) -> None:
+    for field in ("clients", "n", "cohort_size", "buffer_size"):
+        v = section.get(field)
+        if not isinstance(v, int) or v < 1:
+            problems.append(f"async.{field} must be a positive int, "
+                            f"got {v!r}")
+    la = section.get("lookahead")
+    if not isinstance(la, int) or la < 0:
+        problems.append(f"async.lookahead must be a non-negative int, "
+                        f"got {la!r}")
+    alpha = section.get("staleness_alpha")
+    if not isinstance(alpha, (int, float)) or alpha < 0:
+        problems.append(f"async.staleness_alpha must be a non-negative "
+                        f"number, got {alpha!r}")
+    for field in ("start_avg_loglik", "target_avg_loglik"):
+        if not isinstance(section.get(field), (int, float)):
+            problems.append(f"async.{field} must be a number, "
+                            f"got {section.get(field)!r}")
+    rate = section.get("client_rows_per_sec")
+    if not isinstance(rate, (int, float)) or rate <= 0:
+        problems.append(f"async.client_rows_per_sec must be a positive "
+                        f"number, got {rate!r}")
+    if not isinstance(section.get("clock_model"), str):
+        problems.append(f"async.clock_model must name the federation "
+                        f"clock, got {section.get('clock_model')!r}")
+    for arm in ("sync", "async"):
+        row = section.get(arm)
+        if not isinstance(row, dict):
+            problems.append(f"async.{arm} must be an arm dict")
+            continue
+        r = row.get("rounds")
+        if not isinstance(r, int) or r < 1:
+            problems.append(f"async.{arm}.rounds must be a positive int, "
+                            f"got {r!r}")
+        if not isinstance(row.get("final_avg_loglik"), (int, float)):
+            problems.append(f"async.{arm}.final_avg_loglik must be a "
+                            f"number, got {row.get('final_avg_loglik')!r}")
+        for field in ("seconds", "seconds_to_target", "host_seconds"):
+            v = row.get(field)
+            # seconds_to_target is None when the arm never reached the
+            # target inside its round budget (full mode guards async
+            # reaching it; tiny dry-run arms legitimately may not)
+            if field == "seconds_to_target" and v is None:
+                continue
+            if not isinstance(v, (int, float)) or v < 0:
+                problems.append(f"async.{arm}.{field} must be a "
+                                f"non-negative number, got {v!r}")
+    sp = section.get("speedup_to_target")
+    if sp is not None and not isinstance(sp, (int, float)):
+        problems.append(f"async.speedup_to_target must be a number or "
+                        f"null, got {sp!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -397,6 +500,143 @@ def run_privacy(dry_run: bool = False) -> tuple[dict, list[str]]:
     return section, rows
 
 
+def _federation_clock(sizes, cohort, buffer, lookahead,
+                      n_combines) -> list[float]:
+    """Per-combine completion times on the simulated federation clock.
+
+    Replays :func:`run_async`'s dispatch windowing (top up whole sampler
+    cohorts — the cyclic windows — whenever fewer than
+    ``buffer + lookahead`` updates are in flight) under the latency
+    model: client ``i``'s update arrives ``sizes[i] /
+    CLIENT_ROWS_PER_SEC`` seconds after dispatch, all in-flight clients
+    compute concurrently (they are distinct devices — concurrency across
+    clients is free in a federation; the server is the serialization
+    point and combines instantaneously), and a combine completes when
+    ``buffer`` updates have ARRIVED. At ``buffer = cohort, lookahead =
+    0`` this degenerates to the synchronous barrier: dispatch the
+    cohort, wait for its slowest member, combine — so one clock covers
+    both arms. One deliberate approximation: the driver itself consumes
+    updates in dispatch order (the deterministic surrogate that keeps
+    runs reproducible and the sync configuration bit-identical to
+    ``run_rounds``), while the clock counts arrivals the way a
+    production buffered server would see them; membership of the g-th
+    combine differs between the two views but the clients, the total
+    work, and the steady-state staleness distribution are the same."""
+    c = len(sizes)
+    heap: list[float] = []   # arrival times of in-flight updates
+    clock, b, out = 0.0, 0, []
+    for _ in range(n_combines):
+        while len(heap) < buffer + lookahead:
+            start = (b * cohort) % c
+            for i in (start + np.arange(cohort)) % c:
+                heapq.heappush(heap, clock + sizes[i] /
+                               CLIENT_ROWS_PER_SEC)
+            b += 1
+        for _ in range(buffer):
+            clock = max(clock, heapq.heappop(heap))
+        out.append(clock)
+    return out
+
+
+def run_async_bench(dry_run: bool = False) -> tuple[dict, list[str]]:
+    """Federation-clock-to-target-loglik: the synchronous regime vs
+    buffered staleness-weighted rounds on one Dirichlet population
+    (heterogeneous per-client sizes), both arms from one shared initial
+    model. Quality is real — every combine's model comes from an actual
+    ``run_async`` execution and is scored on the training union — and
+    the time axis is the simulated federation clock of
+    :func:`_federation_clock` (host wall-clock is recorded per arm as
+    ``host_seconds`` but measures the one-machine simulator, which
+    time-shares all C clients, not the federation being modeled)."""
+    p = ASYNC_DRY if dry_run else ASYNC_FULL
+    c, n, cohort = p["clients"], p["n"], p["cohort"]
+    rng = np.random.default_rng(13)
+    mus = rng.normal(0, 5, (K, D)).astype(np.float32)
+    y = rng.integers(0, K, n)
+    x = (mus[y] + rng.normal(0, 0.6, (n, D))).astype(np.float32)
+    split = partition(np.random.default_rng(14), x, y, c, "dirichlet",
+                      ALPHA)
+    sizes = np.asarray(split.sizes, dtype=float)
+    xj = jnp.asarray(x)
+    cfg = FitConfig()
+    key = jax.random.key(17)
+
+    # tol=0 never converges early: both arms run their full round budget
+    # and the trajectory alone decides time-to-target
+    strat = DEMStrategy(k=K, init="separated", tol=0.0)
+    from repro.fed.runtime import make_backend
+    state0 = strat.init_state(key, make_backend(split))
+    sampler = CyclicSampler(c, cohort)
+
+    def arm(buffer, lookahead, rounds):
+        snaps = []
+        t0 = time.time()
+        run_async(strat, split, key=key, state0=state0,
+                  max_rounds=rounds, sampler=sampler, buffer_size=buffer,
+                  lookahead=lookahead, staleness=p["alpha"],
+                  progress=lambda v, s, st: snaps.append(s.gmm))
+        host = time.time() - t0
+        clock = _federation_clock(sizes, cohort, buffer, lookahead,
+                                  len(snaps))
+        lls = [float(score(g, xj, config=cfg)) for g in snaps]
+        return list(zip(clock, lls)), host
+
+    arms = {"sync": (cohort, 0, p["sync_rounds"]),
+            "async": (p["buffer"], p["lookahead"], p["async_rounds"])}
+    traj, hosts = {}, {}
+    for name, (buffer, lookahead, rounds) in arms.items():
+        traj[name], hosts[name] = arm(buffer, lookahead, rounds)
+
+    start_ll = float(score(state0.gmm, xj, config=cfg))
+    sync_final = traj["sync"][-1][1]
+    target = start_ll + ASYNC_TARGET_FRACTION * (sync_final - start_ll)
+
+    def to_target(points):
+        return next((round(t, 6) for t, ll in points if ll >= target),
+                    None)
+
+    section = {"clients": c, "n": n, "alpha": ALPHA, "scheme": "dirichlet",
+               "cohort_size": cohort, "buffer_size": p["buffer"],
+               "lookahead": p["lookahead"],
+               "staleness_alpha": float(p["alpha"]),
+               "client_rows_per_sec": CLIENT_ROWS_PER_SEC,
+               "clock_model": "arrivals: latency = rows/rate, "
+                              "concurrent clients, instant server",
+               "start_avg_loglik": round(start_ll, 5),
+               "target_avg_loglik": round(target, 5)}
+    rows = []
+    for name in arms:
+        points = traj[name]
+        section[name] = {"rounds": len(points),
+                         "final_avg_loglik": round(points[-1][1], 5),
+                         "seconds": round(points[-1][0], 6),
+                         "seconds_to_target": to_target(points),
+                         "host_seconds": round(hosts[name], 3)}
+        rows.append(f"fed_async/{name}/C{c}n{n}m{cohort},"
+                    f"{points[-1][0] * 1e6:.0f},{len(points)}r "
+                    f"to_target={section[name]['seconds_to_target']}s "
+                    f"final={section[name]['final_avg_loglik']:.4f}")
+    t_sync = section["sync"]["seconds_to_target"]
+    t_async = section["async"]["seconds_to_target"]
+    speedup = (round(t_sync / t_async, 3)
+               if t_sync is not None and t_async else None)
+    section["speedup_to_target"] = speedup
+    rows.append(f"fed_async/speedup_to_target/C{c}n{n},{speedup},"
+                f"target={target:.4f}")
+    if not dry_run:
+        if t_async is None:
+            raise RuntimeError(
+                f"async federation regressed: the buffered arm never "
+                f"reached the target loglik {target:.4f} inside "
+                f"{p['async_rounds']} combines")
+        if speedup is None or speedup < ASYNC_MIN_SPEEDUP:
+            raise RuntimeError(
+                f"async federation regressed: buffered rounds are only "
+                f"{speedup}x faster to target than the sync regime "
+                f"(guard: >= {ASYNC_MIN_SPEEDUP}x)")
+    return section, rows
+
+
 def _ledger_row(metric: str, value: float, comm, seconds: float) -> dict:
     return {
         "metric": metric,
@@ -470,6 +710,9 @@ def run(quick: bool = True, dry_run: bool = False) -> list[str]:
         priv, priv_rows = run_privacy(dry_run=dry_run)
         report["privacy"] = priv
         rows.extend(priv_rows)
+        async_section, async_rows = run_async_bench(dry_run=dry_run)
+        report["async"] = async_section
+        rows.extend(async_rows)
     validate_report(report)
     if dry_run:
         rows.append("# dry-run: report schema OK, numbers are placeholders")

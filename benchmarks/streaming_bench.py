@@ -19,10 +19,13 @@ trajectory is tracked across PRs:
                  "estep_scan2_chunked_us", "estep_array_source_us",
                  "estep_mmap_source_us", "estep_synthetic_source_us",
                  "estep_source_prefetch{0,1,2}_us", "source_vs_scan",
-                 "source_vs_full"}, ...}
+                 "source_vs_full", "synthetic_vs_array",
+                 "chosen_prefetch_depth"}, ...}
 
 Full mode additionally enforces the regression guards (``source_vs_full``
-<= 2.0, ``init_from_kmeans_chunked_us`` < 500k) before writing the JSON.
+<= 2.0, ``synthetic_vs_array`` <= 1.5, ``init_from_kmeans_chunked_us``
+< 500k, and the auto-chosen prefetch depth never being the slowest
+measured depth) before writing the JSON.
 
 Quick (CI) mode runs a scaled-down sweep and prints rows only — it never
 touches the tracked JSON, so benchmark smoke runs don't dirty the working
@@ -82,7 +85,8 @@ REPORT_SCHEMA = {
                 "estep_mmap_source_us", "estep_synthetic_source_us",
                 "estep_source_prefetch0_us", "estep_source_prefetch1_us",
                 "estep_source_prefetch2_us", "source_vs_scan",
-                "source_vs_full"),
+                "source_vs_full", "synthetic_vs_array",
+                "chosen_prefetch_depth"),
 }
 STAGES = ("kmeans_lloyd", "init_label_stats", "em_estep", "bic_score")
 
@@ -91,6 +95,11 @@ STAGES = ("kmeans_lloyd", "init_label_stats", "em_estep", "bic_score")
 # run on scaled shapes and noisy CI boxes — guards only apply to the
 # committed full-mode numbers.)
 SOURCE_VS_FULL_MAX = 2.0
+# The seeded synthetic stream must stay near the resident-array source:
+# the per-row fold_in/split/categorical/normal spelling put generation at
+# ~3x the E-step itself (55.7ms vs 19.6ms); the tile-batched generator
+# (sources._synth_block) holds the ratio under this.
+SYNTHETIC_VS_ARRAY_MAX = 1.5
 INIT_US_MAX = 500_000
 
 
@@ -213,6 +222,13 @@ def _source_section(x, gmm, chunk, iters, tmpdir):
         section["estep_array_source_us"] / max(scan_us, 1e-9), 3)
     section["source_vs_full"] = round(
         section["estep_array_source_us"] / max(full_us, 1e-9), 3)
+    section["synthetic_vs_array"] = round(
+        section["estep_synthetic_source_us"]
+        / max(section["estep_array_source_us"], 1e-9), 3)
+    # What default_prefetch_depth() picks on THIS host — recorded next to
+    # the measured depth sweep so the auto heuristic is auditable against
+    # the numbers it claims to optimize (guarded in full mode).
+    section["chosen_prefetch_depth"] = sources.default_prefetch_depth()
     return section, rows
 
 
@@ -268,6 +284,21 @@ def run(quick: bool = True, dry_run: bool = False) -> list[str]:
                 f"source_vs_full {report['sources']['source_vs_full']} > "
                 f"{SOURCE_VS_FULL_MAX} (host block loop regressed vs "
                 f"full-batch)")
+        if report["sources"]["synthetic_vs_array"] > SYNTHETIC_VS_ARRAY_MAX:
+            guard_violations.append(
+                f"synthetic_vs_array "
+                f"{report['sources']['synthetic_vs_array']} > "
+                f"{SYNTHETIC_VS_ARRAY_MAX} (the per-row generation "
+                f"outlier is back)")
+        depth_us = {d: report["sources"][f"estep_source_prefetch{d}_us"]
+                    for d in (0, 1, 2)}
+        chosen = report["sources"]["chosen_prefetch_depth"]
+        if chosen in depth_us and depth_us[chosen] == max(depth_us.values()) \
+                and len(set(depth_us.values())) > 1:
+            guard_violations.append(
+                f"chosen_prefetch_depth {chosen} is the slowest measured "
+                f"depth ({depth_us}) — the auto heuristic picked wrong "
+                f"on this host")
         if report["init_from_kmeans_chunked_us"] >= INIT_US_MAX:
             guard_violations.append(
                 f"init_from_kmeans_chunked_us "

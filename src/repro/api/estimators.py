@@ -407,10 +407,11 @@ class DEM:
     rounds. Returns a :class:`repro.core.dem.DEMResult`.
     """
 
-    def __init__(self, k: int, *, transform=None,
+    def __init__(self, k: int, *, transform=None, async_policy=None,
                  config: Optional[FitConfig] = None, **overrides):
         self.k = _as_int(k, "k")
         self.transform = transform
+        self.async_policy = async_policy
         self.config = _make_config(config, overrides)
         # one copy of the strategy rule: construction-time validation
         # delegates to the core resolver (input-type resolution of "auto"
@@ -421,11 +422,14 @@ class DEM:
     def run(self, clients, *, key: Optional[jax.Array] = None) -> DEMResult:
         """Run distributed EM to convergence (or ``max_iter`` rounds)
         over a :class:`ClientSplit` or list of per-client
-        :class:`DataSource`\\ s -> :class:`repro.core.dem.DEMResult`."""
+        :class:`DataSource`\\ s -> :class:`repro.core.dem.DEMResult`.
+        With an ``async_policy`` (:class:`repro.fed.AsyncPolicy`) the
+        rounds run buffered-asynchronously (``repro.fed.run_async``)."""
         _classify(clients, "DEM.run", ("split", "sources"))
         key = _resolve_key(key, self.config)
         self.result_ = dem_cfg(key, clients, self.config, self.k,
-                               transform=self.transform)
+                               transform=self.transform,
+                               async_policy=self.async_policy)
         return self.result_
 
     @property
@@ -464,7 +468,8 @@ class FedEM:
     def __init__(self, k: int, *, participation: float = 1.0,
                  local_epochs: int = 1, cohort: str = "cyclic",
                  cohort_seed: int = 0, stragglers=None, transform=None,
-                 config: Optional[FitConfig] = None, **overrides):
+                 async_policy=None, config: Optional[FitConfig] = None,
+                 **overrides):
         self.k = _as_int(k, "k")
         if not 0.0 < float(participation) <= 1.0:
             raise ValueError(
@@ -478,6 +483,7 @@ class FedEM:
         self.cohort_seed = _as_int(cohort_seed, "cohort_seed", minimum=0)
         self.stragglers = stragglers
         self.transform = transform
+        self.async_policy = async_policy
         self.config = _make_config(config, overrides)
         # same strategy rule as DEM: validate the init scheme name now,
         # resolve "auto" per input type at run()
@@ -496,7 +502,8 @@ class FedEM:
                                  cohort=self.cohort,
                                  cohort_seed=self.cohort_seed,
                                  stragglers=self.stragglers,
-                                 transform=self.transform)
+                                 transform=self.transform,
+                                 async_policy=self.async_policy)
         return self.result_
 
     @property
@@ -554,7 +561,8 @@ _STRATEGY_RUNNERS = {"fedgen": FedGenGMM, "dem": DEM, "fedem": FedEM,
 
 def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
                   config: Optional[FitConfig] = None, max_rounds=None,
-                  sampler=None, stragglers=None, transform=None, **kwargs):
+                  sampler=None, stragglers=None, transform=None,
+                  async_policy=None, **kwargs):
     """THE strategy seam for FitConfig-driven federated runs (§9).
 
     ``strategy`` is either a name — ``"fedgen"`` | ``"dem"`` | ``"fedem"``
@@ -578,6 +586,14 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
     them, or anything implementing the protocol — applied to every
     client's payload before the server aggregate, on every backend and
     for named and custom strategies alike.
+
+    ``async_policy`` (a :class:`repro.fed.AsyncPolicy`) reroutes the
+    round loop through the buffered asynchronous driver
+    (``repro.fed.run_async``, §12): the server combines every
+    ``buffer_size`` updates under the staleness-weighting rule instead
+    of waiting for the full cohort. It applies to the iterative
+    strategies — ``"dem"`` / ``"fedem"`` by name, or any custom
+    iterative :class:`~repro.fed.FederationStrategy`.
     """
     if isinstance(strategy, str):
         if strategy not in _STRATEGY_RUNNERS:
@@ -598,6 +614,12 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
             kwargs["stragglers"] = stragglers
         if transform is not None:
             kwargs["transform"] = transform
+        if async_policy is not None:
+            if strategy not in ("dem", "fedem"):
+                raise TypeError(
+                    f"async_policy applies to the iterative strategies "
+                    f"('dem', 'fedem'), not {strategy!r}")
+            kwargs["async_policy"] = async_policy
         runner = _STRATEGY_RUNNERS[strategy](config=config, **kwargs)
         return runner.run(clients, key=key)
     if not isinstance(strategy, FederationStrategy):
@@ -614,6 +636,12 @@ def fit_federated(clients, *, strategy, key: Optional[jax.Array] = None,
         max_rounds = 1 if getattr(strategy, "one_shot", False) \
             else cfg.resolve_max_iter("em")
     key = _resolve_key(key, cfg)
+    if async_policy is not None:
+        from repro.fed.async_runtime import run_async
+        return run_async(strategy, clients, key=key, max_rounds=max_rounds,
+                         sampler=sampler, stragglers=stragglers,
+                         transform=transform,
+                         **async_policy.driver_kwargs())
     return run_rounds(strategy, clients, key=key, max_rounds=max_rounds,
                       sampler=sampler, stragglers=stragglers,
                       transform=transform)

@@ -298,13 +298,16 @@ class DEMStrategy:
 
 
 def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
-            transform=None) -> DEMResult:
+            transform=None, async_policy=None) -> DEMResult:
     """Run DEM — the cfg-core behind ``repro.api.DEM``, dispatching on the
     client input type (:class:`ClientSplit` vs list of
     :class:`DataSource`) through the federation runtime. The init strategy
     comes from ``config.init`` ("auto" resolves to fed-kmeans for splits,
     separated centers for sources; "pilot" requires resident data — it
-    uploads raw rows)."""
+    uploads raw rows). ``async_policy`` (a
+    :class:`repro.fed.AsyncPolicy`) reroutes the rounds through the
+    buffered asynchronous driver (``repro.fed.run_async``, DESIGN.md
+    §12); None keeps the synchronous loop."""
     sources = is_source_list(clients)
     if not sources and not isinstance(clients, ClientSplit):
         raise TypeError(
@@ -315,6 +318,11 @@ def dem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
         chunk=config.resolve_chunk(source=sources),
         init=_resolve_init(config.init, sources), host=sources,
         tol=config.resolve_tol("em"), reg_covar=config.reg_covar)
+    if async_policy is not None:
+        from repro.fed.async_runtime import run_async  # sits beside runtime
+        return run_async(strategy, clients, key=key,
+                         max_rounds=config.resolve_max_iter("em"),
+                         transform=transform, **async_policy.driver_kwargs())
     return run_rounds(strategy, clients, key=key,
                       max_rounds=config.resolve_max_iter("em"),
                       transform=transform)

@@ -361,30 +361,53 @@ class ConcatSource(DataSource):
                    else jnp.concatenate(pending, axis=0))
 
 
+# Generation granule of the mixture stream: draws are batched per TILE
+# rows, with tiles aligned to GLOBAL row index (tile t owns rows
+# [t*TILE, (t+1)*TILE)) — never to block position, so the stream stays
+# invariant to ``chunk_size`` and restartable even though a block
+# boundary can land mid-tile. Per tile there is ONE fold_in and two
+# batched draws over all TILE rows: one uniform per row inverted through
+# the mixture CDF (searchsorted) for the component, one (TILE, d) normal
+# for the offset. The per-row spelling (fold_in + split + K-way gumbel
+# categorical + normal per row) made generation ~3x the whole E-step on
+# CPU (the estep_synthetic_source outlier in BENCH_streaming.json, now
+# guarded by ``synthetic_vs_array``).
+_TILE = 1024
+
+
 @partial(jax.jit, static_argnames=("size",))
-def _synth_block(log_weights, means, scale, key, start, size):
-    """Rows [start, start+size) of the mixture stream. Each row's draw is
-    keyed by its global row index (``fold_in``), never by block position, so
-    the stream is invariant to ``chunk_size`` and restartable by design."""
+def _synth_block(cum_weights, means, scale, key, start, size):
+    """Rows [start, start+size) of the mixture stream: generate the
+    covering index-aligned tiles in one batched draw each, slice the
+    block out. Worst-case waste is one tile of rows per block (a block
+    never spans more than ``size // TILE + 2`` tiles)."""
     d = means.shape[1]
-    idx = jnp.arange(size, dtype=jnp.uint32) + start
-    row_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, idx)
-    pair = jax.vmap(jax.random.split)(row_keys)            # (size, 2) keys
-    comp = jax.vmap(
-        lambda kk: jax.random.categorical(kk, log_weights))(pair[:, 0])
-    eps = jax.vmap(
-        lambda kk: jax.random.normal(kk, (d,), means.dtype))(pair[:, 1])
+    ntiles = (size - 1) // _TILE + 2        # covers any tile alignment
+    tile0 = start // _TILE
+    tile_ids = tile0 + jnp.arange(ntiles, dtype=jnp.uint32)
+    tile_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, tile_ids)
+    pair = jax.vmap(jax.random.split)(tile_keys)           # (ntiles, 2)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (_TILE,)))(pair[:, 0])
+    # u < 1 <= cum_weights[-1], so the right-bisection index is in [0, K)
+    # and P(comp = j) is exactly the j-th mixture weight
+    comp = jnp.searchsorted(cum_weights, u.reshape(-1), side="right")
+    eps = jax.vmap(lambda kk: jax.random.normal(
+        kk, (_TILE, d), means.dtype))(pair[:, 1]).reshape(-1, d)
     mu = means[comp]
     if scale.ndim == 2:                                     # diagonal: std
-        return mu + scale[comp] * eps
-    return mu + jnp.einsum("nij,nj->ni", scale[comp], eps)  # full: Cholesky
+        rows = mu + scale[comp] * eps
+    else:
+        rows = mu + jnp.einsum("nij,nj->ni", scale[comp], eps)  # Cholesky
+    return jax.lax.dynamic_slice_in_dim(rows, start - tile0 * _TILE, size)
 
 
 class SyntheticGMMSource(DataSource):
     """Samples from a GMM generated block-by-block from a seeded key — the
     server-side synthetic-replay set of FedGenGMM (|S| = H · Σ K_c) without
-    ever materializing it. Re-iteration regenerates identical rows, so a
-    multi-pass EM fit sees one fixed virtual dataset.
+    materializing it up front. Re-iteration yields identical rows (from
+    the bounded block cache when the source fits the ``cache_rows``
+    budget, regenerated from the same keys otherwise), so a multi-pass
+    EM fit sees one fixed virtual dataset either way.
 
     ``gmm`` is any object with ``weights (K,)``, ``means (K, d)`` and
     ``covs`` (``(K, d)`` diagonal variances or ``(K, d, d)`` full)
@@ -392,24 +415,29 @@ class SyntheticGMMSource(DataSource):
     module import-free below the stack.
     """
 
-    def __init__(self, gmm, num_rows: int, key, cache_blocks: int = 1):
+    def __init__(self, gmm, num_rows: int, key, cache_rows: int = 1 << 17):
         num_rows = int(num_rows)
         if num_rows <= 0:
             raise ValueError(f"num_rows must be positive, got {num_rows}")
         means = jnp.asarray(gmm.means)
         covs = jnp.asarray(gmm.covs)
-        self._log_weights = jnp.log(jnp.asarray(gmm.weights))
+        weights = jnp.asarray(gmm.weights)
+        self._cum_weights = jnp.cumsum(weights / jnp.sum(weights))
         self._means = means
         self._scale = (jnp.sqrt(covs) if covs.ndim == 2
                        else jnp.linalg.cholesky(covs))
         self._key = key
         self._num_rows = num_rows
-        # Tiny sources (the FedGen synthetic-replay sets are a few thousand
-        # rows) pay the full generation dispatch chain on EVERY pass of a
-        # multi-pass fit. Sources that fit inside `cache_blocks` blocks keep
-        # their generated blocks; anything larger streams as before, so the
-        # O(chunk) working-set guarantee is untouched.
-        self._cache_blocks = int(cache_blocks)
+        # Generation costs real device time on EVERY pass of a multi-pass
+        # fit (EM takes one pass per iteration) while the rows never
+        # change. Sources within the `cache_rows` budget keep their
+        # generated blocks after the first pass — a bounded memoization
+        # (default 2^17 rows ≈ a few MB; the FedGen synthetic-replay sets
+        # are a few thousand rows). Anything larger streams every pass,
+        # so the O(chunk) working-set guarantee for big-N sources is
+        # untouched (pinned by the million-row test in
+        # tests/test_source_parity.py). ``cache_rows=0`` disables caching.
+        self._cache_rows = int(cache_rows)
         self._cache: dict[int, list] = {}
 
     @property
@@ -426,7 +454,7 @@ class SyntheticGMMSource(DataSource):
 
     def iter_blocks(self, chunk_size: int) -> Iterator[jax.Array]:
         chunk_size = _check_chunk(chunk_size)
-        if self.num_blocks(chunk_size) <= self._cache_blocks:
+        if self._num_rows <= self._cache_rows:
             blocks = self._cache.get(chunk_size)
             if blocks is None:
                 blocks = [self._gen_block(start, chunk_size)
@@ -439,7 +467,7 @@ class SyntheticGMMSource(DataSource):
 
     def _gen_block(self, start: int, chunk_size: int) -> jax.Array:
         size = min(chunk_size, self._num_rows - start)
-        return _synth_block(self._log_weights, self._means, self._scale,
+        return _synth_block(self._cum_weights, self._means, self._scale,
                             self._key, jnp.uint32(start), size)
 
 

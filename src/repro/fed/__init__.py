@@ -8,14 +8,21 @@ FedEM and FedKMeans (``repro.fed.strategies``). The ledger
 (``repro.fed.ledger``) is the one copy of the communication accounting,
 and the uplink-transform seam (``repro.fed.transforms``, §11) is the one
 place DP noise, quantization, and secure-aggregation masking enter the
-client->server payload.
+client->server payload. The asynchronous regime (``repro.fed.
+async_runtime``, §12) adds :func:`~repro.fed.async_runtime.run_async`
+(buffered staleness-weighted rounds) and
+:class:`~repro.fed.async_runtime.ClientExecutor` (the concurrent
+source-client worker pool) on the same strategy/backend substrate.
 
 ``strategies`` is loaded lazily (PEP 562): it imports ``repro.core.dem``
 for the shared init machinery, and ``repro.core`` imports this package's
 runtime — eager loading here would close that cycle.
 """
+from repro.fed.async_runtime import (AsyncPolicy, ClientExecutor,
+                                     run_async)
 from repro.fed.cohort import (ArrivalStragglers, CyclicSampler,
-                              UniformSampler, make_sampler)
+                              PolynomialStaleness, UniformSampler,
+                              make_sampler)
 from repro.fed.ledger import (CommStats, RoundPayload, dtype_itemsize,
                               gmm_payload_floats, label_payload_floats,
                               payload_floats, stats_payload_floats)
@@ -36,7 +43,9 @@ _LAZY = {
 }
 
 __all__ = [
-    "ArrivalStragglers", "CyclicSampler", "UniformSampler", "make_sampler",
+    "AsyncPolicy", "ClientExecutor", "run_async",
+    "ArrivalStragglers", "CyclicSampler", "PolynomialStaleness",
+    "UniformSampler", "make_sampler",
     "CommStats", "RoundPayload", "dtype_itemsize", "gmm_payload_floats",
     "label_payload_floats", "payload_floats", "stats_payload_floats",
     "FederationStrategy", "SplitClients", "SourceClients", "ShardedClients",

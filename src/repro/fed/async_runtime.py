@@ -1,0 +1,461 @@
+"""Asynchronous federation: buffered staleness-weighted rounds and the
+concurrent source-client executor (DESIGN.md §12).
+
+The synchronous driver (``repro.fed.runtime.run_rounds``) makes every
+round wait for its whole cohort: the slowest client gates the server
+combine, and the host-loop source backend runs cohort members strictly
+serially. This module opens the staggered regime along two independent
+axes:
+
+- :class:`ClientExecutor` — a pool of long-lived worker threads that the
+  ``SourceClients`` backend fans per-client steps out to. Each worker
+  pulls a client assignment off the pool's queue, dispatches that
+  client's (jitted) E-step, and JAX's async dispatch lets one client's
+  host-side block prep (padding, mmap reads, prefetch) overlap another's
+  device compute. Sync semantics are untouched: the backend reduces the
+  per-client payloads in deterministic cohort order regardless of
+  completion order, so the f32 sum is bit-identical to the serial loop.
+
+- :func:`run_async` — buffered asynchronous rounds. Clients are
+  dispatched against the server model current *at dispatch time* and the
+  server combines as soon as ``buffer_size`` updates arrive; with
+  ``lookahead > 0`` more clients are kept in flight than one combine
+  consumes, so updates arrive for a model ``s`` versions newer than the
+  one they trained against. Each update is weighted by the staleness
+  rule (:class:`repro.fed.cohort.PolynomialStaleness` — the straggler
+  reweight rule generalized from {0, 1} to (0, 1]), the M-step
+  renormalizes by the surviving weighted ``wsum``, and the realized
+  per-update staleness lands in the ledger
+  (:class:`~repro.fed.ledger.RoundPayload`/``CommStats.staleness``).
+
+The determinism contract: arrival order is *dispatch order*, not
+wall-clock completion order — the buffer consumes the oldest in-flight
+updates first. That makes every run of a seeded configuration
+reproducible, and it makes the degenerate configuration
+``buffer_size = cohort_size, lookahead = 0`` reproduce the synchronous
+driver exactly: every combine then consumes precisely one cohort, all
+dispatched at the current version (zero staleness, weight exactly 1.0),
+through the same backend reduce — pinned ``assert_array_equal``-identical
+to :func:`~repro.fed.runtime.run_rounds` on the split and source
+backends in tests/test_fed_async.py.
+
+Like the rest of the runtime this module sits below ``repro.core``
+(imports: jax + stdlib + ``repro.fed`` siblings only), so strategy
+modules can import it without cycles.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.cohort import PolynomialStaleness
+from repro.fed.runtime import (_CohortView, _cohort_and_weights,
+                               _keep_going, _validate_transform,
+                               make_backend)
+
+
+class ClientExecutor:
+    """A pool of long-lived client workers for the source backend.
+
+    Workers pull client assignments off the pool's shared queue (the
+    stdlib ``ThreadPoolExecutor`` is exactly that shape — threads live
+    for the pool's lifetime, work items queue) and run the per-client
+    step; jitted E-steps release the GIL into XLA, so one client's
+    host-side block preparation overlaps another's device compute
+    instead of serializing in the driver's host loop. The pool is meant
+    to be long-lived: build it once and pass it to any number of
+    ``run_rounds``/``run_async`` calls (it is reused across rounds, not
+    rebuilt per round).
+
+    Determinism: :meth:`map_ordered` returns results in *submission*
+    order whatever the completion order, and per-client steps are
+    identical jitted computations on identical inputs — so a reduction
+    over the returned list is bit-identical to the serial host loop.
+    """
+
+    def __init__(self, max_workers: int):
+        if int(max_workers) < 1:
+            raise ValueError(
+                f"max_workers must be >= 1, got {max_workers}")
+        self.max_workers = int(max_workers)
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.max_workers,
+            thread_name_prefix="fed-client")
+
+    def map_ordered(self, fn: Callable[[Any], Any],
+                    items: Sequence[Any]) -> list:
+        """Run ``fn`` over ``items`` on the worker pool and return the
+        results in item order (NOT completion order) — the property the
+        backend's deterministic cohort-order reduction relies on."""
+        futures = [self._pool.submit(fn, item) for item in items]
+        return [f.result() for f in futures]
+
+    def shutdown(self) -> None:
+        """Stop the workers (waits for in-flight client steps)."""
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        """Context-manager entry: the executor itself."""
+        return self
+
+    def __exit__(self, *exc):
+        """Context-manager exit: shut the worker pool down."""
+        self.shutdown()
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncPolicy:
+    """The async-execution knob of DEM/FedEM (and ``fit_federated``).
+
+    One frozen bundle of :func:`run_async`'s knobs so the estimator
+    facades stay one-argument: ``buffer_size`` updates per server
+    combine (None = the cohort size — the sync-equivalent default),
+    ``lookahead`` extra in-flight dispatches beyond the buffer (0 = no
+    staleness ever arises; ``k·buffer_size`` sustains staleness ~k),
+    ``staleness_alpha`` the polynomial damping exponent of
+    :class:`~repro.fed.cohort.PolynomialStaleness`, and ``max_workers``
+    (> 0 builds a :class:`ClientExecutor` for source-client backends —
+    resident backends ignore it)."""
+
+    buffer_size: Optional[int] = None
+    lookahead: int = 0
+    staleness_alpha: float = 0.5
+    max_workers: int = 0
+
+    def __post_init__(self):
+        if self.buffer_size is not None and int(self.buffer_size) < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {self.buffer_size}")
+        if int(self.lookahead) < 0:
+            raise ValueError(
+                f"lookahead must be >= 0, got {self.lookahead}")
+        if not float(self.staleness_alpha) >= 0.0:
+            raise ValueError(
+                f"staleness_alpha must be >= 0, got {self.staleness_alpha}")
+        if int(self.max_workers) < 0:
+            raise ValueError(
+                f"max_workers must be >= 0, got {self.max_workers}")
+
+    def driver_kwargs(self) -> dict:
+        """The :func:`run_async` keyword arguments this policy encodes
+        (what the cfg-cores splat into the driver call)."""
+        return dict(buffer_size=self.buffer_size,
+                    lookahead=int(self.lookahead),
+                    staleness=PolynomialStaleness(float(self.staleness_alpha)),
+                    max_workers=int(self.max_workers))
+
+
+# ----------------------------------------------------------------------
+# Jitted round pieces (resident/sharded backends)
+# ----------------------------------------------------------------------
+# The host path calls the same compositions eagerly (a DataSource cannot
+# live inside jit), mirroring run_rounds' own host/jit duality.
+
+@partial(jax.jit, static_argnames=("strategy", "transform"))
+def _round_jit(strategy, backend, state, cohort, weights, transform,
+               tparams, rkey):
+    """One fresh round as ONE jitted program — reduce, transform
+    ``finish``, server combine — structurally ``runtime._round``. Used
+    whenever a combine consumes a single zero-staleness group (always,
+    in the sync-equivalent configuration), so the compiled computation
+    matches the synchronous loop body."""
+    total = backend.reduce_clients(strategy.local_step, state, cohort,
+                                   weights, transform=transform,
+                                   tparams=tparams, tkey=rkey)
+    if transform is not None:
+        total = transform.finish(total)
+    return strategy.server_combine(state, total)
+
+
+@partial(jax.jit, static_argnames=("strategy", "transform"))
+def _group_total_jit(strategy, backend, state, cohort, weights, transform,
+                     tparams, rkey):
+    """One stale group's weighted payload total (reduced against the
+    model version the group was dispatched at — NOT the current one)."""
+    return backend.reduce_clients(strategy.local_step, state, cohort,
+                                  weights, transform=transform,
+                                  tparams=tparams, tkey=rkey)
+
+
+@partial(jax.jit, static_argnames=("strategy", "transform"))
+def _combine_jit(strategy, state, total, transform):
+    """Server combine of an already-summed multi-group buffer against
+    the CURRENT model state."""
+    if transform is not None:
+        total = transform.finish(total)
+    return strategy.server_combine(state, total)
+
+
+def _resolve_staleness(staleness):
+    """Accept a rule object (``.weight(s)``), a bare alpha, or None
+    (default polynomial damping)."""
+    if staleness is None:
+        return PolynomialStaleness()
+    if isinstance(staleness, (int, float)):
+        return PolynomialStaleness(float(staleness))
+    if not callable(getattr(staleness, "weight", None)):
+        raise TypeError(
+            f"staleness must be an alpha or a rule with .weight(s), got "
+            f"{type(staleness).__name__}")
+    return staleness
+
+
+# One in-flight client update: who, against which model version, at what
+# straggler weight, from which dispatch round (the transform/straggler
+# round key), and whether its dispatch batch carried no weights at all
+# (so the zero-staleness reduce can pass weights=None, exactly like the
+# synchronous driver).
+_Update = collections.namedtuple(
+    "_Update", ("client", "version", "weight", "rnd", "unweighted"))
+
+
+def _pad_cohort(members: np.ndarray, weights: Optional[np.ndarray],
+                size: int, population: int):
+    """Pad a group's member indices to the static reduce width with
+    distinct unused population slots at weight 0 (distinctness keeps the
+    scatter-``set`` well-defined), so every group reduce shares ONE
+    compiled shape. A full-width group passes through untouched."""
+    pad_n = size - len(members)
+    if pad_n == 0:
+        return members, weights
+    free = np.setdiff1d(np.arange(population, dtype=members.dtype), members)
+    padded = np.concatenate([members, free[:pad_n]])
+    w = np.ones(len(members), np.float32) if weights is None else weights
+    return padded, np.concatenate([w, np.zeros(pad_n, np.float32)])
+
+
+def run_async(strategy, clients, *, key: Optional[jax.Array] = None,
+              state0=None, max_rounds: int = 1, mesh=None,
+              axis: str = "data", sampler=None, stragglers=None,
+              transform=None, buffer_size: Optional[int] = None,
+              lookahead: int = 0, staleness=None, executor=None,
+              max_workers: int = 0, progress=None):
+    """Buffered asynchronous rounds — the staggered counterpart of
+    :func:`~repro.fed.runtime.run_rounds`.
+
+    Client assignments stream from the sampler's cohorts (round-robin
+    over the population without one); up to ``buffer_size + lookahead``
+    clients are in flight at once, each pinned to the server model
+    version current at its dispatch. A server *combine* consumes the
+    ``buffer_size`` oldest in-flight updates (dispatch order — the
+    determinism contract), weights each by
+    ``staleness_rule.weight(current_version - dispatch_version)`` on top
+    of its straggler weight, sums group-wise against the stale model
+    each group trained on, and M-steps against the current state. With
+    ``buffer_size = cohort_size`` and ``lookahead = 0`` every combine is
+    one whole fresh cohort — bit-identical to ``run_rounds``.
+
+    ``max_rounds`` bounds server combines (each consumes ``buffer_size``
+    updates, so at equal round budgets the async run does
+    ``buffer/cohort`` of the synchronous client work per combine — the
+    wall-clock-to-target win BENCH_comm.json's ``async`` section
+    measures). Convergence predicates, ``post_rounds`` epilogues, the
+    sampler/straggler/transform seams and the ledger all behave as in
+    ``run_rounds``; in-flight updates left when the loop stops are
+    abandoned (never consumed, never accounted).
+
+    ``staleness`` is a rule object with ``.weight(s)``, a bare alpha, or
+    None (default :class:`~repro.fed.cohort.PolynomialStaleness`).
+    ``executor`` / ``max_workers`` install a :class:`ClientExecutor` on
+    a source-client backend. ``progress`` (optional) is called after
+    every combine as ``progress(version, state, staleness_tuple)`` —
+    instrumentation only (the comm bench snapshots trajectories with
+    it).
+
+    Additive-only transforms (secure-agg pairwise masks) need the whole
+    cohort in one aggregate, so they are accepted only in the
+    sync-equivalent configuration.
+    """
+    backend = make_backend(clients, mesh, axis)
+    if getattr(strategy, "one_shot", False):
+        raise ValueError(
+            "run_async needs a round structure; one-shot strategies "
+            "have nothing to buffer — use run_rounds")
+    rule = _resolve_staleness(staleness)
+    population = backend.num_clients
+    batch_m = population if sampler is None else int(sampler.cohort_size)
+    buffer = batch_m if buffer_size is None else int(buffer_size)
+    if not 1 <= buffer <= population:
+        raise ValueError(
+            f"buffer_size must be in [1, population={population}], got "
+            f"{buffer}")
+    lookahead = int(lookahead)
+    if lookahead < 0:
+        raise ValueError(f"lookahead must be >= 0, got {lookahead}")
+    sync_equivalent = buffer == batch_m and lookahead == 0
+
+    skey = dkey = tkey = tparams = None
+    if transform is not None:
+        _validate_transform(transform)
+        if getattr(transform, "additive_only", False) and not sync_equivalent:
+            raise ValueError(
+                f"{type(transform).__name__} masks only cancel when one "
+                f"aggregate sums the whole cohort; buffered async rounds "
+                f"(buffer_size != cohort_size or lookahead > 0) split "
+                f"cohorts across combines")
+        tkey = jax.random.key(int(getattr(transform, "seed", 0)))
+        tparams = transform.traced()
+    if sampler is not None:
+        if sampler.num_clients != population:
+            raise ValueError(
+                f"sampler is sized for {sampler.num_clients} clients but "
+                f"the backend has {population}")
+        skey = jax.random.key(int(getattr(sampler, "seed", 0)))
+    if stragglers is not None:
+        dkey = jax.random.key(int(getattr(stragglers, "seed", 0)))
+
+    own_executor = None
+    if backend.host:
+        if executor is None and int(max_workers) > 0:
+            executor = own_executor = ClientExecutor(int(max_workers))
+        if executor is not None:
+            backend.executor = executor
+
+    if state0 is None:
+        state0 = strategy.init_state(key, backend)
+
+    try:
+        return _drive(strategy, backend, state0, int(max_rounds), sampler,
+                      stragglers, transform, tparams, skey, dkey, tkey,
+                      buffer, lookahead, rule, sync_equivalent, progress)
+    finally:
+        if own_executor is not None:
+            own_executor.shutdown()
+
+
+def _drive(strategy, backend, state0, max_rounds, sampler, stragglers,
+           transform, tparams, skey, dkey, tkey, buffer, lookahead, rule,
+           sync_equivalent, progress):
+    """The event loop behind :func:`run_async`: top up the in-flight
+    window, consume the oldest ``buffer`` updates, combine, repeat."""
+    population = backend.num_clients
+    fifo: collections.deque = collections.deque()
+    states = {0: state0}          # retained models for in-flight versions
+    state = state0
+    version = 0                   # server combines so far
+    dispatch_rnd = 0              # assignment batches drawn so far
+    staleness_counter: collections.Counter = collections.Counter()
+
+    def top_up():
+        """Fill the in-flight window with fresh dispatches against the
+        CURRENT model version."""
+        nonlocal dispatch_rnd
+        while len(fifo) < buffer + lookahead:
+            cohort, weights = _cohort_and_weights(
+                sampler, stragglers, backend, skey, dkey, dispatch_rnd)
+            members = np.arange(population, dtype=np.int32) \
+                if cohort is None else np.asarray(cohort)
+            w = None if weights is None else np.asarray(weights)
+            for pos, i in enumerate(members):
+                fifo.append(_Update(
+                    int(i), version,
+                    1.0 if w is None else float(w[pos]),
+                    dispatch_rnd, w is None))
+            dispatch_rnd += 1
+
+    def group_consumed(consumed):
+        """Split one buffer of consumed updates into contiguous
+        (version, dispatch round) groups — each group shares the model
+        it trained against and its round's transform/straggler key."""
+        groups = []
+        for u in consumed:
+            if groups and (groups[-1][0], groups[-1][1]) == (u.version,
+                                                             u.rnd):
+                groups[-1][2].append(u)
+            else:
+                groups.append([u.version, u.rnd, [u]])
+        return groups
+
+    def reduce_group(v, rnd, updates, stale_w, whole_buffer):
+        """One group's weighted payload total against its dispatch-time
+        model ``states[v]``."""
+        members = np.asarray([u.client for u in updates], np.int32)
+        unweighted = all(u.unweighted for u in updates) and stale_w == 1.0
+        weights = None if unweighted else np.asarray(
+            [u.weight * stale_w for u in updates], np.float32)
+        rkey = None if transform is None else jax.random.fold_in(tkey, rnd)
+        # full-population batches mirror run_rounds' cohort=None spelling
+        full_pop = sampler is None and len(members) == population
+        if backend.host:
+            cohort = None if full_pop else members
+            w = None if weights is None else jnp.asarray(weights)
+            return backend.reduce_clients(
+                strategy.local_step, states[v], cohort, w,
+                transform=transform, tparams=tparams, tkey=rkey), None
+        if full_pop:
+            cohort, w = None, None if weights is None \
+                else jnp.asarray(weights)
+        else:
+            padded, pw = _pad_cohort(members, weights, buffer, population)
+            cohort = jnp.asarray(padded)
+            w = None if pw is None else jnp.asarray(pw)
+        fresh_whole = v == version and whole_buffer
+        if fresh_whole:
+            # single fresh group: reduce + combine as ONE jitted program,
+            # the exact shape of the synchronous loop body (bit-parity)
+            return None, _round_jit(strategy, backend, states[v], cohort,
+                                    w, transform, tparams, rkey)
+        return _group_total_jit(strategy, backend, states[v], cohort, w,
+                                transform, tparams, rkey), None
+
+    while True:
+        top_up()
+        consumed = [fifo.popleft() for _ in range(buffer)]
+        total = None
+        combined = None
+        for v, rnd, updates in group_consumed(consumed):
+            stale = version - v
+            stale_w = rule.weight(stale)
+            for u in updates:
+                if u.weight != 0.0:
+                    staleness_counter[stale] += 1
+            g_total, g_state = reduce_group(v, rnd, updates, stale_w,
+                                            len(updates) == len(consumed))
+            if g_state is not None:
+                combined = g_state
+                break
+            total = g_total if total is None else jax.tree.map(
+                jnp.add, total, g_total)
+        if combined is not None:
+            state = combined
+        elif backend.host:
+            if transform is not None:
+                total = transform.finish(total)
+            state = strategy.server_combine(state, total)
+        else:
+            state = _combine_jit(strategy, state, total, transform)
+        version += 1
+        states[version] = state
+        live = min((u.version for u in fifo), default=version)
+        for v in [v for v in states if v < min(live, version)]:
+            del states[v]
+        if progress is not None:
+            progress(version, state,
+                     tuple(version - 1 - u.version for u in consumed
+                           if u.weight != 0.0))
+        if version >= max_rounds or not bool(_keep_going(strategy, state)):
+            break
+
+    converged = bool(strategy.converged(state))
+    post = getattr(strategy, "post_rounds", None)
+    if post is not None:
+        state = post(state, backend)
+
+    view = _CohortView(backend, buffer)
+    payload = strategy.round_payload(view, state)
+    if transform is not None:
+        payload = payload._replace(
+            uplink_itemsize=transform.wire_itemsize(payload.itemsize),
+            epsilon_per_round=float(transform.epsilon_per_round()))
+    payload = payload._replace(
+        staleness=tuple(sorted(staleness_counter.items())))
+    comm = payload.totals(version)
+    return strategy.finalize(state, jnp.asarray(version), converged, comm)

@@ -118,6 +118,42 @@ def make_sampler(kind: str, num_clients: int, cohort_size: int,
 
 
 @dataclasses.dataclass(frozen=True)
+class PolynomialStaleness:
+    """The staleness-weighting rule of the asynchronous driver
+    (``repro.fed.run_async``, DESIGN.md §12): an update consumed ``s``
+    server versions after its dispatch contributes with weight
+    ``(1 + s)^-alpha`` (Xie et al.'s polynomial damping). This is the
+    straggler reweight rule generalized from {0, 1} to (0, 1]: the
+    weight multiplies the client's additive payload — including its
+    ``wsum`` — so the server M-step renormalizes by the *surviving*
+    (staleness-discounted) weight mass and stale cohorts shrink toward
+    the fresh ones instead of dragging the model backward.
+
+    ``alpha = 0`` weighs every update exactly 1.0 (pure buffering, no
+    damping); fresh updates (``s = 0``) weigh exactly 1.0 at any alpha —
+    both identities are exact in f32, which is what keeps the async
+    driver's zero-staleness configuration bit-identical to the
+    synchronous loop."""
+
+    alpha: float = 0.5
+
+    def __post_init__(self):
+        if not float(self.alpha) >= 0.0:
+            raise ValueError(
+                f"staleness alpha must be >= 0, got {self.alpha}")
+
+    def weight(self, staleness: int) -> float:
+        """Weight of an update consumed ``staleness`` versions late
+        (exactly 1.0 at staleness 0 or alpha 0)."""
+        s = int(staleness)
+        if s < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        if s == 0 or self.alpha == 0.0:
+            return 1.0
+        return float((1.0 + s) ** -float(self.alpha))
+
+
+@dataclasses.dataclass(frozen=True)
 class ArrivalStragglers:
     """Simulated round deadline: each cohort member draws an arrival
     time ``uniform(fold_in(fold_in(key, rnd), client_id))``; the slowest

@@ -50,6 +50,13 @@ class CommStats(NamedTuple):
     accounting stays honest under asymmetric wires.  ``epsilon_spent``
     is the cumulative privacy budget the run consumed (transform's
     per-round spend x realized rounds; 0.0 for non-DP runs).
+
+    ``staleness`` is the per-update staleness histogram of an
+    asynchronous run (``repro.fed.run_async``, DESIGN.md §12):
+    ``((s, count), ...)`` sorted by ``s``, where an update's staleness is
+    the number of server combines that happened between its dispatch and
+    its consumption. Synchronous runs leave it empty (every update is
+    consumed at the model version it trained against).
     """
     rounds: int
     uplink_floats: int       # client -> server payload (total floats)
@@ -58,6 +65,7 @@ class CommStats(NamedTuple):
     uplink_itemsize: Optional[int] = None    # override for the uplink
     downlink_itemsize: Optional[int] = None  # override for the downlink
     epsilon_spent: float = 0.0  # cumulative DP budget consumed
+    staleness: tuple = ()    # ((staleness, count), ...) update histogram
 
     @property
     def uplink_bytes(self) -> int:
@@ -80,6 +88,15 @@ class CommStats(NamedTuple):
     def total_mb(self) -> float:
         """Total wire volume in MiB — the unit the comm benchmark plots."""
         return self.payload_bytes / 2**20
+
+    @property
+    def mean_staleness(self) -> float:
+        """Average per-update staleness of an async run (0.0 when the
+        histogram is empty, i.e. every consumed update was fresh)."""
+        n = sum(count for _, count in self.staleness)
+        if n == 0:
+            return 0.0
+        return sum(s * count for s, count in self.staleness) / n
 
 
 class RoundPayload(NamedTuple):
@@ -104,6 +121,9 @@ class RoundPayload(NamedTuple):
     #                                          dtype (None = itemsize)
     downlink_itemsize: Optional[int] = None  # broadcast dtype override
     epsilon_per_round: float = 0.0  # DP budget one round spends
+    staleness: tuple = ()  # async runs: ((staleness, count), ...) over
+    #                        every consumed update — the driver fills it
+    #                        post hoc (it is realized, not declared)
 
     def totals(self, rounds: int) -> CommStats:
         return CommStats(
@@ -115,7 +135,8 @@ class RoundPayload(NamedTuple):
             itemsize=self.itemsize,
             uplink_itemsize=self.uplink_itemsize,
             downlink_itemsize=self.downlink_itemsize,
-            epsilon_spent=rounds * self.epsilon_per_round)
+            epsilon_spent=rounds * self.epsilon_per_round,
+            staleness=self.staleness)
 
 
 # ----------------------------------------------------------------------

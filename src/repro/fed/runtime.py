@@ -221,13 +221,25 @@ class SplitClients:
 class SourceClients:
     """Out-of-core clients: one :class:`DataSource` stream each. Rounds
     run host-side (a source cannot live inside jit); per-client block
-    loops stay jitted inside the engine."""
+    loops stay jitted inside the engine.
+
+    ``executor`` (a :class:`repro.fed.async_runtime.ClientExecutor`, or
+    anything with ``map_ordered(fn, items) -> list``) overlaps the
+    per-client steps: each cohort member's E-step is dispatched from a
+    long-lived worker thread, so one client's host-side block prep
+    (padding, mmap reads, prefetch) overlaps another's device compute
+    instead of serializing in this loop. Determinism is untouched — the
+    per-client payloads are identical jitted computations on identical
+    inputs, and the reduction below consumes them in cohort order
+    regardless of completion order, so the f32 sum is bit-identical to
+    the serial loop (pinned in tests/test_fed_async.py)."""
 
     kind = "sources"
     host = True
 
-    def __init__(self, sources: Sequence[DataSource]):
+    def __init__(self, sources: Sequence[DataSource], executor=None):
         self.sources = list(sources)
+        self.executor = executor
 
     @property
     def num_clients(self) -> int:
@@ -260,12 +272,18 @@ class SourceClients:
         step = _wrap_step(local_step, state, transform, tparams, tkey,
                           members_arr)
         w = None if weights is None else np.asarray(weights)
+        # survivors only: a zero-weight (dropped) client's E-step never
+        # runs, on the serial and the concurrent path alike
+        jobs = [(pos, i) for pos, i in enumerate(members)
+                if w is None or w[pos] != 0.0]
+        if self.executor is not None and len(jobs) > 1:
+            raw = self.executor.map_ordered(
+                lambda i: step(self.sources[i], None, i),
+                [i for _, i in jobs])
+        else:
+            raw = [step(self.sources[i], None, i) for _, i in jobs]
         per = []
-        for pos, i in enumerate(members):
-            if w is not None and w[pos] == 0.0:
-                continue  # missed the deadline: the (possibly
-                #           out-of-core) E-step never runs
-            p = step(self.sources[i], None, i)
+        for (pos, i), p in zip(jobs, raw):
             if w is not None and w[pos] != 1.0:
                 p = jax.tree.map(
                     lambda s: s * jnp.asarray(w[pos], s.dtype), p)
@@ -526,7 +544,7 @@ def _validate_transform(transform):
 def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
                state0=None, max_rounds: int = 1, mesh=None,
                axis: str = "data", sampler=None, stragglers=None,
-               transform=None):
+               transform=None, executor=None):
     """Run a :class:`FederationStrategy` to convergence — THE round loop.
 
     Owns everything that used to be copy-pasted per algorithm: the client
@@ -556,8 +574,17 @@ def run_rounds(strategy, clients, *, key: Optional[jax.Array] = None,
     transform is a static argument; its seed and swept knobs (epsilon,
     delta) enter as traced leaves, so re-seeding or re-budgeting never
     recompiles. The ledger picks up the transform's uplink dtype and
-    cumulative ``epsilon_spent``."""
+    cumulative ``epsilon_spent``.
+
+    ``executor`` (a :class:`repro.fed.async_runtime.ClientExecutor`)
+    applies to the source-client backend only: the host round loop fans
+    each cohort's per-client steps out to the executor's long-lived
+    workers and reduces in deterministic cohort order — same bits,
+    overlapped wall-clock. Resident/sharded backends (already one fused
+    program) ignore it."""
     backend = make_backend(clients, mesh, axis)
+    if executor is not None and backend.host:
+        backend.executor = executor
     one_shot = getattr(strategy, "one_shot", False)
     skey = dkey = tkey = tparams = None
     if transform is not None:

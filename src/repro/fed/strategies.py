@@ -179,7 +179,8 @@ class FedEMStrategy(DEMStrategy):
 def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
               participation: float = 1.0, local_epochs: int = 1,
               cohort: str = "cyclic", cohort_seed: int = 0,
-              stragglers=None, transform=None) -> FedEMResult:
+              stragglers=None, transform=None,
+              async_policy=None) -> FedEMResult:
     """Run FedEM — the cfg-core behind ``repro.api.FedEM``, dispatching on
     the client input type through the federation runtime. Init strategies
     and their resolution are DEM's (``config.init``).
@@ -190,7 +191,12 @@ def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
     ``cohort_seed``); at full participation no sampler is installed, so
     the run reduces to DEM's full-population path bit for bit.
     ``stragglers`` (e.g. :class:`repro.fed.cohort.ArrivalStragglers`)
-    drops each round's slowest arrivals."""
+    drops each round's slowest arrivals. ``async_policy`` (a
+    :class:`repro.fed.AsyncPolicy`) reroutes the rounds through the
+    buffered asynchronous driver (``repro.fed.run_async``, DESIGN.md
+    §12) — the server combines every ``buffer_size`` updates under the
+    staleness-weighting rule instead of waiting for the whole cohort;
+    None keeps the synchronous loop."""
     sources = is_source_list(clients)
     if not sources and not isinstance(clients, ClientSplit):
         raise TypeError(
@@ -214,6 +220,13 @@ def fedem_cfg(key: jax.Array, clients, config: FitConfig, k: int,
     elif cohort not in ("cyclic", "uniform"):
         raise ValueError(
             f"cohort sampler must be 'cyclic' or 'uniform', got {cohort!r}")
+    if async_policy is not None:
+        from repro.fed.async_runtime import run_async
+        return run_async(strategy, clients, key=key,
+                         max_rounds=config.resolve_max_iter("em"),
+                         sampler=sampler, stragglers=stragglers,
+                         transform=transform,
+                         **async_policy.driver_kwargs())
     return run_rounds(strategy, clients, key=key,
                       max_rounds=config.resolve_max_iter("em"),
                       sampler=sampler, stragglers=stragglers,

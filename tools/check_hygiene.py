@@ -50,9 +50,11 @@ FORBIDDEN_PREFIX = "repro.api"
 DOC_PACKAGES = ("src/repro/api", "src/repro/serve")
 # Single modules below the facade that are nonetheless user-facing doc
 # surface (their classes are constructed directly by users): the uplink
-# transforms ride `fit_federated(transform=...)` and every public name
-# there must be documented too.
-DOC_MODULES = ("src/repro/fed/transforms.py",)
+# transforms ride `fit_federated(transform=...)` and the async runtime's
+# AsyncPolicy/ClientExecutor/run_async ride `fit_federated(async_policy=
+# ...)` / estimator facades — every public name there must be documented.
+DOC_MODULES = ("src/repro/fed/transforms.py",
+               "src/repro/fed/async_runtime.py")
 SRC_ROOT = "src"
 
 
